@@ -1,0 +1,71 @@
+"""Paper Fig. 1: cosine-similarity structure of client updates.
+
+Runs a few federated rounds, collects one round's client deltas, applies
+Robust-PCA, and reports mean pairwise cosine similarity of the raw updates
+(high), the low-rank components (higher), and the sparse components (low).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, local_spec, make_task
+from repro.core import AggregatorConfig
+from repro.core.metrics import client_update_cosine, mean_offdiag, pairwise_cosine
+from repro.core.rpca import robust_pca_fixed_iters
+from repro.core.stacking import leaf_matrices
+from repro.fed import FedRunConfig, init_round_state, make_round_fn
+
+
+def main(quick: bool = False):
+    task = make_task(alpha=0.3, seed=51)
+    cfg = FedRunConfig(
+        aggregator=AggregatorConfig(method="fedavg"),
+        local=local_spec(task),
+        rounds=1,
+        seed=0,
+    )
+    round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+    state = init_round_state(synth_init(task), task.client_x.shape[0], 0)
+    # Warm up a few rounds so updates carry learned structure, then inspect.
+    for _ in range(3 if quick else 6):
+        state, _ = round_fn(state)
+
+    # Recompute one round's deltas by hand to inspect them.
+    from repro.fed.client import make_local_fn
+    from repro.utils.pytree import tree_zeros_like
+
+    local_fn = make_local_fn(cfg.local)
+    zeros = tree_zeros_like(state.lora_global)
+    n = task.client_x.shape[0]
+    rngs = jax.random.split(jax.random.PRNGKey(7), n)
+    res = jax.vmap(local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0))(
+        task.base, state.lora_global, task.client_x, task.client_y, rngs,
+        zeros, state.scaffold_ci, state.prev_local,
+    )
+    raw_sim = mean_offdiag(client_update_cosine(res.delta))
+
+    mats = leaf_matrices(res.delta["A"])[0]  # (vec, clients) for the A factor
+    rp = robust_pca_fixed_iters(mats, n_iter=80)
+    low_sim = mean_offdiag(pairwise_cosine(rp.low_rank))
+    sparse_sim = mean_offdiag(pairwise_cosine(rp.sparse))
+    sparsity = float(jnp.mean((jnp.abs(rp.sparse) < 1e-6).astype(jnp.float32)))
+
+    emit("fig1/raw_cosine", 0.0, f"mean_offdiag={float(raw_sim):.4f}")
+    emit("fig1/lowrank_cosine", 0.0, f"mean_offdiag={float(low_sim):.4f}")
+    emit("fig1/sparse_cosine", 0.0, f"mean_offdiag={float(sparse_sim):.4f}")
+    emit("fig1/sparse_zero_frac", 0.0, f"frac={sparsity:.4f}")
+    ok = float(low_sim) > float(raw_sim) > float(sparse_sim)
+    emit("fig1/ordering_holds", 0.0, f"low>raw>sparse={ok}")
+    return dict(raw=float(raw_sim), low=float(low_sim), sparse=float(sparse_sim))
+
+
+def synth_init(task):
+    from repro.fed import synth
+
+    return synth.init_lora(task)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: oracle (jnp, XLA-compiled) timings per call.
+
+CPU container: interpret-mode Pallas timing is not meaningful for TPU perf,
+so the CSV reports the XLA-compiled oracle path (what the mesh executes
+off-TPU) and, for reference, one interpret-mode check per kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.kernels import ops, ref
+
+
+def bench(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def main(quick: bool = QUICK):
+    rng = np.random.default_rng(0)
+    reps = 2 if quick else 5
+
+    x = jnp.asarray(rng.normal(size=(4096, 512)), jnp.float32)
+    t = bench(jax.jit(lambda a: ref.soft_threshold_ref(a, 0.1)), x, reps=reps)
+    emit("kernels/soft_threshold_ref_4096x512", t * 1e6, "oracle_xla")
+
+    xm = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(1024, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16, 1024)), jnp.float32)
+    t = bench(jax.jit(lambda *z: ref.lora_matmul_ref(*z, 2.0)), xm, w, a, b, reps=reps)
+    emit("kernels/lora_matmul_ref_1024", t * 1e6, "oracle_xla")
+    t_unfused = bench(
+        jax.jit(lambda x_, w_, a_, b_: x_ @ w_ + 2.0 * ((x_ @ a_) @ b_)), xm, w, a, b,
+        reps=reps,
+    )
+    emit("kernels/lora_matmul_unfused_1024", t_unfused * 1e6, "baseline")
+
+    q = jnp.asarray(rng.normal(size=(8, 512 if quick else 1024, 64)), jnp.float32)
+    t = bench(
+        jax.jit(lambda q_, k_, v_: ref.local_attention_ref(q_, k_, v_, window=128)),
+        q, q, q, reps=reps,
+    )
+    emit("kernels/local_attention_ref", t * 1e6, f"S={q.shape[1]},window=128")
+
+    s = 256 if quick else 512
+    xs = jnp.asarray(rng.normal(size=(8, s, 64)), jnp.float32)
+    da = -jnp.abs(jnp.asarray(rng.normal(size=(8, s)), jnp.float32)) * 0.1
+    bm = jnp.asarray(rng.normal(size=(8, s, 32)), jnp.float32)
+    t = bench(
+        jax.jit(lambda *z: ref.ssd_scan_ref(*z, 64)), xs, da, bm, bm, reps=reps
+    )
+    emit("kernels/ssd_scan_ref", t * 1e6, f"S={s},seq_scan_oracle")
+
+    # interpret-mode correctness spot checks ride along (not timing-relevant)
+    small = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    d = float(jnp.max(jnp.abs(ops.soft_threshold(small, 0.2)
+                              - ref.soft_threshold_ref(small, 0.2))))
+    emit("kernels/interpret_check_soft_threshold", 0.0, f"maxdiff={d:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts (markdown to stdout)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(tagged: bool):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if bool(r.get("tag")) == tagged:
+            recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table():
+    recs = load(tagged=False)
+    print("| arch | shape | mesh | status | lower s | compile s | args+temp GiB/chip | collectives (static HLO) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:40]}) | | | | |")
+            continue
+        mem = r.get("memory", {})
+        per = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+        cc = r.get("collectives", {}).get("counts", {})
+        cstr = " ".join(f"{k}:{v}" for k, v in sorted(cc.items())) or "-"
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {r.get('lower_s','')} | {r.get('compile_s','')} | {per:.1f} | {cstr} |"
+        )
+
+
+def roofline_table(mesh="16x16"):
+    recs = [r for r in load(tagged=False) if r.get("status") == "ok" and r["mesh"] == mesh]
+    print("| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = r["roofline"]
+        lever = {
+            "compute": "causal-block attention schedule / larger per-chip batch",
+            "memory": "bf16 logits + chunked loss; decode: batch per chip / quantized KV",
+            "collective": "sharding policy (dp/ep/moe2d) — see §Perf",
+        }[t["dominant"]]
+        print(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{t['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_flops_ratio']:.3f} | {lever} |"
+        )
+
+
+def perf_table():
+    tagged = [r for r in load(tagged=True) if r.get("status") == "ok"]
+    base = {
+        (r["arch"], r["shape"], r["mesh"]): r
+        for r in load(tagged=False)
+        if r.get("status") == "ok"
+    }
+    print("| arch/shape | variant | compute s | memory s | collective s | args+temp GiB | dominant |")
+    print("|---|---|---|---|---|---|---|")
+    seen = set()
+    for r in sorted(tagged, key=lambda r: (r["arch"], r["tag"])):
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in base and key not in seen:
+            seen.add(key)
+            b = base[key]
+            tb = b["roofline"]
+            memb = b.get("memory", {})
+            perb = (memb.get("argument_size_in_bytes", 0) + memb.get("temp_size_in_bytes", 0)) / 2**30
+            print(
+                f"| {key[0]}/{key[1]} | baseline tp | {tb['compute_s']:.3e} | {tb['memory_s']:.3e} "
+                f"| {tb['collective_s']:.3e} | {perb:.1f} | {tb['dominant']} |"
+            )
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        per = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+        mb = f" mb{r.get('microbatch')}" if r.get("microbatch", 1) > 1 else ""
+        print(
+            f"| {r['arch']}/{r['shape']} | {r.get('policy','?')}{mb} | {t['compute_s']:.3e} "
+            f"| {t['memory_s']:.3e} | {t['collective_s']:.3e} | {per:.1f} | {t['dominant']} |"
+        )
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("\n### Dry-run matrix\n")
+        dryrun_table()
+    if which in ("roofline", "all"):
+        print("\n### Roofline (single-pod 16x16)\n")
+        roofline_table()
+    if which in ("perf", "all"):
+        print("\n### Perf variants\n")
+        perf_table()

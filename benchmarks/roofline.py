@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads ``artifacts/dryrun/*.json`` (produced by ``python -m
+repro.launch.dryrun``), prints the per-(arch x shape x mesh) three-term
+roofline and flags the three hillclimb candidates: worst roofline fraction,
+most collective-bound, most representative of the paper's technique.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(quick: bool = False):
+    recs = [r for r in load_records() if not r.get("tag")]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "error"]
+    emit("roofline/artifacts", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};failed={len(failed)}")
+    for r in failed:
+        emit(f"roofline/FAILED/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+             r.get("error", "?"))
+
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        frac = t[f"{t['dominant']}_s"] / max(total, 1e-30)
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            t[f"{t['dominant']}_s"] * 1e6,
+            f"dom={t['dominant']};comp={t['compute_s']:.3e};mem={t['memory_s']:.3e};"
+            f"coll={t['collective_s']:.3e};useful={r.get('useful_flops_ratio', 0):.3f}",
+        )
+
+    # Hillclimb candidate selection (single-pod records only).
+    single = [r for r in ok if r["mesh"] == "16x16"]
+    if single:
+        def balance(r):
+            t = r["roofline"]
+            dom = t[f"{t['dominant']}_s"]
+            return dom / max(t["compute_s"], 1e-30)
+
+        worst = max(single, key=balance)
+        coll = max(single, key=lambda r: r["roofline"]["collective_s"])
+        train = [r for r in single if r["shape"] == "train_4k"]
+        rep = max(train, key=lambda r: r.get("n_params", 0)) if train else worst
+        emit("roofline/candidate_worst_fraction", 0.0,
+             f"{worst['arch']}/{worst['shape']} ({balance(worst):.1f}x over compute)")
+        emit("roofline/candidate_most_collective", 0.0,
+             f"{coll['arch']}/{coll['shape']} ({coll['roofline']['collective_s']:.3e}s)")
+        emit("roofline/candidate_representative", 0.0,
+             f"{rep['arch']}/{rep['shape']} (paper technique on largest train case)")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark orchestrator: one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Env knobs:
+  BENCH_QUICK=1    shrink every benchmark (CI smoke)
+  BENCH_ROUNDS=n   federated rounds per run (default 25)
+  BENCH_ONLY=csv   comma-separated subset (e.g. "table1,fig4")
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (  # noqa: E402
+    fig1_cosine,
+    fig2_task_arithmetic,
+    fig4_adaptive_beta,
+    fig5_composability,
+    fig6_overhead,
+    kernels_bench,
+    roofline,
+    table1_main,
+    table2_heterogeneity,
+    table3_clients,
+    table4_rank,
+)
+
+SUITES = {
+    "table1": table1_main.main,
+    "table2": table2_heterogeneity.main,
+    "table3": table3_clients.main,
+    "table4": table4_rank.main,
+    "fig1": fig1_cosine.main,
+    "fig2": fig2_task_arithmetic.main,
+    "fig4": fig4_adaptive_beta.main,
+    "fig5": fig5_composability.main,
+    "fig6": fig6_overhead.main,
+    "kernels": kernels_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    only = os.environ.get("BENCH_ONLY")
+    names = [n.strip() for n in only.split(",")] if only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+            print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},ok", flush=True)
+        except Exception as e:  # keep the suite running; report at the end
+            failures.append((name, e))
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/_suite,{(time.time() - t0) * 1e6:.0f},FAILED:{e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark suite(s) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end driver: federated LoRA fine-tuning of a ~100M-param LM.
+
+    PYTHONPATH=src python examples/fed_finetune_lm.py --rounds 60
+
+A 97M-parameter dense transformer (12 layers, d_model 768, vocab 16k) is
+fine-tuned with LoRA (r=8, Q/V) across 4 federated clients holding
+heterogeneous Markov-LM shards; the server aggregates with FedRPCA.  Runs
+the same ``fed_train_step`` the multi-pod dry-run lowers — just executed on
+CPU.  A few hundred local steps total (rounds x local_steps).
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import save_checkpoint  # noqa: E402
+from repro.config import LoRAConfig, ModelConfig  # noqa: E402
+from repro.core import AggregatorConfig  # noqa: E402
+from repro.data import client_lm_datasets  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.models import init_lora_params, init_params, loss_fn  # noqa: E402
+from repro.utils.pytree import tree_size  # noqa: E402
+
+CFG_100M = ModelConfig(
+    name="fedlm-97m",
+    arch_type="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=16_384,
+    dtype="float32",
+    lora=LoRAConfig(rank=8, alpha=16.0, targets=("q", "v")),
+    source="example: GPT-2-small-like federated target",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--per-client-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--aggregator", default="fedrpca")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    key = jax.random.PRNGKey(0)
+    base = init_params(key, cfg)
+    lora = init_lora_params(jax.random.fold_in(key, 1), cfg)
+    print(f"base params: {tree_size(base)/1e6:.1f}M, lora params: {tree_size(lora)/1e3:.1f}K")
+
+    client_tokens, test = client_lm_datasets(
+        args.clients, vocab_size=cfg.vocab_size, n_seqs=64, seq_len=args.seq,
+        heterogeneity=0.6, seed=0,
+    )
+    step = jax.jit(
+        steps_lib.make_fed_train_step(
+            cfg,
+            AggregatorConfig(method=args.aggregator, rpca_iters=30),
+            local_lr=3e-3, local_steps=args.local_steps,
+            local_optimizer="adam", remat=False,
+        )
+    )
+    test_batch = {
+        "tokens": jnp.asarray(test.tokens[:8, :-1]),
+        "labels": jnp.asarray(test.tokens[:8, 1:]),
+    }
+    eval_loss = jax.jit(lambda l: loss_fn(base, l, test_batch, cfg, remat=False)[0])
+
+    rng = np.random.default_rng(0)
+    print(f"initial eval loss: {float(eval_loss(lora)):.4f}")
+    for r in range(args.rounds):
+        idx = rng.integers(0, client_tokens.shape[1],
+                           size=(args.clients, args.per_client_batch))
+        seqs = np.take_along_axis(client_tokens, idx[:, :, None], axis=1)
+        batch = {
+            "tokens": jnp.asarray(seqs[:, :, :-1]),
+            "labels": jnp.asarray(seqs[:, :, 1:]),
+        }
+        t0 = time.time()
+        lora, metrics = step(base, lora, batch)
+        if r % 5 == 0 or r == args.rounds - 1:
+            print(
+                f"round {r:03d}  local_loss={float(metrics['loss']):.4f}  "
+                f"eval_loss={float(eval_loss(lora)):.4f}  ({time.time()-t0:.1f}s/round)",
+                flush=True,
+            )
+        if args.ckpt_dir and (r + 1) % 20 == 0:
+            save_checkpoint(lora, args.ckpt_dir, r + 1, metadata={"arch": cfg.name})
+    total_steps = args.rounds * args.local_steps
+    print(f"done: {args.rounds} rounds x {args.local_steps} local steps = "
+          f"{total_steps} LoRA steps per client")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: FedRPCA vs FedAvg on a planted-signal federated task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 16-client non-IID task (Dirichlet alpha=0.3), runs 20 federated
+LoRA rounds under both aggregators, and prints the accuracy trajectories —
+the 30-second version of the paper's Table 1.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import AggregatorConfig  # noqa: E402
+from repro.fed import FedRunConfig, LocalSpec, run_simulation, synth  # noqa: E402
+from repro.optim import make_optimizer  # noqa: E402
+
+
+def main():
+    task = synth.make_synth_task(n_clients=16, alpha=0.3, seed=0)
+    eval_fn = lambda lora: synth.accuracy(
+        task.base, lora, task.test_x, task.test_y, task.lora_scale
+    )
+    local = LocalSpec(
+        loss_fn=lambda base, lora, b: synth.loss_fn(base, lora, b, task.lora_scale),
+        optimizer=make_optimizer("adam", 1e-2),
+        local_steps=8,
+        batch_size=32,
+        lr=1e-2,
+    )
+    print(f"zero-shot accuracy: {float(eval_fn(synth.init_lora(task))):.3f}")
+    for method in ("fedavg", "fedrpca"):
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method=method, rpca_iters=40),
+            local=local, rounds=20, seed=0,
+        )
+        _, hist = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y, cfg, eval_fn
+        )
+        print(f"{method:8s} final={hist[-1]:.3f}  trajectory={np.round(hist[::4], 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Serving example: batched multi-tenant LoRA inference (S-LoRA-style).
+
+    PYTHONPATH=src python examples/serve_lora.py
+
+Loads a reduced RecurrentGemma (hybrid RG-LRU + local attention — the
+long-context-friendly family), registers 3 LoRA adapter sets, prefills a
+mixed batch of prompts, and greedily decodes with per-request adapters by
+gathering each request's (A, B) before the LoRA contraction.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs as cfglib  # noqa: E402
+from repro.models import (  # noqa: E402
+    decode_step,
+    extend_caches,
+    forward,
+    init_lora_params,
+    init_params,
+)
+
+BATCH, PROMPT, GEN, N_ADAPTERS = 4, 12, 8, 3
+
+
+def gather_per_request(stacked_lora, request_adapter: jnp.ndarray):
+    """(n_adapters, ...) adapter stack -> per-request (B, ...) selection."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.take(leaf, request_adapter, axis=0), stacked_lora
+    )
+
+
+def main():
+    cfg = cfglib.get_config("recurrentgemma-2b").reduced()
+    key = jax.random.PRNGKey(0)
+    base = init_params(key, cfg)
+    adapters = [init_lora_params(jax.random.fold_in(key, i), cfg) for i in range(N_ADAPTERS)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *adapters)
+
+    # Each request picks a tenant adapter; average per batch for the shared
+    # forward (tiny adapters => per-request exactness via vmap is also shown).
+    request_adapter = jnp.asarray([0, 1, 2, 0])
+    per_request = gather_per_request(stacked, request_adapter)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(BATCH, PROMPT)), jnp.int32)
+
+    # vmap over requests: each request uses ITS adapter exactly.
+    def one_request(tokens, lora):
+        logits, caches, _ = forward(
+            base, lora, {"tokens": tokens[None]}, cfg, mode="prefill", remat=False
+        )
+        return logits[0], caches
+
+    t0 = time.time()
+    logits, caches = jax.vmap(one_request)(prompts, per_request)
+    caches = extend_caches(caches, GEN, cfg)
+    print(f"prefill {BATCH} prompts x {PROMPT} tokens: {time.time()-t0:.2f}s")
+
+    def one_decode(tok, lora, cache, idx):
+        lg, cc = decode_step(base, lora, tok[None], cache, idx, cfg)
+        return lg[0], cc
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    outs = [tok]
+    t0 = time.time()
+    for i in range(GEN - 1):
+        logits, caches = jax.vmap(one_decode, in_axes=(0, 0, 0, None))(
+            tok, per_request, caches, jnp.asarray(PROMPT + i)
+        )
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+    gen = np.asarray(jnp.concatenate(outs, axis=1))
+    print(f"decoded {GEN} tokens/request in {time.time()-t0:.2f}s")
+    for i in range(BATCH):
+        print(f"request {i} (adapter {int(request_adapter[i])}): {gen[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""FedRPCA: federated LoRA aggregation via Robust PCA — multi-pod JAX framework.
+
+Public API surface:
+  repro.core     — RPCA + aggregation strategies (the paper's contribution)
+  repro.models   — the architecture zoo + LoRA + sharding rules
+  repro.fed      — federated runtime (clients, server, partitioner, tasks)
+  repro.configs  — assigned architectures and input shapes
+  repro.launch   — mesh / dry-run / train / serve entry points
+  repro.kernels  — Pallas TPU kernels with jnp oracles
+"""
+from repro.config import FedConfig, LoRAConfig, MeshConfig, ModelConfig, ShapeConfig
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "FedConfig",
+    "LoRAConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "__version__",
+]

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_pytree, restore_checkpoint, save_checkpoint, save_pytree
+
+__all__ = ["load_pytree", "restore_checkpoint", "save_checkpoint", "save_pytree"]

@@ -1,0 +1,115 @@
+"""Pytree checkpointing via msgpack (no orbax/flax offline).
+
+Arrays are stored as (dtype, shape, raw bytes) triples keyed by their
+flattened tree path; metadata rides alongside.  Retention: ``save_checkpoint``
+keeps the newest ``keep`` step directories.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_KEY = "__array__"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {
+            _KEY: True,
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {
+        _KEY: True,
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], dtype=np.uint16).reshape(shape)
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_pytree(tree: PyTree, path: str, metadata: Optional[dict] = None) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "leaves": [_pack_leaf(x) for x in leaves],
+        "treedef": str(treedef),
+        "metadata": metadata or {},
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: PyTree) -> Tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (treedef source of truth)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    stored = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(stored) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves; template has {len(leaves)}"
+        )
+    for tmpl, got in zip(leaves, stored):
+        if tuple(tmpl.shape) != tuple(got.shape):
+            raise ValueError(f"shape mismatch: {tmpl.shape} vs {got.shape}")
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(x) for x in stored]
+    )
+    return restored, payload.get("metadata", {})
+
+
+def save_checkpoint(
+    tree: PyTree, ckpt_dir: str, step: int, *, keep: int = 3, metadata: Optional[dict] = None
+) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "state.msgpack")
+    meta = dict(metadata or {})
+    meta["step"] = step
+    save_pytree(tree, path, meta)
+    _prune(ckpt_dir, keep)
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, like: PyTree, step: Optional[int] = None):
+    steps = _list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    chosen = step if step is not None else steps[-1]
+    return load_pytree(os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack"), like)
+
+
+def _list_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = _list_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

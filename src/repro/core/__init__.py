@@ -1,0 +1,45 @@
+"""FedRPCA core: Robust-PCA decomposition + server-side aggregation strategies."""
+from repro.core.rpca import (
+    RPCAResult,
+    robust_pca,
+    robust_pca_fixed_iters,
+    batched_robust_pca,
+    soft_threshold,
+    svt_gram,
+    svt_svd,
+)
+from repro.core.aggregators import (
+    AggregatorConfig,
+    METHODS,
+    aggregate,
+    dare,
+    fedavg,
+    fedexp,
+    fedrpca,
+    task_arithmetic,
+    ties_merging,
+    sparse_energy_ratio,
+)
+from repro.core import metrics, stacking
+
+__all__ = [
+    "RPCAResult",
+    "robust_pca",
+    "robust_pca_fixed_iters",
+    "batched_robust_pca",
+    "soft_threshold",
+    "svt_gram",
+    "svt_svd",
+    "AggregatorConfig",
+    "METHODS",
+    "aggregate",
+    "dare",
+    "fedavg",
+    "fedexp",
+    "fedrpca",
+    "task_arithmetic",
+    "ties_merging",
+    "sparse_energy_ratio",
+    "metrics",
+    "stacking",
+]

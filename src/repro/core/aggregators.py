@@ -1,0 +1,280 @@
+"""Server-side aggregation strategies for federated LoRA.
+
+Implements, over stacked client delta pytrees (leading axis = clients):
+
+  * ``fedavg``          — Eq. 4: plain mean.
+  * ``task_arithmetic`` — Eq. 5: scaled mean, beta > 1 (also the FedExP /
+                           server-learning-rate view).
+  * ``ties``            — TIES-Merging (trim -> elect sign -> disjoint mean).
+  * ``fedrpca``         — Algorithm 1: per-module Robust-PCA split M = L + S,
+                           update = mean(L) + beta * mean(S), with the
+                           adaptive beta^(t) = 1 / E^(t) heuristic of App. B.3.
+
+All aggregators are pure jittable functions: stacked deltas in, single update
+pytree out (same structure as one client's delta).  They are used both by the
+CPU simulation loop and inside the mesh ``fed_train_step`` (where the stacked
+leaves arrive via an all-gather over the client mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rpca as rpca_lib
+from repro.core import stacking
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorConfig:
+    """Configuration shared by all aggregation strategies."""
+
+    method: str = "fedrpca"  # fedavg | task_arithmetic | ties | fedrpca
+    beta: float = 2.0  # scaling factor (task_arithmetic, fixed-beta fedrpca)
+    adaptive_beta: bool = True  # fedrpca: beta = 1 / E^(t)
+    beta_min: float = 1.0  # clip range for the adaptive beta
+    beta_max: float = 100.0
+    rpca_iters: int = 50  # fixed ADMM iteration count (shape-static cost)
+    rpca_tol: float = 1e-7
+    ties_keep: float = 0.1  # TIES trim: fraction of entries kept per client
+    ties_scale: float = 1.0  # TIES final scaling (lambda in the paper)
+    dare_drop: float = 0.9  # DARE drop rate
+    joint_ab: bool = False  # RPCA jointly over concatenated vec(A),vec(B)
+    # (App. B.2: "we also apply this jointly across the (A,B) pairs")
+
+    def replace(self, **kw) -> "AggregatorConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Simple strategies
+# ---------------------------------------------------------------------------
+
+
+def fedavg(stacked: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def task_arithmetic(stacked: PyTree, beta: float = 2.0) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: beta * jnp.mean(x, axis=0), stacked)
+
+
+def fedexp(stacked: PyTree, eps: float = 1e-3) -> PyTree:
+    """FedExP (Jhunjhunwala et al., ICLR 2023 — ref [36] in the paper):
+    server extrapolation with a data-derived global step size
+
+        eta_g = max(1, sum_i ||d_i||^2 / (2 M (||mean(d)||^2 + eps)))
+
+    A diversity-adaptive Task-Arithmetic: orthogonal client updates get a
+    large eta, aligned ones fall back to plain averaging."""
+    import jax.numpy as jnp_
+
+    mean = fedavg(stacked)
+    sq = lambda t: sum(
+        jnp_.sum(jnp_.square(x.astype(jnp_.float32)))
+        for x in jax.tree_util.tree_leaves(t)
+    )
+    n_clients = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    sum_norms = sum(
+        jnp_.sum(jnp_.square(x.astype(jnp_.float32)))
+        for x in jax.tree_util.tree_leaves(stacked)
+    )
+    eta = jnp_.maximum(1.0, sum_norms / (2.0 * n_clients * (sq(mean) + eps)))
+    return jax.tree_util.tree_map(lambda x: (eta * x).astype(x.dtype), mean)
+
+
+def dare(stacked: PyTree, drop_rate: float = 0.9, key=None) -> PyTree:
+    """DARE (Yu et al. 2024 — ref [92]): randomly drop ``drop_rate`` of each
+    client delta's entries and rescale the rest by 1/(1-p) before averaging
+    (an unbiased sparsifier that reduces merging interference)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        keep = jax.random.bernoulli(k, 1.0 - drop_rate, leaf.shape)
+        rescaled = jnp.where(keep, leaf, 0) / (1.0 - drop_rate)
+        out.append(jnp.mean(rescaled, axis=0).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# TIES-Merging
+# ---------------------------------------------------------------------------
+
+
+def _ties_leaf(leaf: jnp.ndarray, keep: float, scale: float) -> jnp.ndarray:
+    """TIES on one stacked leaf: (clients, ...) -> (...)."""
+    n_clients = leaf.shape[0]
+    flat = jnp.reshape(leaf, (n_clients, -1)).astype(jnp.float32)
+    d = flat.shape[1]
+    k = max(int(keep * d), 1)
+    # 1) Trim: keep top-k |value| entries per client, zero the rest.
+    absx = jnp.abs(flat)
+    kth = -jnp.sort(-absx, axis=1)[:, k - 1 : k]  # per-client k-th largest
+    trimmed = jnp.where(absx >= kth, flat, 0.0)
+    # 2) Elect sign by total mass.
+    elected = jnp.sign(jnp.sum(trimmed, axis=0))
+    elected = jnp.where(elected == 0.0, 1.0, elected)
+    # 3) Disjoint mean: average only entries agreeing with the elected sign.
+    agree = (jnp.sign(trimmed) == elected[None, :]) & (trimmed != 0.0)
+    num = jnp.sum(jnp.where(agree, trimmed, 0.0), axis=0)
+    den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=0), 1.0)
+    merged = scale * num / den
+    return jnp.reshape(merged, leaf.shape[1:]).astype(leaf.dtype)
+
+
+def ties_merging(stacked: PyTree, keep: float = 0.1, scale: float = 1.0) -> PyTree:
+    fn = functools.partial(_ties_leaf, keep=keep, scale=scale)
+    return jax.tree_util.tree_map(fn, stacked)
+
+
+# ---------------------------------------------------------------------------
+# FedRPCA (the paper)
+# ---------------------------------------------------------------------------
+
+
+def sparse_energy_ratio(m_mat: jnp.ndarray, s_mat: jnp.ndarray) -> jnp.ndarray:
+    """E^(t) = ||S . 1|| / ||M . 1||  (App. B.3), for one (vec, clients) matrix."""
+    s_sum = jnp.linalg.norm(jnp.sum(s_mat, axis=-1))
+    m_sum = jnp.linalg.norm(jnp.sum(m_mat, axis=-1))
+    return s_sum / jnp.maximum(m_sum, 1e-12)
+
+
+def _fedrpca_matrix(
+    m_mat: jnp.ndarray,
+    cfg: AggregatorConfig,
+    shrink_fn: Callable,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """FedRPCA on one (vec_dim, n_clients) matrix.
+
+    Returns (update_vector, beta, energy_ratio)."""
+    n_clients = m_mat.shape[-1]
+    res = rpca_lib.robust_pca_fixed_iters(
+        m_mat, n_iter=cfg.rpca_iters, shrink_fn=shrink_fn
+    )
+    low_rank_mean = jnp.mean(res.low_rank, axis=-1)
+    sparse_mean = jnp.mean(res.sparse, axis=-1)
+    energy = sparse_energy_ratio(m_mat, res.sparse)
+    if cfg.adaptive_beta:
+        beta = jnp.clip(1.0 / jnp.maximum(energy, 1e-12), cfg.beta_min, cfg.beta_max)
+    else:
+        beta = jnp.asarray(cfg.beta, jnp.float32)
+    update = low_rank_mean + beta * sparse_mean
+    del n_clients
+    return update, beta, energy
+
+
+def _fedrpca_leaf(
+    leaf: jnp.ndarray, cfg: AggregatorConfig, shrink_fn: Callable
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """FedRPCA on one stacked leaf; vmaps RPCA across the module (layer) axis.
+
+    Parallel-across-layers per the paper's App. B.2 efficiency note.
+    """
+    mats = stacking.leaf_matrices(leaf)  # (modules, vec, clients)
+    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn)
+    updates, betas, energies = jax.vmap(fn)(mats.astype(jnp.float32))
+    update_leaf = stacking.matrices_to_leaf_update(updates, leaf)
+    return update_leaf, betas, energies
+
+
+def _fedrpca_joint_ab(node: dict, cfg: AggregatorConfig, shrink_fn: Callable):
+    """App. B.2 joint mode: RPCA over concatenated [vec(dA); vec(dB)] columns
+    of one adapter pair, then split the update back."""
+    mats_a = stacking.leaf_matrices(node["A"]).astype(jnp.float32)  # (mod, va, M)
+    mats_b = stacking.leaf_matrices(node["B"]).astype(jnp.float32)  # (mod, vb, M)
+    va = mats_a.shape[1]
+    joint = jnp.concatenate([mats_a, mats_b], axis=1)
+    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn)
+    updates, betas, energies = jax.vmap(fn)(joint)
+    upd_a = stacking.matrices_to_leaf_update(updates[:, :va], node["A"])
+    upd_b = stacking.matrices_to_leaf_update(updates[:, va:], node["B"])
+    return {"A": upd_a, "B": upd_b}, betas, energies
+
+
+def _is_ab_node(node) -> bool:
+    return isinstance(node, dict) and set(node.keys()) == {"A", "B"}
+
+
+def fedrpca(
+    stacked: PyTree,
+    cfg: Optional[AggregatorConfig] = None,
+    shrink_fn: Callable = rpca_lib.soft_threshold,
+    with_diagnostics: bool = False,
+):
+    """Algorithm 1 server update over a stacked client-delta pytree.
+
+    ``cfg.joint_ab`` applies Robust-PCA jointly over each module's
+    concatenated (dA, dB) columns — the paper's App. B.2 variant."""
+    cfg = cfg or AggregatorConfig()
+    diag = {}
+    if cfg.joint_ab:
+        idx = [0]
+
+        def walk(node):
+            if _is_ab_node(node):
+                upd, betas, energies = _fedrpca_joint_ab(node, cfg, shrink_fn)
+                diag[f"pair{idx[0]}/beta_mean"] = jnp.mean(betas)
+                diag[f"pair{idx[0]}/energy_mean"] = jnp.mean(energies)
+                idx[0] += 1
+                return upd
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, (tuple, list)):
+                return type(node)(walk(v) for v in node)
+            # bare leaf outside an (A, B) pair: fall back to per-leaf RPCA
+            upd, _, _ = _fedrpca_leaf(node, cfg, shrink_fn)
+            return upd
+
+        out = walk(stacked)
+        if with_diagnostics:
+            return out, diag
+        return out
+
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    updates = []
+    for i, leaf in enumerate(leaves):
+        upd, betas, energies = _fedrpca_leaf(leaf, cfg, shrink_fn)
+        updates.append(upd)
+        diag[f"leaf{i}/beta_mean"] = jnp.mean(betas)
+        diag[f"leaf{i}/energy_mean"] = jnp.mean(energies)
+    out = jax.tree_util.tree_unflatten(treedef, updates)
+    if with_diagnostics:
+        return out, diag
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+_SIMPLE = {
+    "fedavg": lambda stacked, cfg: fedavg(stacked),
+    "task_arithmetic": lambda stacked, cfg: task_arithmetic(stacked, cfg.beta),
+    "ties": lambda stacked, cfg: ties_merging(stacked, cfg.ties_keep, cfg.ties_scale),
+    "fedexp": lambda stacked, cfg: fedexp(stacked),
+    "dare": lambda stacked, cfg: dare(stacked, cfg.dare_drop),
+}
+
+
+def aggregate(
+    stacked: PyTree,
+    cfg: Optional[AggregatorConfig] = None,
+    shrink_fn: Callable = rpca_lib.soft_threshold,
+) -> PyTree:
+    """Aggregate stacked client deltas per ``cfg.method``."""
+    cfg = cfg or AggregatorConfig()
+    if cfg.method in _SIMPLE:
+        return _SIMPLE[cfg.method](stacked, cfg)
+    if cfg.method == "fedrpca":
+        return fedrpca(stacked, cfg, shrink_fn)
+    raise ValueError(f"unknown aggregation method: {cfg.method!r}")
+
+
+METHODS = tuple(sorted([*_SIMPLE.keys(), "fedrpca"]))

@@ -1,0 +1,50 @@
+"""Diagnostics used by the paper's figures (cosine-similarity structure, E^t)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_flatten_to_vector
+
+PyTree = Any
+
+
+def pairwise_cosine(matrix: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise cosine similarity between the columns of ``matrix`` (vec, n)."""
+    norms = jnp.linalg.norm(matrix, axis=0, keepdims=True)
+    normalized = matrix / jnp.maximum(norms, 1e-12)
+    return normalized.T @ normalized
+
+
+def client_update_cosine(stacked: PyTree) -> jnp.ndarray:
+    """Fig. 1a: cosine-similarity matrix of whole-update vectors per client."""
+    n_clients = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    vecs = jnp.stack(
+        [
+            tree_flatten_to_vector(jax.tree_util.tree_map(lambda x: x[i], stacked))
+            for i in range(n_clients)
+        ],
+        axis=1,
+    )
+    return pairwise_cosine(vecs)
+
+
+def mean_offdiag(sim: jnp.ndarray) -> jnp.ndarray:
+    """Average pairwise (off-diagonal) similarity — the Fig. 1 summary number."""
+    n = sim.shape[0]
+    mask = 1.0 - jnp.eye(n)
+    return jnp.sum(sim * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sparsity_fraction(x: jnp.ndarray, rel_tol: float = 1e-6) -> jnp.ndarray:
+    """Fraction of entries that are (relatively) zero — S should be sparse."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    return jnp.mean((jnp.abs(x) <= rel_tol * scale).astype(jnp.float32))
+
+
+def effective_rank(x: jnp.ndarray, rel_tol: float = 1e-3) -> jnp.ndarray:
+    """Number of singular values above rel_tol * sigma_max — L should be low-rank."""
+    s = jnp.linalg.svd(x, compute_uv=False)
+    return jnp.sum((s > rel_tol * jnp.maximum(s[0], 1e-12)).astype(jnp.int32))

@@ -1,0 +1,193 @@
+"""Robust Principal Component Analysis via ADMM / Principal Component Pursuit.
+
+Faithful JAX port of the paper's Algorithm 2 (Appendix B.1), which is itself
+the inexact-ALM PCP of Candès et al. (2011):
+
+    minimize  ||L||_* + lam * ||S||_1   s.t.  M = L + S
+
+with the paper's default hyper-parameters
+
+    mu  = numel(M) / (4 * ||M||_1)         (step size)
+    lam = 1 / sqrt(max(d1, d2))            (sparsity weight)
+    rho = 1 / mu
+
+and iterates
+
+    L <- SVT_rho(M - S + rho * Y)
+    S <- shrink_{rho*lam}(M - L + rho * Y)
+    Y <- Y + mu * (M - L - S)
+    stop when ||M - L - S||_F <= tol * ||M||_F.
+
+TPU adaptation (see DESIGN.md §3): the singular-value thresholding (SVT) step
+is computed with the *Gram trick* instead of a tall-skinny SVD.  The RPCA
+inputs in federated LoRA are ``(r*d) x n_clients`` with ``n_clients`` tiny
+(<= 100), so ``G = X^T X`` is a small symmetric matrix; ``eigh(G)`` yields the
+right singular vectors and squared singular values, and
+
+    SVT_t(X) = X @ (V * (shrink(s, t) / s)) @ V^T
+
+never materializes the tall U factor.  This is numerically identical to the
+SVD route for full-column-rank X (guarded by an eps on s) and is MXU-friendly:
+two small matmuls + one tiny eigh instead of a LAPACK-style SVD.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def soft_threshold(x: jnp.ndarray, t) -> jnp.ndarray:
+    """Elementwise shrinkage ``sign(x) * max(|x| - t, 0)``.
+
+    This is the pure-jnp reference; ``repro.kernels.soft_threshold`` provides
+    the Pallas TPU kernel with identical semantics (see kernels/ref.py).
+    """
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def svt_gram(x: jnp.ndarray, t, shrink_fn: Callable = soft_threshold) -> jnp.ndarray:
+    """Singular-value thresholding via the Gram matrix (thin side).
+
+    Works on any 2-D ``x``; the eigendecomposition is taken on the smaller
+    Gram matrix so cost is O(min(d1,d2)^3 + d1*d2*min(d1,d2)).
+    """
+    d1, d2 = x.shape
+    transpose = d1 < d2
+    if transpose:
+        x = x.T  # now tall: rows >= cols
+    # G = X^T X  (cols x cols), symmetric PSD.
+    gram = x.T @ x
+    w, v = jnp.linalg.eigh(gram)  # ascending eigenvalues
+    s = jnp.sqrt(jnp.maximum(w, 0.0))
+    s_shrunk = shrink_fn(s, t)
+    coef = jnp.where(s > _EPS, s_shrunk / jnp.maximum(s, _EPS), 0.0)
+    low_rank = (x @ (v * coef[None, :])) @ v.T
+    return low_rank.T if transpose else low_rank
+
+
+def svt_svd(x: jnp.ndarray, t, shrink_fn: Callable = soft_threshold) -> jnp.ndarray:
+    """Reference SVT via full thin SVD (used in tests to validate svt_gram)."""
+    u, s, vh = jnp.linalg.svd(x, full_matrices=False)
+    return (u * shrink_fn(s, t)[None, :]) @ vh
+
+
+class RPCAResult(NamedTuple):
+    low_rank: jnp.ndarray
+    sparse: jnp.ndarray
+    n_iter: jnp.ndarray
+    residual: jnp.ndarray  # ||M - L - S||_F / ||M||_F at exit
+
+
+def robust_pca(
+    m: jnp.ndarray,
+    *,
+    mu: float | None = None,
+    lam: float | None = None,
+    tol: float = 1e-7,
+    max_iter: int = 200,
+    svt_fn: Callable = svt_gram,
+    shrink_fn: Callable = soft_threshold,
+) -> RPCAResult:
+    """Decompose ``m`` into low-rank + sparse, per the paper's Algorithm 2.
+
+    Args:
+      m: 2-D matrix (any float dtype; computation is in float32).
+      mu, lam: ADMM hyper-parameters; paper defaults when None.
+      tol: relative Frobenius residual stopping tolerance.
+      max_iter: compile-time iteration cap (lax.while_loop bound).
+      svt_fn / shrink_fn: pluggable SVT and shrinkage (e.g. Pallas kernel).
+
+    Returns:
+      RPCAResult(low_rank=L, sparse=S, n_iter, residual).
+    """
+    if m.ndim != 2:
+        raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
+    orig_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    d1, d2 = m.shape
+
+    abs_sum = jnp.sum(jnp.abs(m))
+    mu_v = jnp.where(abs_sum > _EPS, (d1 * d2) / (4.0 * jnp.maximum(abs_sum, _EPS)), 1.0)
+    if mu is not None:
+        mu_v = jnp.asarray(mu, jnp.float32)
+    lam_v = jnp.asarray(lam if lam is not None else 1.0 / jnp.sqrt(max(d1, d2)), jnp.float32)
+    rho = 1.0 / mu_v
+
+    m_norm = jnp.maximum(jnp.linalg.norm(m), _EPS)
+
+    def cond(state):
+        _, _, _, i, err = state
+        return jnp.logical_and(i < max_iter, err > tol)
+
+    def body(state):
+        _, s, y, i, _ = state
+        l = svt_fn(m - s + rho * y, rho, shrink_fn)
+        s = shrink_fn(m - l + rho * y, rho * lam_v)
+        resid = m - l - s
+        y = y + mu_v * resid
+        err = jnp.linalg.norm(resid) / m_norm
+        return (l, s, y, i + 1, err)
+
+    zeros = jnp.zeros_like(m)
+    init = (zeros, zeros, zeros, jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, jnp.float32))
+    l, s, _, n_iter, err = jax.lax.while_loop(cond, body, init)
+    return RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_iter, err)
+
+
+def robust_pca_fixed_iters(
+    m: jnp.ndarray,
+    *,
+    n_iter: int = 50,
+    mu: float | None = None,
+    lam: float | None = None,
+    svt_fn: Callable = svt_gram,
+    shrink_fn: Callable = soft_threshold,
+) -> RPCAResult:
+    """Fixed-iteration RPCA (fori_loop) — deterministic cost for the mesh path.
+
+    The production ``fed_train_step`` lowers this variant so that the compiled
+    program's FLOP count is shape-static (no data-dependent trip count), which
+    both keeps SPMD pipelining simple and makes the roofline analysis exact.
+    """
+    if m.ndim != 2:
+        raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
+    orig_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    d1, d2 = m.shape
+
+    abs_sum = jnp.sum(jnp.abs(m))
+    mu_v = jnp.where(abs_sum > _EPS, (d1 * d2) / (4.0 * jnp.maximum(abs_sum, _EPS)), 1.0)
+    if mu is not None:
+        mu_v = jnp.asarray(mu, jnp.float32)
+    lam_v = jnp.asarray(lam if lam is not None else 1.0 / jnp.sqrt(max(d1, d2)), jnp.float32)
+    rho = 1.0 / mu_v
+    m_norm = jnp.maximum(jnp.linalg.norm(m), _EPS)
+
+    def body(_, state):
+        _, s, y = state
+        l = svt_fn(m - s + rho * y, rho, shrink_fn)
+        s = shrink_fn(m - l + rho * y, rho * lam_v)
+        y = y + mu_v * (m - l - s)
+        return (l, s, y)
+
+    zeros = jnp.zeros_like(m)
+    l, s, _ = jax.lax.fori_loop(0, n_iter, body, (zeros, zeros, zeros))
+    err = jnp.linalg.norm(m - l - s) / m_norm
+    return RPCAResult(
+        l.astype(orig_dtype), s.astype(orig_dtype), jnp.asarray(n_iter, jnp.int32), err
+    )
+
+
+def batched_robust_pca(ms: jnp.ndarray, **kwargs) -> RPCAResult:
+    """vmap RPCA over a leading batch axis (parallel across layers/modules).
+
+    Implements the paper's App. B.2 suggestion of parallelizing Robust-PCA
+    across layers: ``ms`` has shape (batch, d1, d2).
+    """
+    fn = functools.partial(robust_pca_fixed_iters, **kwargs)
+    return jax.vmap(fn)(ms)

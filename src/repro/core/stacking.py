@@ -1,0 +1,73 @@
+"""Client-update stacking utilities (the paper's Eq. 7-8).
+
+The server receives per-client LoRA delta pytrees.  Aggregation needs, per
+LoRA matrix, the column-stacked ``M = [vec(d_1) ... vec(d_M)]``.  Two layouts
+appear in the framework:
+
+  * *list-of-pytrees* (CPU simulation): ``stack_client_trees`` produces one
+    pytree whose leaves gain a leading client axis.
+  * *stacked* (mesh execution): client-local steps already run with a leading
+    client axis sharded over the ("pod","data") mesh axes, so leaves arrive
+    pre-stacked.
+
+``leaf_matrices`` converts a stacked leaf into a batch of the paper's M
+matrices: a leaf of shape ``(n_clients, n_layers, r, d)`` (scan-stacked LoRA)
+becomes ``(n_layers, r*d, n_clients)``; an unstacked module leaf
+``(n_clients, r, d)`` becomes ``(1, r*d, n_clients)``.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def stack_client_trees(trees: List[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees on a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def unstack_client_tree(stacked: PyTree, index: int) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x[index], stacked)
+
+
+def infer_layer_axes(leaf: jnp.ndarray) -> int:
+    """Heuristic: LoRA module weights are 2-D, so a stacked leaf is
+
+      (clients, r, d)            -> 0 layer axes (single module)
+      (clients, layers, r, d)    -> 1 layer axis (scan-stacked modules)
+
+    Anything higher-rank keeps all middle axes as module axes.
+    """
+    return max(leaf.ndim - 3, 0)
+
+
+def leaf_matrices(leaf: jnp.ndarray, layer_axes: int | None = None) -> jnp.ndarray:
+    """(clients, *module_axes, *mat) -> (prod(module_axes), vec_dim, clients)."""
+    if layer_axes is None:
+        layer_axes = infer_layer_axes(leaf)
+    n_clients = leaf.shape[0]
+    module_shape = leaf.shape[1 : 1 + layer_axes]
+    n_modules = 1
+    for s in module_shape:
+        n_modules *= s
+    flat = jnp.reshape(leaf, (n_clients, n_modules, -1))
+    # -> (modules, vec, clients)
+    return jnp.transpose(flat, (1, 2, 0))
+
+
+def matrices_to_leaf_update(
+    columns_mean: jnp.ndarray, leaf: jnp.ndarray, layer_axes: int | None = None
+) -> jnp.ndarray:
+    """Inverse reshape of an aggregated update.
+
+    ``columns_mean`` has shape (modules, vec_dim); returns an array shaped like
+    one client's delta ``leaf[0]``.
+    """
+    if layer_axes is None:
+        layer_axes = infer_layer_axes(leaf)
+    target_shape = leaf.shape[1:]
+    return jnp.reshape(columns_mean, target_shape).astype(leaf.dtype)

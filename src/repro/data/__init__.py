@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, client_lm_datasets, make_lm_batches, make_lm_data
+
+__all__ = ["SyntheticLM", "client_lm_datasets", "make_lm_batches", "make_lm_data"]

@@ -1,0 +1,25 @@
+from repro.fed.client import LocalSpec, make_local_fn
+from repro.fed.partition import dirichlet_partition, label_distribution
+from repro.fed.server import (
+    FedRunConfig,
+    RoundState,
+    init_round_state,
+    make_round_fn,
+    rounds_to_reach,
+    run_simulation,
+)
+from repro.fed import synth
+
+__all__ = [
+    "LocalSpec",
+    "make_local_fn",
+    "dirichlet_partition",
+    "label_distribution",
+    "FedRunConfig",
+    "RoundState",
+    "init_round_state",
+    "make_round_fn",
+    "rounds_to_reach",
+    "run_simulation",
+    "synth",
+]

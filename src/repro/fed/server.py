@@ -1,0 +1,155 @@
+"""Server round loop: broadcast -> vmapped local runs -> aggregate -> update.
+
+The per-round computation is a single jitted function: clients execute in
+parallel under ``jax.vmap`` (CPU simulation) — the mesh execution path in
+``repro.launch.train`` replaces the vmap with client-axis sharding, but the
+aggregation code (``repro.core.aggregate``) is byte-identical in both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AggregatorConfig, aggregate
+from repro.core.aggregators import fedrpca
+from repro.fed.client import LocalSpec, make_local_fn
+from repro.utils.pytree import tree_add, tree_zeros_like
+
+PyTree = Any
+
+
+class RoundState(NamedTuple):
+    lora_global: PyTree
+    scaffold_c: PyTree
+    scaffold_ci: PyTree  # (M, ...) per-client variates
+    prev_local: PyTree  # (M, ...) previous-round local models (MOON)
+    rng: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FedRunConfig:
+    aggregator: AggregatorConfig
+    local: LocalSpec
+    rounds: int
+    seed: int = 0
+    clients_per_round: int = 0  # 0 = full participation (the paper's setting)
+
+
+def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients, *x.shape)), lora_init
+    )
+    return RoundState(
+        lora_global=lora_init,
+        scaffold_c=tree_zeros_like(lora_init),
+        scaffold_ci=tree_zeros_like(stacked),
+        prev_local=stacked,
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
+    """Returns jitted fn: RoundState -> (RoundState, diagnostics)."""
+    local_fn = make_local_fn(cfg.local)
+    n_clients = data_x.shape[0]
+
+    sample_size = cfg.clients_per_round or n_clients
+    partial = sample_size < n_clients
+
+    @jax.jit
+    def run_round(state: RoundState):
+        rng, sub, pick = jax.random.split(state.rng, 3)
+        if partial:
+            # Partial participation: sample clients w/o replacement, run the
+            # vmapped local phase on the gathered cohort, scatter state back.
+            cohort = jax.random.choice(
+                pick, n_clients, shape=(sample_size,), replace=False
+            )
+        else:
+            cohort = jnp.arange(n_clients)
+        take = lambda t: jax.tree_util.tree_map(lambda x: x[cohort], t)
+        client_rngs = jax.random.split(sub, sample_size)
+        results = jax.vmap(
+            local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0)
+        )(
+            base,
+            state.lora_global,
+            data_x[cohort],
+            data_y[cohort],
+            client_rngs,
+            state.scaffold_c,
+            take(state.scaffold_ci),
+            take(state.prev_local),
+        )
+        stacked_deltas = results.delta  # leaves: (|S|, ...)
+        update = aggregate(stacked_deltas, cfg.aggregator)
+        lora_global = tree_add(state.lora_global, update)
+
+        scatter = lambda full, part: jax.tree_util.tree_map(
+            lambda f, p: f.at[cohort].set(p), full, part
+        )
+        new_ci = scatter(state.scaffold_ci, results.new_ci)
+        new_prev = scatter(state.prev_local, results.lora)
+        new_c = state.scaffold_c
+        if cfg.local.scaffold:
+            # c <- c + |S|/M * mean_S(ci_new - ci_old)   (SCAFFOLD eq. 5)
+            frac = sample_size / n_clients
+            delta_ci = jax.tree_util.tree_map(
+                lambda new, old: jnp.mean(new - old[cohort], axis=0),
+                results.new_ci,
+                state.scaffold_ci,
+            )
+            new_c = jax.tree_util.tree_map(
+                lambda c, d: c + frac * d, state.scaffold_c, delta_ci
+            )
+        new_state = RoundState(
+            lora_global=lora_global,
+            scaffold_c=new_c,
+            scaffold_ci=new_ci,
+            prev_local=new_prev,
+            rng=rng,
+        )
+        diags = {"mean_local_loss": jnp.mean(results.final_loss)}
+        return new_state, diags
+
+    return run_round
+
+
+def run_simulation(
+    base: PyTree,
+    lora_init: PyTree,
+    data_x,
+    data_y,
+    cfg: FedRunConfig,
+    eval_fn: Callable[[PyTree], float],
+    *,
+    eval_every: int = 1,
+    log_fn: Optional[Callable[[int, dict], None]] = None,
+):
+    """Runs ``cfg.rounds`` rounds; returns (final lora, accuracy history)."""
+    n_clients = data_x.shape[0]
+    state = init_round_state(lora_init, n_clients, cfg.seed)
+    round_fn = make_round_fn(base, data_x, data_y, cfg)
+    history = []
+    for r in range(cfg.rounds):
+        state, diags = round_fn(state)
+        if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
+            acc = float(eval_fn(state.lora_global))
+            history.append(acc)
+            if log_fn:
+                log_fn(r, {"acc": acc, **{k: float(v) for k, v in diags.items()}})
+    return state.lora_global, np.asarray(history)
+
+
+def rounds_to_reach(history: np.ndarray, frac: float = 0.9) -> int:
+    """R@90-style metric: first round index reaching frac * final accuracy."""
+    if len(history) == 0:
+        return -1
+    target = frac * history[-1]
+    hits = np.flatnonzero(history >= target)
+    return int(hits[0]) + 1 if len(hits) else len(history)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles.
+
+  soft_threshold  — RPCA shrinkage (ADMM inner loop elementwise op)
+  lora_matmul     — fused base + LoRA projection y = xW + s(xA)B
+  local_attention — flash-style causal sliding-window attention
+  ssd_scan        — Mamba-2 chunked SSD with VMEM-resident recurrent state
+
+Validated against ``repro.kernels.ref`` in interpret mode on CPU (TPU is the
+compile target; see tests/test_kernels.py shape/dtype sweeps).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import local_attention, lora_matmul, soft_threshold, ssd_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "local_attention",
+    "lora_matmul",
+    "soft_threshold",
+    "ssd_scan",
+]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash-style causal sliding-window attention.
+
+Used by RecurrentGemma's local-attention layers and the long_500k
+sliding-window variant of the dense architectures.  Online softmax over KV
+blocks with running (max, normalizer, accumulator) in VMEM; blocks that fall
+entirely outside the causal window are skipped via ``pl.when`` — the kernel's
+FLOPs scale with S * window, not S^2 (the jnp flash path masks instead of
+skipping; see EXPERIMENTS.md §Perf).
+
+Grid: (batch*heads, S/block_q, S/block_k), KV innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, bq: int, bk: int, nk: int, seq: int, window: int, causal: bool,
+):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = i * bq
+    k_lo = j * bk
+    # Block-level schedule skip: causal => k_lo <= q_hi; window => block not
+    # entirely older than the window of the oldest query in this block.
+    needed = True
+    if causal:
+        needed = k_lo <= q_lo + bq - 1
+    if window:
+        needed = jnp.logical_and(needed, (k_lo + bk - 1) > (q_lo - window))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < seq
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "block_q", "block_k", "interpret")
+)
+def local_attention(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    bq, bk = min(block_q, s), min(block_k, s)
+    pad_q, pad_k = (-s) % bq, (-s) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq, nk = qp.shape[1] // bq, kp.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, seq=s, window=window, causal=causal
+        ),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused base + LoRA projection  y = xW + s*(xA)B.
+
+The serving/local-training hot path applies every LoRA-adapted projection as
+two extra skinny matmuls.  Unfused, the (x A) intermediate round-trips HBM;
+fused, both accumulators live in VMEM across the K loop and the rank-R
+correction is applied on the final K step — one HBM pass over x and W.
+
+Grid (M/bm, N/bn, K/bk), K innermost (sequential accumulation semantics).
+Block sizes default to MXU-aligned (128, 128, 512); the LoRA rank dimension
+is zero-padded to the 128 lane width by the wrapper (real rank <= 64, and the
+pad multiplies away as A/B pads are zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, s_ref, o_ref, acc_ref, accr_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        accr_ref[...] = jnp.zeros_like(accr_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    accr_ref[...] += jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        scale = s_ref[0, 0]
+        lora = jnp.dot(
+            accr_ref[...].astype(b_ref.dtype), b_ref[...],
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def lora_matmul(
+    x: jnp.ndarray,  # (M, K)
+    w: jnp.ndarray,  # (K, N)
+    a: jnp.ndarray,  # (K, R)
+    b: jnp.ndarray,  # (R, N)
+    scale: float = 1.0,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, kdim = x.shape
+    _, n = w.shape
+    r = a.shape[1]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, kdim)
+    pad_m, pad_n, pad_k = (-m) % bm, (-n) % bn, (-kdim) % bk
+    r_pad = max(128 - r, 0) if r < 128 else (-r) % 128
+
+    xp = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    ap = jnp.pad(a, ((0, pad_k), (0, r_pad)))
+    bp = jnp.pad(b, ((0, r_pad), (0, pad_n)))
+    rp = r + r_pad
+    mp, np_, kp = m + pad_m, n + pad_n, kdim + pad_k
+    nk = kp // bk
+    s_arr = jnp.full((1, 1), scale, jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, rp), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((rp, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[
+            _vmem((bm, bn), jnp.float32),
+            _vmem((bm, rp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, ap, bp, s_arr)
+    return out[:m, :n]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    try:
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # interpret-mode fallback: generic scratch
+        import jax.experimental.pallas as pl_
+
+        return pl_.MemorySpace.ANY  # pragma: no cover

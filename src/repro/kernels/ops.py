@@ -1,0 +1,70 @@
+"""jit'd wrappers binding the Pallas kernels into the framework.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the compile target).  On TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` or
+rely on the platform autodetect.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import local_attention as _la
+from repro.kernels import lora_matmul as _lm
+from repro.kernels import soft_threshold as _st
+from repro.kernels import ssd_scan as _ss
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def soft_threshold(x: jnp.ndarray, t, *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Kernel-backed shrinkage; reshapes any rank to 2-D tiles."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    x2 = jnp.atleast_2d(x.reshape(-1, shape[-1]) if x.ndim >= 2 else x.reshape(1, -1))
+    out = _st.soft_threshold(x2, t, interpret=interpret)
+    return out.reshape(shape)
+
+
+def lora_matmul(
+    x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, scale: float = 1.0,
+    *, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused y = xW + s(xA)B for inputs of any leading rank."""
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _lm.lora_matmul(x2, w, a, b, scale, interpret=interpret)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def local_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, window: int = 0,
+    causal: bool = True, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(B, S, H, D) x (B, S, H, D) sliding-window attention (per-head fused)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    if q.ndim == 4:
+        bsz, s, h, d = q.shape
+        fold = lambda t: jnp.transpose(t, (0, 2, 1, 3)).reshape(bsz * h, s, d)
+        out = _la.local_attention(
+            fold(q), fold(k), fold(v), window=window, causal=causal, interpret=interpret
+        )
+        return jnp.transpose(out.reshape(bsz, h, s, d), (0, 2, 1, 3))
+    return _la.local_attention(q, k, v, window=window, causal=causal, interpret=interpret)
+
+
+def ssd_scan(
+    x: jnp.ndarray, da: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *,
+    chunk: int = 256, interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ss.ssd_scan(x, da, b, c, chunk=chunk, interpret=interpret)

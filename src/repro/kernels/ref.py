@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_threshold_ref(x: jnp.ndarray, t) -> jnp.ndarray:
+    """RPCA shrinkage: sign(x) * max(|x| - t, 0)."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def lora_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, scale: float
+) -> jnp.ndarray:
+    """y = x @ w + scale * (x @ a) @ b   (fused base + LoRA projection)."""
+    return x @ w + scale * (x @ a) @ b
+
+
+def local_attention_ref(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: int,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Sliding-window causal attention, materialized scores."""
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # (BH, S, P)   dt-premultiplied input per head
+    da: jnp.ndarray,  # (BH, S)      log-decay increments (dt * A, negative)
+    b: jnp.ndarray,  # (BH, S, N)
+    c: jnp.ndarray,  # (BH, S, N)
+    chunk: int,
+) -> jnp.ndarray:
+    """Chunked SSD core: y_t = sum_{j<=t} C_t . B_j exp(sum_{j<k<=t} da_k) x_j.
+
+    Sequential-scan reference (exact); the Pallas kernel and the model's
+    associative-scan implementation must both match this.
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+
+    def step(h, inp):
+        x_t, da_t, b_t, c_t = inp
+        h = jnp.exp(da_t)[:, None, None] * h + jnp.einsum("bn,bp->bnp", b_t, x_t)
+        y_t = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y_t
+
+    h0 = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(da, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    del chunk  # reference is chunk-free (exact)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

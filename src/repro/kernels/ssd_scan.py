@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (intra-chunk dual + recurrence).
+
+One grid row per (batch*head); chunks iterate on the innermost (sequential)
+grid dimension with the recurrent state (N, P) carried in VMEM scratch across
+chunk steps — the TPU-native shape of the SSD algorithm: the quadratic
+intra-chunk contraction feeds the MXU while the O(N*P) state never leaves
+VMEM between chunks (on GPU this is a separate kernel + global-memory state).
+
+Inputs are the dt-premultiplied head streams (see ops.ssd_scan for the model
+glue): x (BH,S,P), da (BH,S) log-decays, b/c (BH,S,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    da = da_ref[0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    cum = jnp.cumsum(da)  # (Q,)
+    seg = cum[:, None] - cum[None, :]  # decay j -> i
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (chunk, chunk), 1
+    )
+    l_mask = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    y_intra = jnp.dot(l_mask * scores, x, preferred_element_type=jnp.float32)
+
+    h = h_ref[...]  # (N, P)
+    y_inter = jnp.exp(cum)[:, None] * jnp.dot(c, h, preferred_element_type=jnp.float32)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    h_new = jnp.exp(cum[-1]) * h + jnp.dot(
+        (b * decay_to_end[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+    h_ref[...] = h_new
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,  # (BH, S, P)
+    da: jnp.ndarray,  # (BH, S)
+    b: jnp.ndarray,  # (BH, S, N)
+    c: jnp.ndarray,  # (BH, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        # pad decays with 0 (no decay) and b/c with 0 (no contribution)
+        da = jnp.pad(da, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=q),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, q, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, q, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[_vmem((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, da, b, c)
+    return out[:, :s]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,383 @@
+"""Analytic per-chip cost model for the roofline terms.
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``while``-loop body ONCE
+(verified in tests/test_roofline.py), and our layer stacks, flash-attention
+loops and local-step loops are all rolled — so the raw numbers undercount by
+~n_layers.  The compiled artifact remains the source of truth for *lowering
+success, sharding layout, collective schedule and memory analysis*; the
+FLOP/byte/collective magnitudes are computed here from the same (config,
+shape, mesh, step) tuple with documented closed forms, and cross-checked
+against ``cost_analysis`` on an unrolled single-layer variant.
+
+All quantities are PER CHIP.  Conventions:
+  c      = number of client/batch shards  (data [* pod] axis sizes)
+  m      = model-axis size
+  T_loc  = tokens per chip = global_tokens / c   (model axis replicates tokens)
+  A matmul with its weight sharded on the model axis contributes
+  2 * T_loc * d_in * d_out / m FLOPs; an unsharded (replicated) weight
+  contributes 2 * T_loc * d_in * d_out.
+
+Training multiplier: the base model is FROZEN (LoRA-only training), so the
+backward pass computes activation gradients (≈1x forward) but almost no
+weight gradients; with remat the forward is recomputed once more:
+  train factor = 1 (fwd) + 1 (dgrad) + 1 (remat) = 3x forward FLOPs.
+(The usual 6ND assumes full wgrad; our MODEL_FLOPS baseline keeps 6ND/2ND per
+the assignment, so useful_flops_ratio can exceed what full fine-tuning would
+show — documented in EXPERIMENTS.md.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def _ssd_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return dict(
+        d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_head_dim,
+        conv_dim=d_inner + 2 * cfg.ssm_state,
+    )
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    flops: Dict[str, float]
+    hbm_bytes: Dict[str, float]
+    collective_bytes: Dict[str, float]
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.flops.values())
+
+    @property
+    def total_hbm_bytes(self) -> float:
+        return sum(self.hbm_bytes.values())
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _div(x: int, size: int) -> float:
+    """Model-axis division only when the layout actually shards (divisible)."""
+    return x / size if x % size == 0 else float(x)
+
+
+def step_costs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    model_size: int = 16,
+    client_shards: int = 16,
+    local_steps: int = 1,
+    rpca_iters: int = 30,
+    n_clients: int | None = None,
+    aggregator: str = "fedrpca",
+    remat: bool = True,
+    attn_schedule: str = "causal_half",  # matches the triangular flash schedule;
+    # "full_blocks" reproduces the pre-optimization masked-loop baseline
+    dtype_bytes: int = 2,
+    policy: str = "tp",  # tp | tp_fsdp | dp | ep_replicated (partitioning.py)
+) -> CostBreakdown:
+    m = model_size
+    c = client_shards
+    if policy == "dp":
+        # weights replicated; ALL chips split the batch (clients x model axis)
+        c = c * m
+        m = 1
+    if shape.global_batch % max(c, 1) != 0:
+        c = 1  # replicated batch (e.g. long_500k B=1): every chip holds it
+    n_clients = n_clients or client_shards
+    d = cfg.d_model
+    hd = cfg.head_dim_
+    q_dim, kv_dim = cfg.q_dim, cfg.kv_dim
+    seq = shape.seq_len
+    is_train = shape.kind == "train"
+    is_decode = shape.kind == "decode"
+    tokens_global = shape.global_batch * (1 if is_decode else seq)
+    t_loc = tokens_global / c
+    ctx = seq  # attention context length
+
+    train_mult = (3.0 if remat else 2.0) if is_train else 1.0
+    if is_train:
+        train_mult *= local_steps
+
+    fl: Dict[str, float] = {}
+    hbm: Dict[str, float] = {}
+    coll: Dict[str, float] = {}
+
+    def mm(tokens, d_in, d_out, sharded=True):
+        return 2.0 * tokens * d_in * _div(d_out, m) if sharded else 2.0 * tokens * d_in * d_out
+
+    # --- per-layer mixer/ffn costs ---
+    unit = cfg.layer_pattern
+    n_per_kind: Dict[str, int] = {}
+    for i in range(cfg.n_layers):
+        k = unit[i % len(unit)]
+        n_per_kind[k] = n_per_kind.get(k, 0) + 1
+
+    attn_flops = 0.0
+    for kind, n_l in n_per_kind.items():
+        if kind in ("attn", "local_attn"):
+            proj = (
+                mm(t_loc, d, q_dim)
+                + 2 * mm(t_loc, d, kv_dim)
+                + 2.0 * t_loc * _div(q_dim, m) * d  # o-proj (row-parallel)
+            )
+            if is_decode:
+                s_ctx = min(cfg.window_size, ctx) if kind == "local_attn" else ctx
+            elif kind == "local_attn":
+                s_ctx = min(cfg.window_size + 512, ctx)  # blocks touched per query
+            else:
+                s_ctx = ctx if attn_schedule == "full_blocks" else (ctx / 2 + 256)
+            score_pv = 2.0 * 2.0 * t_loc * s_ctx * _div(cfg.n_heads, m) * hd
+            attn_flops += n_l * (proj + score_pv)
+            # Decode reads the whole KV cache every step: the memory term.
+            if is_decode:
+                cache_ctx = min(cfg.window_size, ctx) if kind == "local_attn" else ctx
+                # int8 KV quantization: 1 byte mantissa + fp16 scale per head
+                kv_b = (1.0 + 2.0 / hd) if getattr(cfg, "kv_quant", False) else dtype_bytes
+                hbm[f"kv_cache_read/{kind}"] = hbm.get(f"kv_cache_read/{kind}", 0.0) + (
+                    n_l * (shape.global_batch / c) * cache_ctx
+                    * _div(cfg.n_kv_heads * hd, m) * 2 * kv_b
+                )
+        elif kind == "ssd":
+            sd = _ssd_dims(cfg)
+            per = (
+                mm(t_loc, d, sd["d_inner"] + sd["conv_dim"] + sd["n_heads"], sharded=False)
+                + 2.0 * t_loc * sd["conv_dim"] * cfg.conv_width
+                + 2.0 * t_loc * (1 if is_decode else cfg.ssm_chunk) * cfg.ssm_state  # scores
+                + 2.0 * t_loc * (1 if is_decode else cfg.ssm_chunk) * sd["d_inner"]  # y_intra
+                + 4.0 * t_loc * cfg.ssm_state * sd["d_inner"]  # states + y_inter
+                + 2.0 * t_loc * sd["d_inner"] * _div(d, m)  # out_proj
+                + 8.0 * t_loc * sd["d_inner"]  # gate/norm
+            )
+            attn_flops += n_l * per
+        elif kind == "rglru":
+            w = cfg.lru_width or d
+            per = (
+                2 * mm(t_loc, d, w)  # proj_x + proj_gate
+                + 2 * mm(t_loc, w, w)  # gate_a + gate_x
+                + 2.0 * t_loc * w * cfg.conv_width
+                + 10.0 * t_loc * w  # recurrence + gating elementwise
+                + 2.0 * t_loc * _div(w, m) * d  # out_proj
+            )
+            attn_flops += n_l * per
+    fl["mixers"] = attn_flops * train_mult
+
+    # FFN / MoE (every layer when d_ff > 0).
+    if cfg.d_ff > 0:
+        if cfg.n_experts:
+            if policy == "ep_replicated":
+                expert_div = m if cfg.d_ff % m == 0 else 1
+            elif policy == "moe2d":
+                expert_div = m * client_shards  # E over model, d_ff over data
+            else:
+                expert_div = m
+            per = (
+                2.0 * t_loc * d * cfg.n_experts  # router (replicated)
+                + 3.0 * 2.0 * t_loc * cfg.top_k * d * cfg.d_ff / expert_div
+            )
+        else:
+            n_mats = 3 if cfg.ffn_kind in ("swiglu", "geglu") else 2
+            per = n_mats * mm(t_loc, d, cfg.d_ff)
+        fl["ffn"] = cfg.n_layers * per * train_mult
+
+    # Embedding + LM head (+ loss).
+    head_tokens = shape.global_batch / c if shape.kind != "train" else t_loc
+    fl["lm_head"] = 2.0 * head_tokens * d * _div(cfg.vocab_size, m) * train_mult
+    if is_train:
+        fl["loss_softmax"] = 5.0 * t_loc * _div(cfg.vocab_size, m) * local_steps
+
+    # Whisper encoder + cross attention.
+    if cfg.encoder_decoder:
+        t_enc = (shape.global_batch / c) * cfg.encoder_seq
+        enc_per = (
+            mm(t_enc, d, q_dim) + 2 * mm(t_enc, d, kv_dim)
+            + 2.0 * t_enc * _div(q_dim, m) * d
+            + 2.0 * 2.0 * t_enc * cfg.encoder_seq * _div(cfg.n_heads, m) * hd
+            + 2 * mm(t_enc, d, cfg.d_ff)
+        )
+        fl["encoder"] = cfg.n_encoder_layers * enc_per * (train_mult if is_train else 1.0)
+        dec_t = shape.global_batch / c if is_decode else t_loc
+        cross_per = (
+            mm(dec_t, d, q_dim) + 2.0 * dec_t * _div(q_dim, m) * d
+            + (0.0 if is_decode else 2 * mm(t_enc, d, kv_dim))
+            + 2.0 * 2.0 * dec_t * cfg.encoder_seq * _div(cfg.n_heads, m) * hd
+        )
+        fl["cross_attn"] = cfg.n_layers * cross_per * train_mult
+
+    # FedRPCA server step (train only; computed replicated on every chip).
+    if is_train and aggregator == "fedrpca":
+        r = cfg.lora.rank
+        rpca = 0.0
+        for kind, n_l in n_per_kind.items():
+            if kind in ("attn", "local_attn"):
+                dims = [(d, r), (r, kv_dim)] if "v" in cfg.lora.targets else []
+                dims += [(d, r), (r, q_dim)] if "q" in cfg.lora.targets else []
+            elif kind == "ssd":
+                sd = _ssd_dims(cfg)
+                dims = [(d, r), (r, sd["d_inner"] + sd["conv_dim"] + sd["n_heads"]),
+                        (sd["d_inner"], r), (r, d)]
+            else:
+                w = cfg.lru_width or d
+                dims = [(d, r), (r, w), (w, r), (r, d)]
+            for d1, d2 in dims:
+                n_vec = d1 * d2
+                rpca += n_l * rpca_iters * (4.0 * n_vec * n_clients**2 + 26.0 * n_clients**3)
+        fl["rpca_server"] = rpca
+
+    # ------------------------------------------------------------------ HBM
+    params_local = _params_local_bytes(
+        cfg, m, dtype_bytes, policy=policy, fsdp_size=client_shards
+    )
+    weight_passes = (3.0 if remat else 2.0) if is_train else 1.0
+    if is_train:
+        weight_passes *= local_steps
+    hbm["weights"] = params_local * weight_passes
+    if policy == "tp_fsdp":
+        params_local /= max(client_shards, 1)  # resident shard after ZeRO-3
+    fsdp = policy == "tp_fsdp"
+    if fsdp:
+        # Weights resident sharded over the data axes; gathered per pass.
+        hbm["weights"] = params_local * weight_passes  # traffic unchanged
+        coll["fsdp_weight_allgather"] = (
+            params_local * (client_shards - 1) / max(client_shards, 1) * weight_passes
+        )
+    act_tokens = shape.global_batch / c if is_decode else t_loc
+    hbm["activations"] = 12.0 * cfg.n_layers * act_tokens * d * dtype_bytes * train_mult
+    hbm["logits"] = head_tokens * _div(cfg.vocab_size, m) * 4.0 * (3.0 if is_train else 1.0)
+    if cfg.encoder_decoder and not is_decode:
+        hbm["encoder_act"] = (
+            12.0 * cfg.n_encoder_layers
+            * (shape.global_batch / c) * cfg.encoder_seq * d * dtype_bytes
+        )
+    if is_decode and cfg.encoder_decoder:
+        hbm["cross_cache_read"] = (
+            cfg.n_layers * (shape.global_batch / c) * cfg.encoder_seq
+            * _div(kv_dim, m) * 2 * dtype_bytes
+        )
+    if is_train and aggregator == "fedrpca":
+        lora_b = _lora_bytes(cfg, 4)
+        hbm["rpca"] = 6.0 * rpca_iters * lora_b * n_clients / max(c, 1)
+
+    # ----------------------------------------------------------- collectives
+    ar = lambda nbytes: 2.0 * nbytes * (m - 1) / m  # ring all-reduce
+    ag_clients = lambda nbytes: nbytes * (c - 1) / c if c > 1 else 0.0
+
+    # Row-parallel partial-sum all-reduces (o-proj, down/out-proj) per layer,
+    # forward + dgrad.
+    n_rowpar = 0
+    for kind, n_l in n_per_kind.items():
+        n_rowpar += n_l * (1 if kind in ("attn", "local_attn") else 1)
+    if cfg.d_ff > 0 and not cfg.n_experts:
+        n_rowpar += cfg.n_layers
+    act_bytes = act_tokens * d * dtype_bytes
+    bwd_factor = 2.0 if is_train else 1.0
+    coll["rowparallel_allreduce"] = n_rowpar * ar(act_bytes) * bwd_factor * (
+        local_steps if is_train else 1
+    )
+    if cfg.encoder_decoder and not is_decode:
+        enc_act = (shape.global_batch / c) * cfg.encoder_seq * d * dtype_bytes
+        coll["encoder_allreduce"] = (cfg.n_encoder_layers + cfg.n_layers) * ar(enc_act)
+    # Vocab-sharded embedding lookup -> all-reduce of the gathered activations.
+    coll["embed_allreduce"] = ar(act_bytes) * (local_steps if is_train else 1)
+    if cfg.n_experts:
+        if policy == "ep_replicated":
+            # Experts ffn-sharded like a dense MLP: dispatch stays local, the
+            # down-proj contributes one more row-parallel all-reduce/layer.
+            coll["rowparallel_allreduce"] = coll.get("rowparallel_allreduce", 0.0) + (
+                cfg.n_layers * ar(act_bytes) * bwd_factor
+                * (local_steps if is_train else 1)
+            )
+        else:
+            a2a = t_loc * max(cfg.top_k, 1) * d * dtype_bytes * (m - 1) / max(m, 1)
+            coll["moe_all_to_all"] = 2.0 * cfg.n_layers * a2a * (
+                (3.0 if is_train else 1.0) * (local_steps if is_train else 1)
+            )
+            if policy == "moe2d":
+                # down-proj partial sums all-reduce over the data axis
+                buf = t_loc * max(cfg.top_k, 1) * d * dtype_bytes
+                coll["moe2d_down_allreduce"] = cfg.n_layers * (
+                    2.0 * buf * (client_shards - 1) / max(client_shards, 1)
+                ) * ((3.0 if is_train else 1.0) * (local_steps if is_train else 1))
+    if is_train:
+        lora_b = _lora_bytes(cfg, 4)
+        coll["delta_allgather"] = ag_clients(lora_b * n_clients)
+        if policy == "dp":
+            # per-client LoRA grads sync over the model axis every local step
+            mm_sz = model_size
+            coll["dp_lora_allreduce"] = (
+                2.0 * lora_b * (mm_sz - 1) / max(mm_sz, 1) * local_steps
+            )
+
+    return CostBreakdown(flops=fl, hbm_bytes=hbm, collective_bytes=coll)
+
+
+def _params_local_bytes(
+    cfg: ModelConfig, m: int, dtype_bytes: int, *, policy: str = "tp", fsdp_size: int = 1
+) -> float:
+    """Per-chip resident base parameter bytes under the chosen layout."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    total = _div(cfg.vocab_size, m) * d  # embed
+    if not cfg.tie_embeddings:
+        total += d * _div(cfg.vocab_size, m)
+    per_layer = {}
+    for kind in set(cfg.layer_pattern):
+        if kind in ("attn", "local_attn"):
+            p = d * _div(cfg.q_dim, m) + 2 * d * _div(cfg.kv_dim, m) + _div(cfg.q_dim, m) * d
+        elif kind == "ssd":
+            sd = _ssd_dims(cfg)
+            p = d * (sd["d_inner"] + sd["conv_dim"] + sd["n_heads"]) + sd["d_inner"] * _div(d, m)
+        else:
+            w = cfg.lru_width or d
+            p = 2 * d * _div(w, m) + 2 * _div(w, m) * w + _div(w, m) * d
+        per_layer[kind] = p
+    unit = cfg.layer_pattern
+    for i in range(cfg.n_layers):
+        total += per_layer[unit[i % len(unit)]]
+    if cfg.d_ff:
+        if cfg.n_experts:
+            expert_bytes = 3 * _div(cfg.n_experts, m) * d * cfg.d_ff
+            if policy == "moe2d" and cfg.d_ff % fsdp_size == 0:
+                expert_bytes /= fsdp_size
+            total += cfg.n_layers * (d * cfg.n_experts + expert_bytes)
+        else:
+            n_mats = 3 if cfg.ffn_kind in ("swiglu", "geglu") else 2
+            total += cfg.n_layers * n_mats * d * _div(cfg.d_ff, m)
+    if cfg.encoder_decoder:
+        enc = cfg.n_encoder_layers * (
+            d * _div(cfg.q_dim, m) + 2 * d * _div(cfg.kv_dim, m) + _div(cfg.q_dim, m) * d
+            + 2 * d * _div(cfg.d_ff, m)
+        )
+        cross = cfg.n_layers * (
+            d * _div(cfg.q_dim, m) + 2 * d * _div(cfg.kv_dim, m) + _div(cfg.q_dim, m) * d
+        )
+        total += enc + cross
+    return total * dtype_bytes
+
+
+def _lora_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> float:
+    d, r = cfg.d_model, cfg.lora.rank
+    total = 0.0
+    for kind in cfg.layer_pattern:
+        if kind in ("attn", "local_attn"):
+            per = 0
+            per += (d * r + r * cfg.q_dim) if "q" in cfg.lora.targets else 0
+            per += (d * r + r * cfg.kv_dim) if "v" in cfg.lora.targets else 0
+        elif kind == "ssd":
+            sd = _ssd_dims(cfg)
+            per = d * r + r * (sd["d_inner"] + sd["conv_dim"] + sd["n_heads"]) + sd[
+                "d_inner"
+            ] * r + r * d
+        else:
+            w = cfg.lru_width or d
+            per = d * r + r * w + w * r + r * d
+        total += per
+    total *= cfg.n_layers / len(cfg.layer_pattern)
+    if cfg.encoder_decoder:  # cross-attention adapters
+        total += cfg.n_layers * ((cfg.d_model * r + r * cfg.q_dim) + (cfg.d_model * r + r * cfg.kv_dim))
+    return total * dtype_bytes

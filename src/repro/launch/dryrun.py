@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import side-effect — jax
+# locks the device count at first init.  This module owns its process; use
+# ``python -m repro.launch.dryrun`` (the roofline harness shells out here).
+
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs as cfglib  # noqa: E402
+from repro.config import ShapeConfig  # noqa: E402
+from repro.core import AggregatorConfig  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import client_axes, make_production_mesh, named  # noqa: E402
+from repro.models import init_decode_caches, init_lora_params, init_params  # noqa: E402
+from repro.models import partitioning as part  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+For each combination this builds ShapeDtypeStruct stand-ins for all step
+inputs (zero allocation), attaches the production shardings, lowers and
+compiles the step, and records ``memory_analysis`` / ``cost_analysis`` plus
+the parsed collective schedule into a JSON artifact consumed by the roofline
+benchmark and EXPERIMENTS.md.
+"""
+
+
+def abstract_params(cfg):
+    key = jax.random.PRNGKey(0)
+    base = jax.eval_shape(functools.partial(init_params, key, cfg))
+    lora = jax.eval_shape(functools.partial(init_lora_params, key, cfg))
+    return base, lora
+
+
+def build_case(cfg, shape: ShapeConfig, mesh, *, aggregator: str, rpca_iters: int,
+               local_steps: int, local_optimizer: str, policy: str = "tp",
+               microbatch: int = 1):
+    """Returns (jitted_fn, arg_structs) ready to lower."""
+    caxes = client_axes(mesh)
+    model_size = mesh.shape["model"]
+    n_cl = _n_clients(mesh)
+    base_s, lora_s = abstract_params(cfg)
+    base_sh = named(
+        mesh,
+        part.param_pspecs(
+            base_s, model_size=model_size, policy=policy,
+            fsdp_axes=caxes, fsdp_size=n_cl,
+        ),
+    )
+    lora_sh = named(mesh, part.lora_pspecs(lora_s))
+    specs = cfglib.input_specs(cfg, shape, n_clients=n_cl)
+
+    if shape.kind == "train":
+        agg = AggregatorConfig(method=aggregator, rpca_iters=rpca_iters)
+        step = steps_lib.make_fed_train_step(
+            cfg, agg, local_steps=local_steps, local_optimizer=local_optimizer,
+            microbatch=microbatch,
+        )
+        batch_pspecs = part.batch_pspecs(specs, caxes)
+        if policy == "dp":
+            # Weights replicated: the model axis shards the per-client batch.
+            per = specs["tokens"].shape[1]
+            if per % model_size == 0:
+                from jax.sharding import PartitionSpec as P_
+
+                batch_pspecs = jax.tree_util.tree_map(
+                    lambda leaf: P_(caxes, "model", *([None] * (leaf.ndim - 2))),
+                    specs,
+                )
+        batch_sh = named(mesh, batch_pspecs)
+        fn = jax.jit(step, in_shardings=(base_sh, lora_sh, batch_sh))
+        return fn, (base_s, lora_s, specs)
+
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(cfg)
+        batch_sh = named(mesh, part.batch_pspecs(specs, caxes))
+        fn = jax.jit(step, in_shardings=(base_sh, lora_sh, batch_sh))
+        return fn, (base_s, lora_s, specs)
+
+    # decode
+    step = steps_lib.make_serve_step(cfg)
+    b = shape.global_batch
+    n_cl = _n_clients(mesh)
+    caches_s = jax.eval_shape(
+        functools.partial(init_decode_caches, cfg, b, shape.seq_len)
+    )
+    caches_sh = named(
+        mesh,
+        part.cache_pspecs(caches_s, cfg, caxes, model_size=model_size, client_size=n_cl),
+    )
+    tokens_s = specs["tokens"]
+    tokens_sh = NamedSharding(mesh, P(caxes, None) if b % n_cl == 0 else P(None, None))
+    idx_s = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_sh = NamedSharding(mesh, P())
+    fn = jax.jit(step, in_shardings=(base_sh, lora_sh, tokens_sh, caches_sh, idx_sh))
+    return fn, (base_s, lora_s, tokens_s, caches_s, idx_s)
+
+
+def _n_clients(mesh) -> int:
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, *, aggregator: str = "fedrpca",
+             rpca_iters: int = 30, local_steps: int = 1, local_optimizer: str = "sgd",
+             arch_cfg=None, save_hlo: bool = False, out_dir: str = "artifacts/dryrun",
+             tag: str = "", policy: str = "tp", microbatch: int = 1,
+             kv_quant: bool = False, attn_schedule: str = "causal_half") -> dict:
+    shape = cfglib.SHAPES[shape_name]
+    cfg0 = arch_cfg if arch_cfg is not None else cfglib.get_config(arch)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "aggregator": aggregator if shape.kind == "train" else None,
+        "policy": policy,
+        "microbatch": microbatch,
+        "tag": tag,
+    }
+    if not cfglib.shape_supported(cfg0, shape):
+        record.update(status="skipped", reason="unsupported shape (see DESIGN.md §4)")
+        return record
+    cfg = cfglib.config_for_shape(cfg0, shape)
+    if kv_quant:
+        cfg = cfg.replace(kv_quant=True)
+        record["kv_quant"] = True
+    if attn_schedule == "full_blocks":
+        from repro.models import attention as _attn
+
+        _attn.CAUSAL_BLOCK_SCHEDULE = False
+    record["attn_schedule"] = attn_schedule
+    record["variant"] = (
+        "sliding_window" if cfg.layer_pattern != cfg0.layer_pattern else "native"
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    try:
+        fn, args = build_case(
+            cfg, shape, mesh,
+            aggregator=aggregator, rpca_iters=rpca_iters,
+            local_steps=local_steps, local_optimizer=local_optimizer,
+            policy=policy, microbatch=microbatch,
+        )
+        t0 = time.time()
+        with mesh:
+            lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        record.update(status="ok", lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2))
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        record["hlo_flops"] = flops
+        record["hlo_bytes"] = byts
+
+        hlo = compiled.as_text()
+        coll = rl.parse_collectives(hlo)
+        record["collectives"] = {
+            "counts": coll.counts,
+            "bytes_by_op": coll.bytes_by_op,
+            "per_chip_bytes_static": coll.total_bytes,
+            "note": "HLO-instruction (static) counts; loop bodies appear once",
+        }
+
+        # Analytic per-chip cost model (closed forms; loop-aware) — the
+        # roofline terms come from here (see costmodel.py docstring for why
+        # cost_analysis alone undercounts rolled loops).
+        from repro.launch import costmodel as cm
+
+        costs = cm.step_costs(
+            cfg,
+            cfglib.SHAPES[shape_name],
+            model_size=mesh.shape["model"],
+            client_shards=_n_clients(mesh),
+            local_steps=local_steps,
+            rpca_iters=rpca_iters,
+            aggregator=aggregator if cfglib.SHAPES[shape_name].kind == "train" else "none",
+            policy=policy,
+            attn_schedule=attn_schedule,
+        )
+        record["analytic"] = {
+            "flops_per_chip": costs.total_flops,
+            "hbm_bytes_per_chip": costs.total_hbm_bytes,
+            "collective_bytes_per_chip": costs.total_collective_bytes,
+            "flops_breakdown": costs.flops,
+            "hbm_breakdown": costs.hbm_bytes,
+            "collective_breakdown": costs.collective_bytes,
+        }
+        record["roofline"] = rl.roofline_terms(
+            costs.total_flops, costs.total_hbm_bytes, costs.total_collective_bytes, chips
+        )
+        record["roofline_static_hlo"] = rl.roofline_terms(
+            flops, byts, coll.total_bytes, chips
+        )
+
+        try:
+            ma = compiled.memory_analysis()
+            record["memory"] = {
+                k: int(getattr(ma, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            record["memory"] = {"error": str(e)}
+
+        base_s, lora_s = args[0], args[1]
+        n_params = rl.count_params(base_s) + rl.count_params(lora_s)
+        n_active = rl.count_active_params(base_s, cfg) + rl.count_params(lora_s)
+        mf = rl.model_flops(cfg, shape, n_active)
+        record.update(
+            n_params=int(n_params),
+            n_active_params=int(n_active),
+            model_flops=mf,
+            # MODEL_FLOPS / (analytic per-chip flops * chips): fraction of
+            # executed compute that is "useful" — catches remat/redundancy
+            # waste (full-block attention, recompute, RPCA overhead).
+            useful_flops_ratio=(
+                mf / (costs.total_flops * chips) if costs.total_flops else None
+            ),
+        )
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(out_dir, _fname(record, "hlo.txt")), "w") as f:
+                f.write(hlo)
+    except Exception as e:
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-4000:])
+    return record
+
+
+def _fname(record: dict, suffix: str) -> str:
+    tag = f"_{record['tag']}" if record.get("tag") else ""
+    return f"{record['arch']}_{record['shape']}_{record['mesh']}{tag}.{suffix}".replace(
+        "/", "-"
+    )
+
+
+def save_record(record: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _fname(record, "json"))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=str)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=[*cfglib.SHAPES, None],
+                    help="input shape (default: all)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--aggregator", default="fedrpca",
+                    choices=["fedavg", "task_arithmetic", "ties", "fedrpca"])
+    ap.add_argument("--rpca-iters", type=int, default=30)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--local-optimizer", default="sgd", choices=["sgd", "adam"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode shapes")
+    ap.add_argument("--attn-schedule", default="causal_half",
+                    choices=["causal_half", "full_blocks"],
+                    help="full_blocks disables the triangular flash schedule "
+                         "(pre-optimization baseline)")
+    ap.add_argument("--policy", default="tp",
+                    choices=["tp", "tp_fsdp", "dp", "ep_replicated", "moe2d"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(cfglib.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(cfglib.SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    any_fail = False
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(
+                    arch, shape, mp,
+                    aggregator=args.aggregator, rpca_iters=args.rpca_iters,
+                    local_steps=args.local_steps, local_optimizer=args.local_optimizer,
+                    save_hlo=args.save_hlo, out_dir=args.out, tag=args.tag,
+                    policy=args.policy, microbatch=args.microbatch,
+                    kv_quant=args.kv_quant, attn_schedule=args.attn_schedule,
+                )
+                path = save_record(rec, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} comp={r['compute_s']:.3e}s "
+                             f"mem={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                             f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+                elif status == "error":
+                    any_fail = True
+                    extra = " " + rec["error"]
+                print(f"[{status:7s}] {arch} x {shape} x {rec['mesh']}{extra}", flush=True)
+                if status == "ok":
+                    mem = rec.get("memory", {})
+                    if "argument_size_in_bytes" in mem:
+                        per = (mem["argument_size_in_bytes"] + mem.get("temp_size_in_bytes", 0))
+                        print(f"          args+temp per device: {per/2**30:.2f} GiB", flush=True)
+    raise SystemExit(1 if any_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+``--xla_force_host_platform_device_count=512`` before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) = 256 chips (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape: Tuple[int, ...] = (1, 1), axes=("data", "model")) -> Mesh:
+    """1-device mesh for CPU smoke runs of the mesh code path."""
+    return jax.make_mesh(shape, axes)
+
+
+def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def mesh_config_of(mesh: Mesh) -> MeshConfig:
+    return MeshConfig(multi_pod="pod" in mesh.axis_names)

@@ -1,0 +1,31 @@
+from repro.models.model import (
+    decode_step,
+    encode,
+    extend_caches,
+    forward,
+    init_decode_caches,
+    init_lora_params,
+    init_params,
+    loss_fn,
+)
+from repro.models import attention, blocks, ffn, kvcache, layers, moe, partitioning, rglru, ssd
+
+__all__ = [
+    "decode_step",
+    "extend_caches",
+    "encode",
+    "forward",
+    "init_decode_caches",
+    "init_lora_params",
+    "init_params",
+    "loss_fn",
+    "attention",
+    "blocks",
+    "ffn",
+    "kvcache",
+    "layers",
+    "moe",
+    "partitioning",
+    "rglru",
+    "ssd",
+]

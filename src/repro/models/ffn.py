@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    if kind in ("swiglu", "geglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "gate": layers.init_dense(k1, d_model, d_ff, dtype=dtype),
+            "up": layers.init_dense(k2, d_model, d_ff, dtype=dtype),
+            "down": layers.init_dense(k3, d_ff, d_model, dtype=dtype),
+        }
+    if kind == "gelu":
+        k1, k2 = jax.random.split(key)
+        return {
+            "up": layers.init_dense(k1, d_model, d_ff, bias=True, dtype=dtype),
+            "down": layers.init_dense(k2, d_ff, d_model, bias=True, dtype=dtype),
+        }
+    raise ValueError(kind)
+
+
+def apply_ffn(params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(layers.dense(x, params["gate"])) * layers.dense(x, params["up"])
+        return layers.dense(h, params["down"])
+    if kind == "geglu":
+        h = layers.gelu(layers.dense(x, params["gate"])) * layers.dense(x, params["up"])
+        return layers.dense(h, params["down"])
+    if kind == "gelu":
+        return layers.dense(layers.gelu(layers.dense(x, params["up"])), params["down"])
+    raise ValueError(kind)

@@ -1,0 +1,65 @@
+"""KV-cache / recurrent-state containers for decode (+ int8 quantization).
+
+Quantized caches store int8 mantissas with a per-(token, kv-head) fp16
+scale — 0.53x the bytes of a bf16 cache.  Decode is memory-bound on the
+cache read (EXPERIMENTS.md §Roofline), so this is a ~1.9x decode-step win
+at <0.5% attention-score error (tests/test_models.py::TestKVQuant).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_cache, n_kv, head_dim)
+    v: jnp.ndarray
+
+
+class QuantKVCache(NamedTuple):
+    k_q: jnp.ndarray  # int8 (B, S_cache, n_kv, head_dim)
+    v_q: jnp.ndarray
+    k_scale: jnp.ndarray  # f16 (B, S_cache, n_kv, 1)
+    v_scale: jnp.ndarray
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # (B, n_heads, head_dim, state)
+    conv: jnp.ndarray  # (B, conv_width - 1, conv_dim)
+
+
+class LRUState(NamedTuple):
+    h: jnp.ndarray  # (B, lru_width)
+    conv: jnp.ndarray  # (B, conv_width - 1, lru_width)
+
+
+AnyKVCache = Union[KVCache, QuantKVCache]
+
+
+def attn_cache(batch: int, length: int, n_kv: int, head_dim: int, dtype,
+               quantized: bool = False) -> AnyKVCache:
+    shape = (batch, length, n_kv, head_dim)
+    if quantized:
+        sshape = (batch, length, n_kv, 1)
+        return QuantKVCache(
+            k_q=jnp.zeros(shape, jnp.int8),
+            v_q=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(sshape, jnp.float16),
+            v_scale=jnp.zeros(sshape, jnp.float16),
+        )
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def quantize_kv(x: jnp.ndarray):
+    """Symmetric per-(token, head) int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (amax / 127.0).astype(jnp.float16)
+    q = jnp.round(
+        x.astype(jnp.float32) / jnp.maximum(scale.astype(jnp.float32), 1e-8)
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

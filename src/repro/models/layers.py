@@ -1,0 +1,159 @@
+"""Shared primitive layers: norms, rotary embeddings, dense+LoRA projection.
+
+Everything is a pure function over explicit parameter pytrees (no flax
+offline).  Parameter initializers live next to the apply functions so model
+assembly in ``model.py`` stays declarative.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense projection with optional LoRA adapter
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_lora(key, d_in: int, d_out: int, rank: int, dtype=jnp.float32):
+    """LoRA pair.  Convention: delta_W = A @ B with A:(d_in,r), B:(r,d_out);
+    B starts at zero (standard LoRA init) so the adapter is a no-op at t=0."""
+    ka, _ = jax.random.split(key)
+    return {
+        "A": jax.random.normal(ka, (d_in, rank), dtype) / math.sqrt(d_in),
+        "B": jnp.zeros((rank, d_out), dtype),
+    }
+
+
+def dense(x: jnp.ndarray, params, lora=None, lora_scale: float = 1.0) -> jnp.ndarray:
+    """y = x @ W (+ b) (+ s * (x @ A) @ B).
+
+    The LoRA path deliberately computes ``(x A) B`` (never materializing
+    ``A B``) — rank is tiny so this adds 2*r*(d_in+d_out) FLOPs per token.
+    On TPU the fused ``repro.kernels.lora_matmul`` kernel implements the same
+    contraction in one VMEM pass.
+    """
+    w = params["w"]
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    if lora is not None:
+        a = lora["A"].astype(x.dtype)
+        b = lora["B"].astype(x.dtype)
+        y = y + lora_scale * jnp.einsum("...r,ro->...o", jnp.einsum("...i,ir->...r", x, a), b)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE / partial RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, rope_pct: float = 1.0) -> jnp.ndarray:
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (theta**exponent)  # (rot_dim/2,)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    rope_pct: float = 1.0,
+) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32.  Rotates the first
+    ``rope_pct`` fraction of the head dim (stablelm partial rotary)."""
+    b, s, h, dh = x.shape
+    inv_freq = rope_frequencies(dh, theta, rope_pct)
+    rot = inv_freq.shape[0] * 2
+    angles = positions[..., None].astype(jnp.float32) * inv_freq[None, None, :]  # (B,S,R/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2 :]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, x_pass], axis=-1)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_3d: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, Dh); positions_3d: (3, B, S) — temporal / height / width
+    position streams.  ``sections`` gives the number of *frequency pairs* per
+    axis; sum(sections) == Dh // 2.  Text tokens carry identical t/h/w
+    positions, which makes M-RoPE collapse to 1-D RoPE for them (the paper's
+    compatibility property).
+    """
+    b, s, h, dh = x.shape
+    assert sum(sections) == dh // 2, (sections, dh)
+    inv_freq = rope_frequencies(dh, theta)  # (Dh/2,)
+    # Build per-frequency position ids by interleaving the 3 axes per section.
+    section_ids = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )  # (Dh/2,) in {0,1,2}
+    pos = positions_3d.astype(jnp.float32)  # (3, B, S)
+    pos_per_freq = jnp.take(pos, section_ids, axis=0)  # (Dh/2, B, S) -> gather axis0
+    pos_per_freq = jnp.transpose(pos_per_freq, (1, 2, 0))  # (B, S, Dh/2)
+    angles = pos_per_freq * inv_freq[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc activations
+# ---------------------------------------------------------------------------
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-style logit soft-capping; identity when cap == 0."""
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x

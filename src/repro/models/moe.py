@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Expert-parallel design (DESIGN.md §7): expert weights are sharded over the
+``model`` mesh axis (leading expert dim), tokens over the client/data axes.
+Dispatch uses a scatter-add into an (E, C, D) buffer and a gather back —
+under GSPMD the cross-shard movement lowers to all-to-all-style collectives,
+which the roofline collective term accounts for.
+
+The router is jointly trained in full fine-tuning, but in the federated LoRA
+setting (the paper's) routers/experts are *frozen* base weights and only the
+attention LoRA adapters train; the aux load-balance loss is still computed so
+full-model training is supported by the framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": layers.init_dense(kr, d_model, n_experts, dtype=jnp.float32),
+        # Expert-stacked SwiGLU weights: leading axis = expert (model-sharded).
+        "gate": jax.random.uniform(kg, (n_experts, d_model, d_ff), dtype, -scale_in, scale_in),
+        "up": jax.random.uniform(ku, (n_experts, d_model, d_ff), dtype, -scale_in, scale_in),
+        "down": jax.random.uniform(kd, (n_experts, d_ff, d_model), dtype, -scale_out, scale_out),
+    }
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, capacity_factor: float) -> int:
+    cap = int(math.ceil(n_tokens * top_k * capacity_factor / n_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly tiling
+
+
+def apply_moe(
+    params,
+    x: jnp.ndarray,  # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    n_experts = params["gate"].shape[0]
+    t = b * s
+    xt = jnp.reshape(x, (t, d))
+
+    logits = layers.dense(xt.astype(jnp.float32), params["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)  # (T, K)
+    # Renormalize combine weights over the selected experts (std practice).
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    dispatch_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, n_experts, dtype=jnp.float32), axis=1), axis=0
+    )
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(dispatch_frac * mean_prob)
+
+    capacity = _capacity(t, top_k, n_experts, capacity_factor)
+
+    # Position of each (token, k) entry within its expert's capacity buffer.
+    flat_e = jnp.reshape(top_e, (t * top_k,))
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*K, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.sum(pos_all * onehot, axis=-1)  # (T*K,)
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos, n_experts * capacity)  # drop slot
+
+    # Scatter tokens into the (E*C + 1, D) dispatch buffer (last row = dropped).
+    token_idx = jnp.repeat(jnp.arange(t), top_k)
+    buf = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].add(xt[token_idx] if top_k > 1 else xt)
+    expert_in = jnp.reshape(buf[: n_experts * capacity], (n_experts, capacity, d))
+
+    # Expert SwiGLU, batched over the expert axis (einsum keeps E sharded).
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["up"].astype(x.dtype))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["down"].astype(x.dtype))
+
+    # Gather back and combine with router weights.
+    flat_out = jnp.reshape(expert_out, (n_experts * capacity, d))
+    flat_out = jnp.concatenate([flat_out, jnp.zeros((1, d), x.dtype)], axis=0)
+    per_k = flat_out[slot]  # (T*K, D); dropped entries pull zeros
+    weights = jnp.reshape(top_p, (t * top_k,)).astype(x.dtype)
+    combined = jnp.reshape(per_k * weights[:, None], (t, top_k, d)).sum(axis=1)
+    return jnp.reshape(combined, (b, s, d)), aux

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+
+    r_t = sigmoid(W_a y_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+The linear recurrence is evaluated with ``lax.associative_scan`` (log-depth)
+for train/prefill and a single fused step for decode.  The surrounding block
+is Griffin's: dual input projections (main + GeLU gate), a width-4 causal
+depthwise conv on the main branch, RG-LRU, gating, and an output projection.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.kvcache import LRUState
+
+_C = 8.0
+
+
+def lru_width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    w = lru_width(cfg)
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) spans ~(0.9, 0.999).
+    lam = jnp.linspace(-4.0, -1.0, w)
+    return {
+        "proj_x": layers.init_dense(k1, d, w, dtype=dtype),
+        "proj_gate": layers.init_dense(k2, d, w, dtype=dtype),
+        "conv_w": jax.random.normal(k3, (cfg.conv_width, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": layers.init_dense(k4, w, w, bias=True, dtype=dtype),
+        "gate_x": layers.init_dense(k5, w, w, bias=True, dtype=dtype),
+        "lambda": lam.astype(jnp.float32),
+        "out_proj": layers.init_dense(k6, w, d, dtype=dtype),
+    }
+
+
+def _gates(params, y: jnp.ndarray):
+    r = jax.nn.sigmoid(layers.dense(y, params["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(y, params["gate_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lambda"])[None, None, :] * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * y.astype(jnp.float32))
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over the seq axis."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = h + a_sc * h0[:, None, :]
+    return h
+
+
+def apply_rglru(
+    params,
+    lora,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg,
+    *,
+    state: LRUState | None = None,
+    lora_scale: float = 1.0,
+    return_state: bool = False,
+) -> Tuple[jnp.ndarray, LRUState | None]:
+    lora = lora or {}
+    y = layers.dense(x, params["proj_x"], lora.get("q"), lora_scale)
+    gate = layers.gelu(layers.dense(x, params["proj_gate"]))
+
+    new_state = state
+    if state is None:
+        conv_tail = None
+        if return_state:
+            conv_tail = y[:, -(params["conv_w"].shape[0] - 1):, :]
+            short = params["conv_w"].shape[0] - 1 - conv_tail.shape[1]
+            if short > 0:
+                conv_tail = jnp.pad(conv_tail, ((0, 0), (short, 0), (0, 0)))
+        # Causal depthwise conv (width 4).
+        k = params["conv_w"].shape[0]
+        yp = jnp.pad(y, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(
+            yp[:, i : i + y.shape[1], :] * params["conv_w"][i][None, None, :] for i in range(k)
+        )
+        y = conv + params["conv_b"][None, None, :]
+        a, b = _gates(params, y)
+        h_all = rglru_scan(a, b, None)
+        h = h_all.astype(x.dtype)
+        if return_state:
+            new_state = LRUState(h=h_all[:, -1], conv=conv_tail)
+    else:
+        conv_in = jnp.concatenate([state.conv, y], axis=1)  # (B, K, W)
+        y1 = jnp.einsum("bkw,kw->bw", conv_in, params["conv_w"]) + params["conv_b"]
+        a, b = _gates(params, y1[:, None, :])
+        h1 = a[:, 0] * state.h + b[:, 0]
+        h = h1[:, None].astype(x.dtype)
+        new_state = LRUState(h=h1, conv=conv_in[:, 1:])
+
+    out = layers.dense(h * gate, params["out_proj"], lora.get("v"), lora_scale)
+    return out, new_state
+
+
+def init_lru_state(batch: int, cfg, dtype=jnp.float32) -> LRUState:
+    w = lru_width(cfg)
+    return LRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    )

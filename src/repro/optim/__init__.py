@@ -1,0 +1,13 @@
+from repro.optim.optimizers import Optimizer, adam, adamw, make_optimizer, sgd
+from repro.optim.schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "make_optimizer",
+    "sgd",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

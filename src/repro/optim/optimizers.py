@@ -1,0 +1,108 @@
+"""From-scratch optimizers (no optax offline): SGD / Adam / AdamW.
+
+Each optimizer is an ``Optimizer(init, update)`` pair of pure functions over
+parameter pytrees, mirroring the optax GradientTransformation contract:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The federated client loop scans ``update`` over local minibatches.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state["mu"], grads)
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            return updates, {"step": step + 1, "mu": mu}
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p=None):
+            u = -(lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay and params is not None:
+            updates = jax.tree_util.tree_map(upd, m, v, params)
+        else:
+            updates = jax.tree_util.tree_map(upd, m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, 0.0)
+
+
+def adamw(
+    lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.1
+) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay or 0.1)
+    raise ValueError(f"unknown optimizer {name!r}")

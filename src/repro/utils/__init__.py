@@ -1,0 +1,31 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_mean,
+    tree_dot,
+    tree_norm,
+    tree_cast,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_flatten_to_vector",
+    "tree_unflatten_from_vector",
+    "tree_zeros_like",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_mean",
+    "tree_dot",
+    "tree_norm",
+    "tree_cast",
+    "get_logger",
+]

@@ -1,0 +1,97 @@
+"""Pytree utilities used across the framework.
+
+These are intentionally dependency-free (no optax/flax offline): the federated
+runtime treats model/LoRA parameters as plain pytrees of jnp arrays and needs
+elementwise arithmetic, flattening-to-vector (for the paper's ``vec(.)``
+stacking) and sizing helpers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree (works on ShapeDtypeStructs too)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_flatten_to_vector(tree: PyTree) -> jnp.ndarray:
+    """``vec(.)`` over a whole pytree: concatenate raveled leaves.
+
+    Leaf order is the canonical tree_leaves order, so it is stable for a fixed
+    tree structure and invertible via :func:`tree_unflatten_from_vector`.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype=jnp.float32)
+    return jnp.concatenate([jnp.ravel(x) for x in leaves])
+
+
+def tree_unflatten_from_vector(vector: jnp.ndarray, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_to_vector` given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    offset = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(jnp.reshape(vector[offset : offset + n], leaf.shape).astype(leaf.dtype))
+        offset += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _binary(fn: Callable) -> Callable:
+    @functools.wraps(fn)
+    def wrapped(a: PyTree, b: PyTree) -> PyTree:
+        return jax.tree_util.tree_map(fn, a, b)
+
+    return wrapped
+
+
+tree_add = _binary(lambda a, b: a + b)
+tree_sub = _binary(lambda a, b: a - b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_mean(trees: list[PyTree]) -> PyTree:
+    """Elementwise mean over a list of pytrees with identical structure."""
+    n = len(trees)
+    acc = trees[0]
+    for t in trees[1:]:
+        acc = tree_add(acc, t)
+    return tree_scale(acc, 1.0 / n)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    parts = jax.tree_util.tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    leaves = jax.tree_util.tree_leaves(parts)
+    return functools.reduce(lambda x, y: x + y, leaves)
+
+
+def tree_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run single-device CPU (the dry-run owns the 512-device trick in its
+# own process — never set xla_force_host_platform_device_count here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,116 @@
+"""Per-assigned-architecture smoke tests (reduced family variants on CPU).
+
+Each of the 10 assigned architectures instantiates a REDUCED config of the
+same family (<= 2 pattern units, d_model <= 512, <= 4 experts) and runs one
+forward + one federated train step, asserting output shapes and no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.core import AggregatorConfig
+from repro.launch import steps as steps_lib
+from repro.models import forward, init_lora_params, init_params, loss_fn
+from repro.utils.pytree import tree_norm, tree_sub
+
+ARCHS = list(cfglib.ARCH_IDS)
+
+
+def reduced_batch(cfg, key, b=2, s=16):
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (b, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.frontend == "audio":
+        batch["encoder_frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_reduced_constraints(self, arch):
+        cfg = cfglib.get_config(arch).reduced()
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4
+        assert cfg.n_layers <= 2 * max(len(cfg.layer_pattern), 1) + len(cfg.layer_pattern)
+
+    def test_forward_step(self, arch):
+        cfg = cfglib.get_config(arch).reduced()
+        key = jax.random.PRNGKey(0)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        batch = reduced_batch(cfg, key)
+        logits, _, _ = forward(params, lora, batch, cfg, mode="train", remat=False)
+        assert logits.shape == (2, 16, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+    def test_fed_train_step(self, arch):
+        """One federated round (2 clients, FedRPCA) moves the global LoRA."""
+        cfg = cfglib.get_config(arch).reduced()
+        key = jax.random.PRNGKey(1)
+        base = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        m, per, s = 2, 2, 16
+        batch = {
+            "tokens": jax.random.randint(key, (m, per, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (m, per, s), 0, cfg.vocab_size),
+        }
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = jax.random.normal(
+                key, (m, per, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.frontend == "audio":
+            batch["encoder_frames"] = jax.random.normal(
+                key, (m, per, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        step = steps_lib.make_fed_train_step(
+            cfg, AggregatorConfig(method="fedrpca", rpca_iters=10),
+            local_lr=1e-3, local_steps=1, remat=False,
+        )
+        new_lora, metrics = step(base, lora, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        moved = float(tree_norm(tree_sub(new_lora, lora)))
+        assert moved > 0, f"{arch}: aggregation produced a zero update"
+        for leaf in jax.tree_util.tree_leaves(new_lora):
+            assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_fields(arch):
+    """The full (assigned) configs match the assignment table."""
+    cfg = cfglib.get_config(arch)
+    table = {
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "mamba2-130m": (24, 768, None, None, 0, 50280),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+    }
+    layers, d, h, kv, ff, vocab = table[arch]
+    assert cfg.n_layers == layers and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab_size == vocab
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.source, "config must cite its source"
+    if arch == "llama4-maverick-400b-a17b":
+        assert cfg.n_experts == 128 and cfg.top_k == 1
+    if arch == "granite-moe-1b-a400m":
+        assert cfg.n_experts == 32 and cfg.top_k == 8
+    if arch == "mamba2-130m":
+        assert cfg.ssm_state == 128
+    if arch == "gemma-7b":
+        assert cfg.head_dim == 256

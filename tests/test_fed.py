@@ -1,0 +1,165 @@
+"""Federated runtime: local methods, server rounds, paper-claim directions."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorConfig
+from repro.fed import FedRunConfig, LocalSpec, rounds_to_reach, run_simulation, synth
+from repro.fed.client import make_local_fn
+from repro.optim import make_optimizer
+from repro.utils.pytree import tree_norm, tree_sub, tree_zeros_like
+
+
+@pytest.fixture(scope="module")
+def task():
+    return synth.make_synth_task(n_clients=12, n_per_client=48, alpha=0.3, seed=1)
+
+
+def spec_for(task, **kw):
+    loss = lambda base, lora, batch: synth.loss_fn(base, lora, batch, task.lora_scale)
+    defaults = dict(
+        loss_fn=loss,
+        optimizer=make_optimizer("adam", 1e-2),
+        local_steps=6,
+        batch_size=24,
+        lr=1e-2,
+        feature_fn=lambda base, lora, x: synth.features(base, lora, x, task.lora_scale),
+    )
+    defaults.update(kw)
+    return LocalSpec(**defaults)
+
+
+def run(task, method="fedavg", rounds=15, seed=0, spec=None, **agg_kw):
+    cfg = FedRunConfig(
+        aggregator=AggregatorConfig(method=method, rpca_iters=40, **agg_kw),
+        local=spec or spec_for(task),
+        rounds=rounds,
+        seed=seed,
+    )
+    eval_fn = lambda lora: synth.accuracy(
+        task.base, lora, task.test_x, task.test_y, task.lora_scale
+    )
+    return run_simulation(
+        task.base, synth.init_lora(task), task.client_x, task.client_y, cfg, eval_fn
+    )
+
+
+class TestLocal:
+    def test_fedprox_pulls_toward_global(self, task):
+        base = task.base
+        lora0 = synth.init_lora(task)
+        zeros = tree_zeros_like(lora0)
+        res = {}
+        for mu in (0.0, 10.0):
+            fn = make_local_fn(spec_for(task, fedprox_mu=mu))
+            out = fn(base, lora0, task.client_x[0], task.client_y[0],
+                     jax.random.PRNGKey(0), zeros, zeros, lora0)
+            res[mu] = float(tree_norm(out.delta))
+        assert res[10.0] < res[0.0]
+
+    def test_scaffold_variates_update(self, task):
+        lora0 = synth.init_lora(task)
+        zeros = tree_zeros_like(lora0)
+        fn = make_local_fn(spec_for(task, scaffold=True))
+        out = fn(task.base, lora0, task.client_x[0], task.client_y[0],
+                 jax.random.PRNGKey(0), zeros, zeros, lora0)
+        assert float(tree_norm(out.new_ci)) > 0
+
+    def test_moon_loss_finite(self, task):
+        lora0 = synth.init_lora(task)
+        zeros = tree_zeros_like(lora0)
+        fn = make_local_fn(spec_for(task, moon_mu=1.0))
+        out = fn(task.base, lora0, task.client_x[0], task.client_y[0],
+                 jax.random.PRNGKey(0), zeros, zeros, lora0)
+        assert np.isfinite(float(out.final_loss))
+
+
+class TestSimulation:
+    def test_fedavg_learns(self, task):
+        _, hist = run(task, "fedavg", rounds=12)
+        zero_shot = float(synth.accuracy(task.base, synth.init_lora(task),
+                                         task.test_x, task.test_y, task.lora_scale))
+        assert hist[-1] > zero_shot + 0.05
+
+    def test_fedrpca_not_worse_than_fedavg(self, task):
+        """Paper Table 1 direction (planted synthetic analogue)."""
+        _, h_avg = run(task, "fedavg", rounds=15)
+        _, h_rpca = run(task, "fedrpca", rounds=15)
+        assert h_rpca[-1] >= h_avg[-1] - 0.01, (h_rpca[-1], h_avg[-1])
+
+    def test_all_methods_run(self, task):
+        for method in ("fedavg", "task_arithmetic", "ties", "fedrpca"):
+            _, hist = run(task, method, rounds=3)
+            assert np.isfinite(hist).all(), method
+
+    def test_scaffold_composes_with_fedrpca(self, task):
+        """Paper Fig. 5: client-level methods compose with the aggregator."""
+        spec = spec_for(task, scaffold=True)
+        _, hist = run(task, "fedrpca", rounds=4, spec=spec)
+        assert np.isfinite(hist).all()
+
+    def test_rounds_to_reach(self):
+        hist = np.asarray([0.1, 0.5, 0.8, 0.85, 0.9])
+        # target = 0.9 * 0.9 = 0.81; first round reaching it is #4 (0.85).
+        assert rounds_to_reach(hist, 0.9) == 4
+
+
+class TestPartition:
+    def test_dirichlet_covers_all(self, rng):
+        from repro.fed.partition import dirichlet_partition
+
+        labels = rng.integers(0, 10, size=2000)
+        parts = dirichlet_partition(labels, 8, alpha=0.3, rng=rng)
+        joined = np.concatenate(parts)
+        assert len(joined) == 2000 and len(np.unique(joined)) == 2000
+
+    def test_lower_alpha_more_skew(self, rng):
+        from repro.fed.partition import dirichlet_partition, label_distribution
+
+        labels = rng.integers(0, 10, size=8000)
+
+        def skew(alpha):
+            parts = dirichlet_partition(labels, 10, alpha=alpha,
+                                        rng=np.random.default_rng(0))
+            dist = label_distribution(labels, parts, 10)
+            return np.mean(np.max(dist, axis=1))  # avg dominant-class share
+
+        assert skew(0.1) > skew(10.0)
+
+
+class TestPartialParticipation:
+    def test_subsampled_round_runs(self, task):
+        from repro.fed import FedRunConfig
+        from repro.core import AggregatorConfig
+
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedrpca", rpca_iters=20),
+            local=spec_for(task), rounds=4, seed=0, clients_per_round=5,
+        )
+        eval_fn = lambda lora: synth.accuracy(
+            task.base, lora, task.test_x, task.test_y, task.lora_scale
+        )
+        _, hist = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y, cfg, eval_fn
+        )
+        assert np.isfinite(hist).all()
+
+    def test_subsampled_scaffold(self, task):
+        from repro.fed import FedRunConfig
+        from repro.core import AggregatorConfig
+
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedavg"),
+            local=spec_for(task, scaffold=True), rounds=3, seed=1,
+            clients_per_round=4,
+        )
+        eval_fn = lambda lora: synth.accuracy(
+            task.base, lora, task.test_x, task.test_y, task.lora_scale
+        )
+        _, hist = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y, cfg, eval_fn
+        )
+        assert np.isfinite(hist).all()

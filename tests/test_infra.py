@@ -1,0 +1,140 @@
+"""Substrate: optimizers, checkpointing, configs, pytree utils, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs as cfglib
+from repro.checkpoint import load_pytree, restore_checkpoint, save_checkpoint, save_pytree
+from repro.config import MeshConfig, model_config_from_json, to_json
+from repro.data import client_lm_datasets, make_lm_batches, make_lm_data
+from repro.optim import adam, adamw, make_optimizer, sgd
+from repro.optim.optimizers import apply_updates
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_norm,
+    tree_size,
+    tree_unflatten_from_vector,
+)
+
+
+class TestOptim:
+    @pytest.mark.parametrize("name", ["sgd", "adam", "adamw"])
+    def test_minimizes_quadratic(self, name):
+        opt = make_optimizer(name, 0.1)
+        params = {"x": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)
+        for _ in range(150):
+            g = jax.grad(loss)(params)
+            upd, state = opt.update(g, state, params)
+            params = apply_updates(params, upd)
+        assert float(loss(params)) < 1e-2
+
+    def test_adam_bias_correction_first_step(self):
+        opt = adam(1.0)
+        params = {"x": jnp.asarray([0.0])}
+        state = opt.init(params)
+        upd, _ = opt.update({"x": jnp.asarray([0.5])}, state, params)
+        # First Adam step is ~ -lr * sign(grad)
+        np.testing.assert_allclose(upd["x"], [-1.0], atol=1e-4)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng):
+        tree = {
+            "a": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(3,)), jnp.bfloat16)},
+            "d": jnp.asarray([1, 2, 3], jnp.int32),
+        }
+        path = os.path.join(tmp_path, "ck.msgpack")
+        save_pytree(tree, path, {"note": "x"})
+        restored, meta = load_pytree(path, tree)
+        assert meta["note"] == "x"
+        for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+    def test_retention(self, tmp_path, rng):
+        tree = {"a": jnp.zeros((2,))}
+        for step in range(6):
+            save_checkpoint(tree, str(tmp_path), step, keep=3)
+        restored, meta = restore_checkpoint(str(tmp_path), tree)
+        assert meta["step"] == 5
+        dirs = sorted(os.listdir(tmp_path))
+        assert len(dirs) == 3
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_pytree({"a": jnp.zeros((2,))}, os.path.join(tmp_path, "x.msgpack"))
+        with pytest.raises(ValueError):
+            load_pytree(os.path.join(tmp_path, "x.msgpack"), {"a": jnp.zeros((3,))})
+
+
+class TestConfigs:
+    def test_json_roundtrip(self):
+        cfg = cfglib.get_config("gemma-7b")
+        cfg2 = model_config_from_json(to_json(cfg))
+        assert cfg2 == cfg
+
+    def test_mesh_config(self):
+        single, multi = MeshConfig(False), MeshConfig(True)
+        assert single.n_devices == 256 and multi.n_devices == 512
+        assert single.n_clients == 16 and multi.n_clients == 32
+
+    def test_shape_support_matrix(self):
+        n = 0
+        for arch in cfglib.ARCH_IDS:
+            cfg = cfglib.get_config(arch)
+            for shape in cfglib.SHAPES.values():
+                if cfglib.shape_supported(cfg, shape):
+                    n += 1
+        assert n == 39  # 10 x 4 minus whisper long_500k
+
+    def test_long500k_variant_subquadratic(self):
+        for arch in cfglib.ARCH_IDS:
+            cfg = cfglib.get_config(arch)
+            shape = cfglib.SHAPES["long_500k"]
+            if not cfglib.shape_supported(cfg, shape):
+                continue
+            variant = cfglib.config_for_shape(cfg, shape)
+            assert variant.is_subquadratic, arch
+
+    def test_input_specs_no_allocation(self):
+        for arch in cfglib.ARCH_IDS:
+            cfg = cfglib.get_config(arch)
+            for shape in cfglib.SHAPES.values():
+                if not cfglib.shape_supported(cfg, shape):
+                    continue
+                specs = cfglib.input_specs(cfg, shape, n_clients=16)
+                for leaf in jax.tree_util.tree_leaves(specs):
+                    assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+class TestData:
+    def test_lm_batches(self):
+        data = make_lm_data(vocab_size=64, n_seqs=10, seq_len=32)
+        it = make_lm_batches(data, batch_size=4)
+        batch = next(it)
+        assert batch["tokens"].shape == (4, 32) and batch["labels"].shape == (4, 32)
+        np.testing.assert_array_equal(batch["labels"][:, :-1], batch["tokens"][:, 1:])
+
+    def test_client_heterogeneity(self):
+        tokens, test = client_lm_datasets(3, vocab_size=32, n_seqs=8, seq_len=16,
+                                          heterogeneity=0.9)
+        assert tokens.shape == (3, 8, 17)
+        assert (tokens < 32).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(1, 20), min_size=1, max_size=5))
+def test_flatten_roundtrip(sizes):
+    rng = np.random.default_rng(0)
+    tree = {f"k{i}": jnp.asarray(rng.normal(size=(s,)), jnp.float32) for i, s in enumerate(sizes)}
+    vec = tree_flatten_to_vector(tree)
+    assert vec.shape == (sum(sizes),)
+    back = tree_unflatten_from_vector(vec, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(a, b)
+    assert tree_size(tree) == sum(sizes)

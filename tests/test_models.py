@@ -1,0 +1,212 @@
+"""Model substrate: family forwards, attention equivalences, decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.models import (
+    decode_step,
+    extend_caches,
+    forward,
+    init_lora_params,
+    init_params,
+    loss_fn,
+)
+from repro.models.attention import flash_attention, naive_attention
+
+
+def make(name, **kw):
+    base = dict(
+        name=name, arch_type="dense", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=97, dtype="float32",
+        lora=LoRAConfig(rank=4),
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": make("dense"),
+    "moe": make("moe", n_experts=4, top_k=2),
+    "ssm": make("ssm", layer_pattern=("ssd",), d_ff=0, ssm_state=16, ssm_head_dim=16,
+                ssm_chunk=8),
+    "hybrid": make("hybrid", layer_pattern=("rglru", "rglru", "local_attn"), n_layers=5,
+                   lru_width=64, window_size=8, n_kv_heads=1),
+    "encdec": make("encdec", encoder_decoder=True, n_encoder_layers=2, encoder_seq=12,
+                   norm_kind="layernorm", ffn_kind="gelu", qkv_bias=True, n_kv_heads=4),
+    "vlm": make("vlm", mrope=True, mrope_sections=(2, 3, 3), frontend="vision",
+                n_vision_tokens=4),
+}
+
+
+def batch_for(cfg, key, b=2, s=16):
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.encoder_decoder:
+        batch["encoder_frames"] = jax.random.normal(key, (b, cfg.encoder_seq, cfg.d_model))
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jax.random.normal(key, (b, cfg.n_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+class TestFamilies:
+    def test_forward_and_loss(self, family):
+        cfg = FAMILIES[family]
+        key = jax.random.PRNGKey(0)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        batch = batch_for(cfg, key)
+        logits, _, _ = forward(params, lora, batch, cfg, mode="train")
+        assert logits.shape == (2, 16, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+        loss, parts = loss_fn(params, lora, batch, cfg)
+        assert np.isfinite(float(loss))
+
+    def test_lora_zero_b_is_noop(self, family):
+        """Fresh LoRA (B=0) must not change the base model's output."""
+        cfg = FAMILIES[family]
+        key = jax.random.PRNGKey(1)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        batch = batch_for(cfg, key)
+        with_lora, _, _ = forward(params, lora, batch, cfg, mode="train")
+        without, _, _ = forward(params, None, batch, cfg, mode="train")
+        np.testing.assert_allclose(with_lora, without, atol=1e-5)
+
+    def test_lora_grads_nonzero(self, family):
+        cfg = FAMILIES[family]
+        key = jax.random.PRNGKey(2)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        batch = batch_for(cfg, key)
+        g = jax.grad(lambda l: loss_fn(params, l, batch, cfg)[0])(lora)
+        norms = [float(jnp.linalg.norm(x)) for x in jax.tree_util.tree_leaves(g)]
+        assert sum(norms) > 0
+
+    def test_decode_matches_forward(self, family):
+        """prefill(tokens[:t]) + decode(token t) == forward(tokens[:t+1])[-1]."""
+        cfg = FAMILIES[family]
+        if cfg.n_experts:
+            # Capacity-based MoE drops tokens under skewed routing; parity
+            # needs a no-drop capacity factor (drops are an accepted
+            # approximation in training, not a decode bug).
+            cfg = cfg.replace(capacity_factor=8.0)
+        key = jax.random.PRNGKey(3)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        b, s = 2, 12
+        batch = batch_for(cfg, key, b=b, s=s)
+        full, _, _ = forward(params, lora, batch, cfg, mode="train", remat=False)
+
+        prefix = dict(batch)
+        prefix["tokens"] = batch["tokens"][:, : s - 1]
+        prefix.pop("labels")
+        _, caches, _ = forward(params, lora, prefix, cfg, mode="prefill", remat=False)
+        caches = extend_caches(caches, 4, cfg)
+        logits, _ = decode_step(
+            params, lora, batch["tokens"][:, s - 1 : s], caches,
+            jnp.asarray(s - 1, jnp.int32), cfg,
+        )
+        np.testing.assert_allclose(logits[:, 0], full[:, -1], atol=2e-3, rtol=1e-3)
+
+
+class TestAttention:
+    def test_flash_matches_naive_causal(self, rng):
+        q = jnp.asarray(rng.normal(size=(2, 256, 2, 2, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, 256, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, 256, 2, 16)), jnp.float32)
+        a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        b = naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+    def test_flash_matches_naive_window(self, rng):
+        q = jnp.asarray(rng.normal(size=(1, 200, 1, 4, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 200, 1, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 200, 1, 16)), jnp.float32)
+        a = flash_attention(q, k, v, causal=True, window=32, block_q=64, block_k=64)
+        b = naive_attention(q, k, v, causal=True, window=32)
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+    def test_flash_non_divisible_lengths(self, rng):
+        q = jnp.asarray(rng.normal(size=(1, 130, 1, 1, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 130, 1, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 130, 1, 8)), jnp.float32)
+        a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+        b = naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+
+class TestSSDInternals:
+    def test_chunked_matches_sequential(self, rng):
+        from repro.kernels.ref import ssd_scan_ref
+        from repro.models.ssd import ssd_chunked
+
+        bsz, s, h, p, n = 1, 48, 2, 8, 4
+        x = jnp.asarray(rng.normal(size=(bsz, s, h, p)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(rng.normal(size=(bsz, s, h)), jnp.float32)) * 0.1 + 0.01
+        a_log = jnp.asarray(np.log([1.0, 2.0]), jnp.float32)
+        bm = jnp.asarray(rng.normal(size=(bsz, s, n)), jnp.float32)
+        cm = jnp.asarray(rng.normal(size=(bsz, s, n)), jnp.float32)
+        y, _ = ssd_chunked(x, dt, a_log, bm, cm, jnp.zeros((h,)), chunk=16)
+
+        a = -jnp.exp(a_log)
+        da = (dt * a[None, None]).transpose(0, 2, 1).reshape(bsz * h, s)
+        xk = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+        bk = jnp.broadcast_to(bm[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+        ck = jnp.broadcast_to(cm[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+        want = ssd_scan_ref(xk, da, bk, ck, 16).reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(y, want, atol=5e-5, rtol=1e-3)
+
+    def test_rglru_assoc_scan_matches_loop(self, rng):
+        from repro.models.rglru import rglru_scan
+
+        a = jnp.asarray(rng.uniform(0.8, 0.999, size=(2, 32, 8)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(2, 32, 8)), jnp.float32)
+        got = rglru_scan(a, b, None)
+        h = np.zeros((2, 8), np.float32)
+        hs = []
+        for t in range(32):
+            h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+            hs.append(h.copy())
+        np.testing.assert_allclose(got, np.stack(hs, axis=1), atol=1e-5)
+
+
+class TestKVQuant:
+    def test_quant_roundtrip_error(self, rng):
+        from repro.models.kvcache import dequantize_kv, quantize_kv
+
+        x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+        q, s = quantize_kv(x)
+        back = dequantize_kv(q, s, jnp.float32)
+        err = np.max(np.abs(np.asarray(back - x))) / np.max(np.abs(np.asarray(x)))
+        assert err < 0.01  # int8 symmetric: <=1/254 of the per-head max
+
+    def test_decode_matches_forward_quantized(self):
+        """Full decode parity with an int8 cache (tolerance loosened for the
+        quantization error; must remain a good next-token distribution)."""
+        cfg = FAMILIES["dense"].replace(kv_quant=True)
+        key = jax.random.PRNGKey(3)
+        params = init_params(key, cfg)
+        lora = init_lora_params(key, cfg)
+        b, s = 2, 12
+        batch = batch_for(cfg, key, b=b, s=s)
+        full, _, _ = forward(params, lora, batch, cfg, mode="train", remat=False)
+        prefix = {"tokens": batch["tokens"][:, : s - 1]}
+        _, caches, _ = forward(params, lora, prefix, cfg, mode="prefill", remat=False)
+        from repro.models.kvcache import QuantKVCache
+
+        assert isinstance(caches["groups"][0]["self"], QuantKVCache)
+        caches = extend_caches(caches, 4, cfg)
+        logits, _ = decode_step(
+            params, lora, batch["tokens"][:, s - 1 : s], caches,
+            jnp.asarray(s - 1, jnp.int32), cfg,
+        )
+        np.testing.assert_allclose(logits[:, 0], full[:, -1], atol=0.05, rtol=0.05)
+        # top-1 must agree
+        np.testing.assert_array_equal(
+            np.argmax(np.asarray(logits[:, 0]), -1), np.argmax(np.asarray(full[:, -1]), -1)
+        )

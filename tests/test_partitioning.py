@@ -1,0 +1,116 @@
+"""Sharding-rule unit tests (policy matrix over synthetic param trees)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.models import init_lora_params, init_params
+from repro.models import partitioning as part
+
+
+def abstract(cfg):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_params(key, cfg))
+
+
+def spec_of(tree, specs, path_contains):
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    flat_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for (path, spec), (_, leaf) in zip(flat, flat_leaves):
+        names = "/".join(part._path_names(path))
+        if path_contains in names:
+            out.append((names, spec, leaf.shape))
+    return out
+
+
+class TestTP:
+    def test_dense_layout(self):
+        cfg = cfglib.get_config("stablelm-1.6b")
+        params = abstract(cfg)
+        specs = part.param_pspecs(params, model_size=16)
+        for names, spec, shape in spec_of(params, specs, "mixer/q/w"):
+            assert spec[-1] == "model", (names, spec)
+        for names, spec, shape in spec_of(params, specs, "mixer/o/w"):
+            assert spec[-2] == "model", (names, spec)
+        for names, spec, shape in spec_of(params, specs, "ffn/down/w"):
+            assert spec[-2] == "model"
+
+    def test_moe_expert_axis(self):
+        cfg = cfglib.get_config("llama4-maverick-400b-a17b")
+        params = abstract(cfg)
+        specs = part.param_pspecs(params, model_size=16)
+        rows = spec_of(params, specs, "moe/gate")
+        assert rows and all(spec[-3] == "model" for _, spec, _ in rows)
+
+    def test_non_divisible_replicates(self):
+        cfg = cfglib.get_config("whisper-medium")  # vocab 51865 % 16 != 0
+        params = abstract(cfg)
+        specs = part.param_pspecs(params, model_size=16)
+        rows = spec_of(params, specs, "embed")
+        for names, spec, shape in rows:
+            if "pos" not in names:
+                assert all(s is None for s in spec), (names, spec)
+
+    def test_lora_replicated(self):
+        cfg = cfglib.get_config("gemma-7b")
+        lora = jax.eval_shape(lambda: init_lora_params(jax.random.PRNGKey(0), cfg))
+        specs = part.lora_pspecs(lora)
+        for s in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        ):
+            assert all(x is None for x in s)
+
+
+class TestPolicies:
+    def test_fsdp_shards_second_dim(self):
+        cfg = cfglib.get_config("deepseek-67b")
+        params = abstract(cfg)
+        specs = part.param_pspecs(
+            params, model_size=16, policy="tp_fsdp", fsdp_axes=("data",), fsdp_size=16
+        )
+        for names, spec, shape in spec_of(params, specs, "mixer/q/w"):
+            # PartitionSpec normalizes 1-tuples to the bare axis name
+            assert spec[-1] == "model" and spec[-2] in ("data", ("data",)), (names, spec)
+
+    def test_dp_replicates_everything(self):
+        cfg = cfglib.get_config("stablelm-1.6b")
+        params = abstract(cfg)
+        specs = part.param_pspecs(params, model_size=16, policy="dp")
+        for s in jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+            assert all(x is None for x in s)
+
+    def test_moe2d_expert_layout(self):
+        cfg = cfglib.get_config("llama4-maverick-400b-a17b")
+        params = abstract(cfg)
+        specs = part.param_pspecs(
+            params, model_size=16, policy="moe2d", fsdp_axes=("data",), fsdp_size=16
+        )
+        for names, spec, shape in spec_of(params, specs, "moe/gate"):
+            assert spec[-3] == "model" and spec[-1] in ("data", ("data",)), (names, spec)
+        for names, spec, shape in spec_of(params, specs, "moe/down"):
+            assert spec[-3] == "model" and spec[-2] in ("data", ("data",)), (names, spec)
+        # attention stays plain TP under moe2d
+        for names, spec, shape in spec_of(params, specs, "mixer/q/w"):
+            assert spec[-1] == "model" and spec[-2] is None
+
+    def test_ep_replicated_ffn_dim(self):
+        cfg = cfglib.get_config("granite-moe-1b-a400m")
+        params = abstract(cfg)
+        specs = part.param_pspecs(params, model_size=16, policy="ep_replicated")
+        for names, spec, shape in spec_of(params, specs, "moe/gate"):
+            assert spec[-1] == "model" and spec[-3] is None, (names, spec)
+
+
+class TestBatchCache:
+    def test_batch_replicates_non_divisible(self):
+        batch = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+        specs = part.batch_pspecs(batch, ("data",), client_size=16)
+        assert specs["tokens"] == P(None, None)
+
+    def test_batch_shards_divisible(self):
+        batch = {"tokens": jax.ShapeDtypeStruct((32, 8, 128), jnp.int32)}
+        specs = part.batch_pspecs(batch, ("pod", "data"), client_size=32)
+        assert specs["tokens"][0] == ("pod", "data")
