@@ -1,0 +1,83 @@
+"""Packed-engine vs per-leaf aggregation wall-time.
+
+Builds delta pytrees with many *separate* module leaves (the non-scan layout
+where the per-leaf reference path hurts most: one vmapped ADMM loop, one tiny
+eigh and one stack of elementwise ops per leaf) and times one jitted
+``aggregate`` call per (engine, n_modules, n_clients) cell.
+
+Sweeps module counts 32 / 128 / 512 and client counts 8 / 32 / 100
+(BENCH_QUICK=1 drops the 512-module column — tracing 512 per-leaf RPCA loops
+is exactly the dispatch pathology this engine removes, and it is slow).
+
+CSV rows via the harness contract: name,us_per_call,derived — derived is the
+packed-engine speedup (reference_us / packed_us) plus compile seconds.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+from repro.core import AggregatorConfig, aggregate  # noqa: E402
+
+MODULE_COUNTS = (32, 128) if common.QUICK else (32, 128, 512)
+CLIENT_COUNTS = (8, 32, 100)
+RPCA_ITERS = 8
+# Two LoRA shapes so the packed engine exercises real bucketing.
+SHAPES = ((4, 16), (8, 8))
+
+
+def make_tree(n_modules: int, n_clients: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        f"layer{i:03d}": jnp.asarray(
+            rng.normal(size=(n_clients, *SHAPES[i % len(SHAPES)])), jnp.float32
+        )
+        for i in range(n_modules)
+    }
+
+
+def time_engine(tree, cfg, engine: str, repeats: int = 3) -> tuple[float, float]:
+    """Returns (seconds_per_call, compile_seconds)."""
+    fn = jax.jit(lambda t: aggregate(t, cfg, engine=engine))
+    t0 = time.perf_counter()
+    out = fn(tree)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(tree))
+    return (time.perf_counter() - t0) / repeats, compile_s
+
+
+def main() -> None:
+    cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
+    for n_modules in MODULE_COUNTS:
+        for n_clients in CLIENT_COUNTS:
+            tree = make_tree(n_modules, n_clients)
+            packed_s, packed_c = time_engine(tree, cfg, "packed")
+            ref_s, ref_c = time_engine(tree, cfg, "reference")
+            speedup = ref_s / packed_s
+            common.emit(
+                f"agg_fedrpca_packed_m{n_modules}_c{n_clients}",
+                packed_s * 1e6,
+                f"speedup={speedup:.2f}x compile={packed_c:.2f}s ref_compile={ref_c:.2f}s",
+            )
+            common.emit(
+                f"agg_fedrpca_reference_m{n_modules}_c{n_clients}",
+                ref_s * 1e6,
+                f"speedup=1.00x compile={ref_c:.2f}s",
+            )
+
+
+if __name__ == "__main__":
+    main()

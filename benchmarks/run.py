@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (  # noqa: E402
+    agg_engine_bench,
     fig1_cosine,
     fig2_task_arithmetic,
     fig4_adaptive_beta,
@@ -41,6 +42,7 @@ SUITES = {
     "fig6": fig6_overhead.main,
     "kernels": kernels_bench.main,
     "roofline": roofline.main,
+    "agg_engine": agg_engine_bench.main,
 }
 
 

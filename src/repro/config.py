@@ -10,7 +10,11 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
-import orjson
+try:
+    import orjson
+except ImportError:  # stdlib fallback: same bytes-in/bytes-out contract
+    orjson = None
+    import json as _json
 
 
 @dataclass(frozen=True)
@@ -217,6 +221,8 @@ class MeshConfig:
 
 
 def to_json(cfg) -> bytes:
+    if orjson is None:
+        return _json.dumps(dataclasses.asdict(cfg), indent=2).encode()
     return orjson.dumps(dataclasses.asdict(cfg), option=orjson.OPT_INDENT_2)
 
 
@@ -236,4 +242,6 @@ def _from_dict(cls, d):
 
 
 def model_config_from_json(data: bytes) -> ModelConfig:
+    if orjson is None:
+        return _from_dict(ModelConfig, _json.loads(data))
     return _from_dict(ModelConfig, orjson.loads(data))

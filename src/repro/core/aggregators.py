@@ -14,6 +14,12 @@ All aggregators are pure jittable functions: stacked deltas in, single update
 pytree out (same structure as one client's delta).  They are used both by the
 CPU simulation loop and inside the mesh ``fed_train_step`` (where the stacked
 leaves arrive via an all-gather over the client mesh axes).
+
+Two execution engines back ``aggregate``: the per-leaf functions in this
+module (``engine="reference"``, one vmapped call per leaf — kept as the
+parity oracle) and the batched engine in ``repro.core.engine``
+(``engine="packed"``, the default: leaves are packed into shape buckets and
+every method runs as one batched call per bucket).
 """
 from __future__ import annotations
 
@@ -39,8 +45,10 @@ class AggregatorConfig:
     adaptive_beta: bool = True  # fedrpca: beta = 1 / E^(t)
     beta_min: float = 1.0  # clip range for the adaptive beta
     beta_max: float = 100.0
-    rpca_iters: int = 50  # fixed ADMM iteration count (shape-static cost)
-    rpca_tol: float = 1e-7
+    rpca_iters: int = 50  # ADMM iteration count / cap (shape-static cost)
+    rpca_tol: float = 1e-7  # stopping tolerance when rpca_fixed_iters=False
+    rpca_fixed_iters: bool = True  # False: tolerance-based early stopping
+    rpca_fused_tail: bool = False  # packed engine: Pallas fused ADMM tail
     ties_keep: float = 0.1  # TIES trim: fraction of entries kept per client
     ties_scale: float = 1.0  # TIES final scaling (lambda in the paper)
     dare_drop: float = 0.9  # DARE drop rate
@@ -72,19 +80,13 @@ def fedexp(stacked: PyTree, eps: float = 1e-3) -> PyTree:
 
     A diversity-adaptive Task-Arithmetic: orthogonal client updates get a
     large eta, aligned ones fall back to plain averaging."""
-    import jax.numpy as jnp_
-
     mean = fedavg(stacked)
     sq = lambda t: sum(
-        jnp_.sum(jnp_.square(x.astype(jnp_.float32)))
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
         for x in jax.tree_util.tree_leaves(t)
     )
     n_clients = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-    sum_norms = sum(
-        jnp_.sum(jnp_.square(x.astype(jnp_.float32)))
-        for x in jax.tree_util.tree_leaves(stacked)
-    )
-    eta = jnp_.maximum(1.0, sum_norms / (2.0 * n_clients * (sq(mean) + eps)))
+    eta = jnp.maximum(1.0, sq(stacked) / (2.0 * n_clients * (sq(mean) + eps)))
     return jax.tree_util.tree_map(lambda x: (eta * x).astype(x.dtype), mean)
 
 
@@ -154,10 +156,14 @@ def _fedrpca_matrix(
     """FedRPCA on one (vec_dim, n_clients) matrix.
 
     Returns (update_vector, beta, energy_ratio)."""
-    n_clients = m_mat.shape[-1]
-    res = rpca_lib.robust_pca_fixed_iters(
-        m_mat, n_iter=cfg.rpca_iters, shrink_fn=shrink_fn
-    )
+    if cfg.rpca_fixed_iters:
+        res = rpca_lib.robust_pca_fixed_iters(
+            m_mat, n_iter=cfg.rpca_iters, shrink_fn=shrink_fn
+        )
+    else:
+        res = rpca_lib.robust_pca(
+            m_mat, tol=cfg.rpca_tol, max_iter=cfg.rpca_iters, shrink_fn=shrink_fn
+        )
     low_rank_mean = jnp.mean(res.low_rank, axis=-1)
     sparse_mean = jnp.mean(res.sparse, axis=-1)
     energy = sparse_energy_ratio(m_mat, res.sparse)
@@ -166,7 +172,6 @@ def _fedrpca_matrix(
     else:
         beta = jnp.asarray(cfg.beta, jnp.float32)
     update = low_rank_mean + beta * sparse_mean
-    del n_clients
     return update, beta, energy
 
 
@@ -255,25 +260,48 @@ def fedrpca(
 # ---------------------------------------------------------------------------
 
 _SIMPLE = {
-    "fedavg": lambda stacked, cfg: fedavg(stacked),
-    "task_arithmetic": lambda stacked, cfg: task_arithmetic(stacked, cfg.beta),
-    "ties": lambda stacked, cfg: ties_merging(stacked, cfg.ties_keep, cfg.ties_scale),
-    "fedexp": lambda stacked, cfg: fedexp(stacked),
-    "dare": lambda stacked, cfg: dare(stacked, cfg.dare_drop),
+    "fedavg": lambda stacked, cfg, key: fedavg(stacked),
+    "task_arithmetic": lambda stacked, cfg, key: task_arithmetic(stacked, cfg.beta),
+    "ties": lambda stacked, cfg, key: ties_merging(stacked, cfg.ties_keep, cfg.ties_scale),
+    "fedexp": lambda stacked, cfg, key: fedexp(stacked),
+    "dare": lambda stacked, cfg, key: dare(stacked, cfg.dare_drop, key),
 }
+
+
+ENGINES = ("packed", "reference")
 
 
 def aggregate(
     stacked: PyTree,
     cfg: Optional[AggregatorConfig] = None,
     shrink_fn: Callable = rpca_lib.soft_threshold,
+    *,
+    engine: str = "packed",
+    key=None,
+    with_diagnostics: bool = False,
 ) -> PyTree:
-    """Aggregate stacked client deltas per ``cfg.method``."""
+    """Aggregate stacked client deltas per ``cfg.method``.
+
+    ``engine="packed"`` (default) routes through the batched engine
+    (``repro.core.engine``): one dispatch per shape bucket.
+    ``engine="reference"`` keeps the per-leaf path for parity testing.
+    ``key`` seeds the stochastic methods (dare); both engines fold it
+    identically so results match across engines.
+    """
     cfg = cfg or AggregatorConfig()
+    if engine == "packed":
+        from repro.core import engine as engine_lib
+
+        return engine_lib.aggregate_packed(
+            stacked, cfg, shrink_fn=shrink_fn, key=key, with_diagnostics=with_diagnostics
+        )
+    if engine != "reference":
+        raise ValueError(f"unknown engine: {engine!r} (expected one of {ENGINES})")
     if cfg.method in _SIMPLE:
-        return _SIMPLE[cfg.method](stacked, cfg)
+        out = _SIMPLE[cfg.method](stacked, cfg, key)
+        return (out, {}) if with_diagnostics else out
     if cfg.method == "fedrpca":
-        return fedrpca(stacked, cfg, shrink_fn)
+        return fedrpca(stacked, cfg, shrink_fn, with_diagnostics=with_diagnostics)
     raise ValueError(f"unknown aggregation method: {cfg.method!r}")
 
 

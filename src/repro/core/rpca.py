@@ -191,3 +191,144 @@ def batched_robust_pca(ms: jnp.ndarray, **kwargs) -> RPCAResult:
     """
     fn = functools.partial(robust_pca_fixed_iters, **kwargs)
     return jax.vmap(fn)(ms)
+
+
+# ---------------------------------------------------------------------------
+# One-dispatch bucket RPCA (the batched aggregation engine's hot loop)
+# ---------------------------------------------------------------------------
+
+
+def svt_gram_batched(
+    x: jnp.ndarray, t: jnp.ndarray, shrink_fn: Callable = soft_threshold
+) -> jnp.ndarray:
+    """Batched Gram-trick SVT: ``x`` is (B, d1, d2), ``t`` per-module (B,).
+
+    A vmap of ``svt_gram`` — one batched eigh + two batched matmuls; the
+    static transpose decision is shared by the whole bucket.  Padded zero
+    rows contribute nothing to the Gram matrix and stay exactly zero in the
+    thresholded output (DESIGN.md §3), so bucket padding is lossless.
+    ``shrink_fn`` must broadcast over an array threshold (the jnp reference
+    does; the scalar-threshold Pallas shrink kernel does not — the fused-tail
+    kernel covers the S update instead).
+    """
+    return jax.vmap(lambda xi, ti: svt_gram(xi, ti, shrink_fn))(x, t)
+
+
+def robust_pca_bucket(
+    m: jnp.ndarray,
+    true_dims: jnp.ndarray | None = None,
+    *,
+    n_iter: int = 50,
+    tol: float | None = None,
+    mu: float | None = None,
+    lam: float | None = None,
+    shrink_fn: Callable = soft_threshold,
+    fused_tail: bool = False,
+    interpret: bool | None = None,
+) -> RPCAResult:
+    """RPCA over a whole shape bucket in ONE dispatch (no per-leaf Python).
+
+    ``m`` is a (B, vec_dim, n_clients) bucket whose modules may have been
+    zero-padded along vec_dim up to the bucket's canonical size;
+    ``true_dims`` carries each module's unpadded vec dim so the ADMM
+    constants (mu = numel / (4 ||M||_1), lam = 1 / sqrt(max(d1, d2))) match
+    the per-matrix reference exactly.  Padded rows stay identically zero
+    through both the Gram-trick SVT and the elementwise tail, so the result
+    rows equal the unpadded per-matrix decomposition.
+
+    ``tol=None`` runs the fixed-iteration fori_loop (shape-static cost, the
+    mesh path).  With a tolerance, a while_loop iterates until every module's
+    relative residual passes, freezing already-converged modules — the same
+    semantics as ``jax.vmap(robust_pca)``.
+
+    ``fused_tail=True`` routes the S/Y/residual tail through the Pallas
+    kernel ``repro.kernels.rpca_admm.admm_tail`` (one VMEM pass).
+    """
+    if m.ndim != 3:
+        raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
+    orig_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    b, d1p, d2 = m.shape
+    if true_dims is None:
+        true_dims = jnp.full((b,), d1p, jnp.int32)
+    dims_f = true_dims.astype(jnp.float32)
+
+    abs_sum = jnp.sum(jnp.abs(m), axis=(1, 2))
+    numel = dims_f * d2
+    mu_v = jnp.where(abs_sum > _EPS, numel / (4.0 * jnp.maximum(abs_sum, _EPS)), 1.0)
+    if mu is not None:
+        mu_v = jnp.full((b,), mu, jnp.float32)
+    lam_v = (
+        jnp.full((b,), lam, jnp.float32)
+        if lam is not None
+        else 1.0 / jnp.sqrt(jnp.maximum(dims_f, float(d2)))
+    )
+    rho = 1.0 / mu_v
+    thresh = rho * lam_v
+    m_norm = jnp.maximum(jnp.sqrt(jnp.sum(m * m, axis=(1, 2))), _EPS)
+
+    if fused_tail:
+        from repro.kernels import rpca_admm as _tail_kernel
+        from repro.kernels.ops import _interpret_default
+
+        if shrink_fn is not soft_threshold:
+            raise ValueError(
+                "fused_tail hardcodes soft-threshold shrinkage in the Pallas "
+                "kernel; custom shrink_fn requires fused_tail=False"
+            )
+        interp = _interpret_default() if interpret is None else interpret
+
+        def tail(l, y):
+            s, y_new, rsq = _tail_kernel.admm_tail(
+                m, l, y, rho, mu_v, thresh, interpret=interp
+            )
+            return s, y_new, jnp.sqrt(rsq)
+
+    else:
+
+        def tail(l, y):
+            s = shrink_fn(m - l + rho[:, None, None] * y, thresh[:, None, None])
+            resid = m - l - s
+            y_new = y + mu_v[:, None, None] * resid
+            return s, y_new, jnp.sqrt(jnp.sum(resid * resid, axis=(1, 2)))
+
+    def step(l, s, y):
+        l = svt_gram_batched(m - s + rho[:, None, None] * y, rho, shrink_fn)
+        s, y, rnorm = tail(l, y)
+        return l, s, y, rnorm / m_norm
+
+    zeros = jnp.zeros_like(m)
+    err0 = jnp.full((b,), jnp.inf, jnp.float32)
+
+    if tol is None:
+
+        def body(_, state):
+            l, s, y, _err = state
+            return step(l, s, y)
+
+        l, s, _, err = jax.lax.fori_loop(0, n_iter, body, (zeros, zeros, zeros, err0))
+        n_done = jnp.full((b,), n_iter, jnp.int32)
+    else:
+
+        def cond(state):
+            _, _, _, err, i, _ = state
+            return jnp.logical_and(i < n_iter, jnp.any(err > tol))
+
+        def body(state):
+            l, s, y, err, i, niter = state
+            l2, s2, y2, err2 = step(l, s, y)
+            active = err > tol  # matches vmap(while_loop) select semantics
+            sel = lambda new, old: jnp.where(active[:, None, None], new, old)
+            return (
+                sel(l2, l),
+                sel(s2, s),
+                sel(y2, y),
+                jnp.where(active, err2, err),
+                i + 1,
+                jnp.where(active, i + 1, niter),
+            )
+
+        init = (zeros, zeros, zeros, err0, jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32))
+        l, s, _, err, _, n_done = jax.lax.while_loop(cond, body, init)
+
+    return RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)

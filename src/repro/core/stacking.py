@@ -59,6 +59,31 @@ def leaf_matrices(leaf: jnp.ndarray, layer_axes: int | None = None) -> jnp.ndarr
     return jnp.transpose(flat, (1, 2, 0))
 
 
+#: Canonical bucket vec dims for the batched aggregation engine: small LoRA
+#: matrices pad up to the next power of two so arbitrary (r, d) combinations
+#: collapse into a handful of shape-static buckets (DESIGN.md §1).
+CANONICAL_VEC_DIMS = (32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)
+
+
+def canonical_vec_dim(vec_dim: int) -> int:
+    """Smallest canonical bucket size >= vec_dim (128-lane multiples above)."""
+    for c in CANONICAL_VEC_DIMS:
+        if vec_dim <= c:
+            return c
+    step = CANONICAL_VEC_DIMS[-1]
+    return -(-vec_dim // step) * step
+
+
+def pad_matrices(mats: jnp.ndarray, target_vec: int) -> jnp.ndarray:
+    """Zero-pad (modules, vec, clients) matrices along vec up to target_vec."""
+    pad = target_vec - mats.shape[1]
+    if pad < 0:
+        raise ValueError(f"target {target_vec} < vec dim {mats.shape[1]}")
+    if pad == 0:
+        return mats
+    return jnp.pad(mats, ((0, 0), (0, pad), (0, 0)))
+
+
 def matrices_to_leaf_update(
     columns_mean: jnp.ndarray, leaf: jnp.ndarray, layer_axes: int | None = None
 ) -> jnp.ndarray:

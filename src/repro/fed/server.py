@@ -8,7 +8,6 @@ aggregation code (``repro.core.aggregate``) is byte-identical in both.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AggregatorConfig, aggregate
-from repro.core.aggregators import fedrpca
 from repro.fed.client import LocalSpec, make_local_fn
 from repro.utils.pytree import tree_add, tree_zeros_like
 
@@ -38,6 +36,7 @@ class FedRunConfig:
     rounds: int
     seed: int = 0
     clients_per_round: int = 0  # 0 = full participation (the paper's setting)
+    engine: str = "packed"  # "packed" (bucketed batched engine) | "reference"
 
 
 def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
@@ -63,7 +62,7 @@ def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
 
     @jax.jit
     def run_round(state: RoundState):
-        rng, sub, pick = jax.random.split(state.rng, 3)
+        rng, sub, pick, agg_key = jax.random.split(state.rng, 4)
         if partial:
             # Partial participation: sample clients w/o replacement, run the
             # vmapped local phase on the gathered cohort, scatter state back.
@@ -87,7 +86,20 @@ def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
             take(state.prev_local),
         )
         stacked_deltas = results.delta  # leaves: (|S|, ...)
-        update = aggregate(stacked_deltas, cfg.aggregator)
+        rpca_diags = {}
+        if cfg.aggregator.method == "fedrpca" and cfg.engine == "packed":
+            update, ediag = aggregate(
+                stacked_deltas, cfg.aggregator, engine="packed", with_diagnostics=True
+            )
+            rpca_diags = {
+                "beta_mean": ediag.mean("beta"),
+                "energy_mean": ediag.mean("energy"),
+                "rpca_residual_max": ediag.max("residual"),
+            }
+        else:
+            update = aggregate(
+                stacked_deltas, cfg.aggregator, engine=cfg.engine, key=agg_key
+            )
         lora_global = tree_add(state.lora_global, update)
 
         scatter = lambda full, part: jax.tree_util.tree_map(
@@ -114,7 +126,7 @@ def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
             prev_local=new_prev,
             rng=rng,
         )
-        diags = {"mean_local_loss": jnp.mean(results.final_loss)}
+        diags = {"mean_local_loss": jnp.mean(results.final_loss), **rpca_diags}
         return new_state, diags
 
     return run_round

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (pl.pallas_call + BlockSpec) with jnp oracles.
 
   soft_threshold  — RPCA shrinkage (ADMM inner loop elementwise op)
+  rpca_admm       — fused RPCA ADMM elementwise tail (S/Y update + residual)
   lora_matmul     — fused base + LoRA projection y = xW + s(xA)B
   local_attention — flash-style causal sliding-window attention
   ssd_scan        — Mamba-2 chunked SSD with VMEM-resident recurrent state
@@ -8,12 +9,15 @@
 Validated against ``repro.kernels.ref`` in interpret mode on CPU (TPU is the
 compile target; see tests/test_kernels.py shape/dtype sweeps).
 """
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, rpca_admm
 from repro.kernels.ops import local_attention, lora_matmul, soft_threshold, ssd_scan
+from repro.kernels.rpca_admm import admm_tail
 
 __all__ = [
     "ops",
     "ref",
+    "rpca_admm",
+    "admm_tail",
     "local_attention",
     "lora_matmul",
     "soft_threshold",

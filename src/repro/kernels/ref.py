@@ -10,6 +10,25 @@ def soft_threshold_ref(x: jnp.ndarray, t) -> jnp.ndarray:
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
 
 
+def rpca_admm_tail_ref(
+    m: jnp.ndarray,  # (B, vec, clients)
+    l: jnp.ndarray,
+    y: jnp.ndarray,
+    rho: jnp.ndarray,  # (B,) per-module scalars
+    mu: jnp.ndarray,
+    thresh: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused ADMM tail: S update, dual ascent, per-module residual sumsq."""
+    rho_ = rho[:, None, None].astype(m.dtype)
+    mu_ = mu[:, None, None].astype(m.dtype)
+    th_ = thresh[:, None, None].astype(m.dtype)
+    s = soft_threshold_ref(m - l + rho_ * y, th_)
+    resid = m - l - s
+    y_new = y + mu_ * resid
+    rsq = jnp.sum(jnp.square(resid.astype(jnp.float32)), axis=(1, 2))
+    return s, y_new, rsq
+
+
 def lora_matmul_ref(
     x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, scale: float
 ) -> jnp.ndarray:

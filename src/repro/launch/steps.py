@@ -11,7 +11,6 @@ emitting decode caches, and single-token decode against those caches.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -35,6 +34,7 @@ def make_fed_train_step(
     local_optimizer: str = "sgd",
     remat: bool = True,
     microbatch: int = 1,
+    engine: str = "packed",
 ) -> Callable:
     """(base, lora_global, batch) -> (new_lora_global, metrics).
 
@@ -44,6 +44,11 @@ def make_fed_train_step(
     ``microbatch`` > 1 splits each client's batch into that many slices and
     accumulates LoRA grads over a scan — activation residency drops by the
     same factor (the llama4 §Perf fit fix) at no extra FLOPs.
+
+    ``engine`` selects the server aggregation engine: "packed" lowers one
+    batched call per shape bucket (the production path — the compiled
+    program holds one RPCA loop per bucket instead of one per LoRA leaf);
+    "reference" keeps the per-leaf path for parity runs.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
 
@@ -107,7 +112,7 @@ def make_fed_train_step(
         delta = jax.tree_util.tree_map(lambda a, b: a - b, lora, lora_global)
         return delta, losses[-1]
 
-    def fed_train_step(base, lora_global, batch):
+    def fed_train_step(base, lora_global, batch, agg_key=None):
         extras = {k: batch[k] for k in _EXTRA_KEYS if k in batch}
 
         def client_fn(tokens, labels, *extra_vals):
@@ -118,7 +123,9 @@ def make_fed_train_step(
         deltas, losses = jax.vmap(client_fn)(
             batch["tokens"], batch["labels"], *extras.values()
         )
-        update = aggregate(deltas, agg_cfg)
+        # agg_key varies the stochastic aggregators (dare) across rounds;
+        # None keeps the step a pure (base, lora, batch) function.
+        update = aggregate(deltas, agg_cfg, engine=engine, key=agg_key)
         new_lora = tree_add(lora_global, update)
         return new_lora, {"loss": jnp.mean(losses)}
 

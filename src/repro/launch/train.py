@@ -22,7 +22,7 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import AggregatorConfig
+from repro.core import ENGINES, METHODS, AggregatorConfig
 from repro.data import client_lm_datasets
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -60,7 +60,9 @@ def main(argv=None):
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--local-lr", type=float, default=1e-3)
     ap.add_argument("--local-optimizer", default="adam", choices=["sgd", "adam"])
-    ap.add_argument("--aggregator", default="fedrpca", choices=["fedavg", "task_arithmetic", "ties", "fedrpca"])
+    ap.add_argument("--aggregator", default="fedrpca", choices=list(METHODS))
+    ap.add_argument("--engine", default="packed", choices=list(ENGINES),
+                    help="server aggregation engine (packed = bucketed batched)")
     ap.add_argument("--rpca-iters", type=int, default=30)
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
@@ -92,7 +94,7 @@ def main(argv=None):
     step = jax.jit(
         steps_lib.make_fed_train_step(
             cfg, agg, local_lr=args.local_lr, local_steps=args.local_steps,
-            local_optimizer=args.local_optimizer, remat=False,
+            local_optimizer=args.local_optimizer, remat=False, engine=args.engine,
         )
     )
 
@@ -100,7 +102,7 @@ def main(argv=None):
     for r in range(args.rounds):
         batch = build_batches(client_tokens, args.per_client_batch, args.seq, rng)
         t0 = time.time()
-        lora, metrics = step(base, lora, batch)
+        lora, metrics = step(base, lora, batch, jax.random.fold_in(key, 1000 + r))
         train_loss = float(metrics["loss"])
         log.info("round %03d  local_loss=%.4f  (%.2fs)", r, train_loss, time.time() - t0)
         if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:

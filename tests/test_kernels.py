@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, rpca_admm
 
 
 def arr(rng, shape, dtype):
@@ -31,6 +31,45 @@ class TestSoftThreshold:
         x = arr(rng, (4, 33, 65), jnp.float32)
         got = ops.soft_threshold(x, 0.5)
         np.testing.assert_allclose(got, ref.soft_threshold_ref(x, 0.5), atol=1e-6)
+
+
+class TestRPCAAdmmTail:
+    """Fused ADMM elementwise tail vs the jnp oracle (interpret mode)."""
+
+    def _inputs(self, rng, b, d, nc):
+        m, l, y = (jnp.asarray(rng.normal(size=(b, d, nc)), jnp.float32) for _ in range(3))
+        rho = jnp.asarray(rng.uniform(0.5, 2.0, b), jnp.float32)
+        return m, l, y, rho, 1.0 / rho, rho * 0.1
+
+    @pytest.mark.parametrize("b,d,nc", [(3, 64, 8), (5, 100, 12), (2, 300, 100), (1, 1, 1)])
+    @pytest.mark.parametrize("block_vec", [32, 512])
+    def test_sweep(self, b, d, nc, block_vec, rng):
+        m, l, y, rho, mu, th = self._inputs(rng, b, d, nc)
+        s, y_new, rsq = rpca_admm.admm_tail(
+            m, l, y, rho, mu, th, block_vec=block_vec, interpret=True
+        )
+        s_w, y_w, rsq_w = ref.rpca_admm_tail_ref(m, l, y, rho, mu, th)
+        np.testing.assert_allclose(s, s_w, atol=2e-6)
+        np.testing.assert_allclose(y_new, y_w, atol=2e-6)
+        np.testing.assert_allclose(rsq, rsq_w, rtol=1e-5)
+
+    def test_blockwise_residual_accumulation(self, rng):
+        """Partial sums across vec blocks must total the full residual norm,
+        independent of the tiling."""
+        m, l, y, rho, mu, th = self._inputs(rng, 2, 250, 6)
+        _, _, r_small = rpca_admm.admm_tail(m, l, y, rho, mu, th, block_vec=16, interpret=True)
+        _, _, r_full = rpca_admm.admm_tail(m, l, y, rho, mu, th, block_vec=512, interpret=True)
+        np.testing.assert_allclose(r_small, r_full, rtol=1e-5)
+
+    def test_padded_rows_are_inert(self, rng):
+        """Zero rows (bucket padding) produce zero S/Y rows and no residual."""
+        m, l, y, rho, mu, th = self._inputs(rng, 2, 40, 6)
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, 24), (0, 0)))
+        s, y_new, rsq = rpca_admm.admm_tail(pad(m), pad(l), pad(y), rho, mu, th, interpret=True)
+        _, _, rsq_ref = ref.rpca_admm_tail_ref(m, l, y, rho, mu, th)
+        assert float(jnp.abs(s[:, 40:]).max()) == 0.0
+        assert float(jnp.abs(y_new[:, 40:]).max()) == 0.0
+        np.testing.assert_allclose(rsq, rsq_ref, rtol=1e-5)
 
 
 class TestLoraMatmul:
