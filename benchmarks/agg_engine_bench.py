@@ -5,9 +5,10 @@ where the per-leaf reference path hurts most: one vmapped ADMM loop, one tiny
 eigh and one stack of elementwise ops per leaf) and times one jitted
 ``aggregate`` call per (engine, n_modules, n_clients) cell.
 
-Sweeps module counts 32 / 128 / 512 and client counts 8 / 32 / 100
-(BENCH_QUICK=1 drops the 512-module column — tracing 512 per-leaf RPCA loops
-is exactly the dispatch pathology this engine removes, and it is slow).
+Sweeps module counts 32 / 128 / 512 and client counts 8 / 32 / 100.
+Quick mode (BENCH_QUICK=1 or --quick, either entry point) runs only the
+32-module, 8/32-client cells — tracing hundreds of per-leaf RPCA loops is
+exactly the dispatch pathology this engine removes, and it is slow.
 
 CSV rows via the harness contract: name,us_per_call,derived — derived is the
 packed-engine speedup (reference_us / packed_us) plus compile seconds.
@@ -29,7 +30,7 @@ import jax.numpy as jnp  # noqa: E402
 from benchmarks import common  # noqa: E402
 from repro.core import AggregatorConfig, aggregate  # noqa: E402
 
-MODULE_COUNTS = (32, 128) if common.QUICK else (32, 128, 512)
+MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
 RPCA_ITERS = 8
 # Two LoRA shapes so the packed engine exercises real bucketing.
@@ -59,10 +60,24 @@ def time_engine(tree, cfg, engine: str, repeats: int = 3) -> tuple[float, float]
     return (time.perf_counter() - t0) / repeats, compile_s
 
 
-def main() -> None:
+def time_masked(tree, cfg, n_clients: int, repeats: int = 3) -> float:
+    """Masked shape-static cohort (3/4 of the clients active), packed engine."""
+    mask = (jnp.arange(n_clients) < max(3 * n_clients // 4, 1)).astype(jnp.float32)
+    fn = jax.jit(lambda t, m: aggregate(t, cfg, engine="packed", mask=m))
+    jax.block_until_ready(fn(tree, mask))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(tree, mask))
+    return (time.perf_counter() - t0) / repeats
+
+
+def main(quick: bool | None = None) -> None:
+    quick = common.QUICK if quick is None else quick
+    module_counts = (32,) if quick else MODULE_COUNTS
+    client_counts = (8, 32) if quick else CLIENT_COUNTS
     cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
-    for n_modules in MODULE_COUNTS:
-        for n_clients in CLIENT_COUNTS:
+    for n_modules in module_counts:
+        for n_clients in client_counts:
             tree = make_tree(n_modules, n_clients)
             packed_s, packed_c = time_engine(tree, cfg, "packed")
             ref_s, ref_c = time_engine(tree, cfg, "reference")
@@ -77,7 +92,20 @@ def main() -> None:
                 ref_s * 1e6,
                 f"speedup=1.00x compile={ref_c:.2f}s",
             )
+            masked_s = time_masked(tree, cfg, n_clients)
+            common.emit(
+                f"agg_fedrpca_masked_m{n_modules}_c{n_clients}",
+                masked_s * 1e6,
+                f"overhead_vs_dense={masked_s / packed_s:.2f}x",
+            )
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke: smallest module/client cells only",
+    )
+    main(quick=True if parser.parse_args().quick else None)

@@ -36,11 +36,18 @@ from repro.core import stacking
 PyTree = Any
 
 
+#: Client weighting schemes understood by the round drivers: "uniform"
+#: averages active clients equally; "data_size" weights each client's delta
+#: by its local dataset size (the paper's FedAvg, Eq. 4 with n_k / n).
+WEIGHTINGS = ("uniform", "data_size")
+
+
 @dataclasses.dataclass(frozen=True)
 class AggregatorConfig:
     """Configuration shared by all aggregation strategies."""
 
     method: str = "fedrpca"  # fedavg | task_arithmetic | ties | fedrpca
+    weighting: str = "uniform"  # uniform | data_size (see WEIGHTINGS)
     beta: float = 2.0  # scaling factor (task_arithmetic, fixed-beta fedrpca)
     adaptive_beta: bool = True  # fedrpca: beta = 1 / E^(t)
     beta_min: float = 1.0  # clip range for the adaptive beta
@@ -60,48 +67,127 @@ class AggregatorConfig:
 
 
 # ---------------------------------------------------------------------------
+# Client validity masks and weights (shape-static partial participation)
+# ---------------------------------------------------------------------------
+#
+# Every aggregator takes an optional per-client validity ``mask`` (1 = the
+# slot holds a sampled client's delta, 0 = cohort padding) and raw
+# nonnegative ``weights`` (e.g. local dataset sizes).  With both None the
+# legacy unweighted code paths run unchanged — bit-for-bit — which is the
+# full-participation uniform default.
+
+
+def _client_weights(mask=None, weights=None):
+    """Normalized (n_clients,) float32 weights, or None for the legacy
+    unweighted path.  Masked slots get weight exactly zero, so garbage in
+    padded cohort columns never reaches a weighted reduction."""
+    if mask is None and weights is None:
+        return None
+    if weights is None:
+        w = jnp.asarray(mask, jnp.float32)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        if mask is not None:
+            w = w * jnp.asarray(mask, jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def _wmean_leaf(leaf: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Weighted mean over the leading client axis, accumulated in float32."""
+    return jnp.tensordot(w, leaf.astype(jnp.float32), axes=(0, 0)).astype(leaf.dtype)
+
+
+def _mask_n_eff(mask, n_clients: int):
+    return n_clients if mask is None else jnp.maximum(jnp.sum(jnp.asarray(mask, jnp.float32)), 1.0)
+
+
+# ---------------------------------------------------------------------------
 # Simple strategies
 # ---------------------------------------------------------------------------
 
 
-def fedavg(stacked: PyTree) -> PyTree:
-    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), stacked)
+def fedavg(stacked: PyTree, mask=None, weights=None) -> PyTree:
+    """Eq. 4.  Unweighted mean by default; with ``weights`` (data sizes)
+    and/or a cohort ``mask`` it is the paper's true FedAvg sum_k (n_k/n) d_k
+    over the active clients."""
+    w = _client_weights(mask, weights)
+    if w is None:
+        return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), stacked)
+    return jax.tree_util.tree_map(lambda x: _wmean_leaf(x, w), stacked)
 
 
-def task_arithmetic(stacked: PyTree, beta: float = 2.0) -> PyTree:
-    return jax.tree_util.tree_map(lambda x: beta * jnp.mean(x, axis=0), stacked)
+def task_arithmetic(stacked: PyTree, beta: float = 2.0, mask=None, weights=None) -> PyTree:
+    w = _client_weights(mask, weights)
+    if w is None:
+        return jax.tree_util.tree_map(lambda x: beta * jnp.mean(x, axis=0), stacked)
+    return jax.tree_util.tree_map(lambda x: (beta * _wmean_leaf(x, w)).astype(x.dtype), stacked)
 
 
-def fedexp(stacked: PyTree, eps: float = 1e-3) -> PyTree:
+def fedexp(stacked: PyTree, eps: float = 1e-3, mask=None, weights=None) -> PyTree:
     """FedExP (Jhunjhunwala et al., ICLR 2023 — ref [36] in the paper):
     server extrapolation with a data-derived global step size
 
         eta_g = max(1, sum_i ||d_i||^2 / (2 M (||mean(d)||^2 + eps)))
 
     A diversity-adaptive Task-Arithmetic: orthogonal client updates get a
-    large eta, aligned ones fall back to plain averaging."""
-    mean = fedavg(stacked)
-    sq = lambda t: sum(
-        jnp.sum(jnp.square(x.astype(jnp.float32)))
-        for x in jax.tree_util.tree_leaves(t)
+    large eta, aligned ones fall back to plain averaging.  Masked cohorts
+    sum ||d_i||^2 over active clients only and use M = n_eff."""
+    mean = fedavg(stacked, mask=mask, weights=weights)
+    bmask = (
+        None
+        if mask is None
+        else jnp.asarray(mask, jnp.float32)
     )
-    n_clients = jax.tree_util.tree_leaves(stacked)[0].shape[0]
-    eta = jnp.maximum(1.0, sq(stacked) / (2.0 * n_clients * (sq(mean) + eps)))
+
+    def sq_stacked(x):
+        x = x.astype(jnp.float32)
+        if bmask is not None:
+            x = x * bmask.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(jnp.square(x))
+
+    sq = lambda t, f: sum(f(x) for x in jax.tree_util.tree_leaves(t))
+    n_eff = _mask_n_eff(mask, jax.tree_util.tree_leaves(stacked)[0].shape[0])
+    mean_sq = sq(mean, lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))))
+    eta = jnp.maximum(1.0, sq(stacked, sq_stacked) / (2.0 * n_eff * (mean_sq + eps)))
     return jax.tree_util.tree_map(lambda x: (eta * x).astype(x.dtype), mean)
 
 
-def dare(stacked: PyTree, drop_rate: float = 0.9, key=None) -> PyTree:
+def _dare_keep(key, leaf_index: int, leaf_shape, drop_rate: float, mask=None):
+    """Bernoulli keep mask for one stacked leaf.
+
+    With ``mask=None`` (dense cohorts) a single draw covers the whole leaf —
+    the legacy stream, unchanged.  With a mask, each client *slot* gets its
+    own fold_in key so slot j draws the same pattern whether the cohort is
+    padded to 8 or materialized densely at size j+1 — the property the
+    masked-vs-dense parity suite relies on."""
+    k = jax.random.fold_in(key, leaf_index)
+    if mask is None:
+        return jax.random.bernoulli(k, 1.0 - drop_rate, leaf_shape)
+    keys = jax.vmap(lambda j: jax.random.fold_in(k, j))(jnp.arange(leaf_shape[0]))
+    return jax.vmap(
+        lambda kk: jax.random.bernoulli(kk, 1.0 - drop_rate, leaf_shape[1:])
+    )(keys)
+
+
+def dare(stacked: PyTree, drop_rate: float = 0.9, key=None, mask=None, weights=None) -> PyTree:
     """DARE (Yu et al. 2024 — ref [92]): randomly drop ``drop_rate`` of each
     client delta's entries and rescale the rest by 1/(1-p) before averaging
-    (an unbiased sparsifier that reduces merging interference)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
+    (an unbiased sparsifier that reduces merging interference).
+
+    ``key`` is required: a silent constant key would repeat the same drop
+    pattern every round, defeating the unbiasedness argument."""
+    if key is None:
+        raise ValueError("dare requires an explicit PRNG key (got key=None)")
+    w = _client_weights(mask, weights)
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     out = []
     for i, leaf in enumerate(leaves):
-        k = jax.random.fold_in(key, i)
-        keep = jax.random.bernoulli(k, 1.0 - drop_rate, leaf.shape)
+        keep = _dare_keep(key, i, leaf.shape, drop_rate, mask)
         rescaled = jnp.where(keep, leaf, 0) / (1.0 - drop_rate)
-        out.append(jnp.mean(rescaled, axis=0).astype(leaf.dtype))
+        if w is None:
+            out.append(jnp.mean(rescaled, axis=0).astype(leaf.dtype))
+        else:
+            out.append(_wmean_leaf(rescaled, w).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -110,29 +196,48 @@ def dare(stacked: PyTree, drop_rate: float = 0.9, key=None) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-def _ties_leaf(leaf: jnp.ndarray, keep: float, scale: float) -> jnp.ndarray:
-    """TIES on one stacked leaf: (clients, ...) -> (...)."""
+def _ties_leaf(leaf: jnp.ndarray, keep: float, scale: float, w=None) -> jnp.ndarray:
+    """TIES on one stacked leaf: (clients, ...) -> (...).
+
+    ``w`` (normalized per-client weights, masked slots zero) switches the
+    sign election to weighted mass and the disjoint mean to a weighted
+    average; None keeps the legacy unweighted path bit-for-bit."""
     n_clients = leaf.shape[0]
     flat = jnp.reshape(leaf, (n_clients, -1)).astype(jnp.float32)
     d = flat.shape[1]
     k = max(int(keep * d), 1)
     # 1) Trim: keep top-k |value| entries per client, zero the rest.
+    #    lax.top_k is O(d log k) on the server hot path vs the O(d log d)
+    #    full sort it replaced; the k-th-largest threshold value is identical.
     absx = jnp.abs(flat)
-    kth = -jnp.sort(-absx, axis=1)[:, k - 1 : k]  # per-client k-th largest
+    kth = jax.lax.top_k(absx, k)[0][:, -1:]  # per-client k-th largest
     trimmed = jnp.where(absx >= kth, flat, 0.0)
-    # 2) Elect sign by total mass.
-    elected = jnp.sign(jnp.sum(trimmed, axis=0))
-    elected = jnp.where(elected == 0.0, 1.0, elected)
-    # 3) Disjoint mean: average only entries agreeing with the elected sign.
-    agree = (jnp.sign(trimmed) == elected[None, :]) & (trimmed != 0.0)
-    num = jnp.sum(jnp.where(agree, trimmed, 0.0), axis=0)
-    den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=0), 1.0)
+    if w is None:
+        # 2) Elect sign by total mass.
+        elected = jnp.sign(jnp.sum(trimmed, axis=0))
+        elected = jnp.where(elected == 0.0, 1.0, elected)
+        # 3) Disjoint mean: average only entries agreeing with the elected sign.
+        agree = (jnp.sign(trimmed) == elected[None, :]) & (trimmed != 0.0)
+        num = jnp.sum(jnp.where(agree, trimmed, 0.0), axis=0)
+        den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=0), 1.0)
+    else:
+        wc = w[:, None]
+        elected = jnp.sign(jnp.sum(wc * trimmed, axis=0))
+        elected = jnp.where(elected == 0.0, 1.0, elected)
+        agree = (jnp.sign(trimmed) == elected[None, :]) & (trimmed != 0.0)
+        num = jnp.sum(jnp.where(agree, wc * trimmed, 0.0), axis=0)
+        # weighted "count": zero only where no weighted client agrees, in
+        # which case num is zero too — 0/eps = 0, matching the legacy clamp.
+        den = jnp.maximum(jnp.sum(wc * agree.astype(jnp.float32), axis=0), 1e-12)
     merged = scale * num / den
     return jnp.reshape(merged, leaf.shape[1:]).astype(leaf.dtype)
 
 
-def ties_merging(stacked: PyTree, keep: float = 0.1, scale: float = 1.0) -> PyTree:
-    fn = functools.partial(_ties_leaf, keep=keep, scale=scale)
+def ties_merging(
+    stacked: PyTree, keep: float = 0.1, scale: float = 1.0, mask=None, weights=None
+) -> PyTree:
+    w = _client_weights(mask, weights)
+    fn = functools.partial(_ties_leaf, keep=keep, scale=scale, w=w)
     return jax.tree_util.tree_map(fn, stacked)
 
 
@@ -152,55 +257,85 @@ def _fedrpca_matrix(
     m_mat: jnp.ndarray,
     cfg: AggregatorConfig,
     shrink_fn: Callable,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    mask=None,
+    w=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """FedRPCA on one (vec_dim, n_clients) matrix.
 
-    Returns (update_vector, beta, energy_ratio)."""
+    ``mask`` zeroes inactive client columns and switches the ADMM constants
+    to the effective client count n_eff (numel = d1 * n_eff, lam =
+    1/sqrt(max(d1, n_eff))) so the decomposition of the active sub-matrix
+    matches a dense sub-cohort call; ``w`` (normalized weights, masked slots
+    zero) replaces the plain column means.  The n_eff derivation is
+    intentionally re-stated here rather than shared with
+    ``rpca.robust_pca_bucket`` — this path is the parity oracle for the
+    packed engine, so the two must agree without sharing code; change them
+    together.
+
+    Returns (update_vector, beta, energy_ratio, residual)."""
+    mu = lam = None
+    if mask is not None:
+        cmask = jnp.asarray(mask, m_mat.dtype)
+        m_mat = m_mat * cmask
+        d1 = m_mat.shape[0]
+        n_eff = jnp.maximum(jnp.sum(cmask.astype(jnp.float32)), 1.0)
+        abs_sum = jnp.sum(jnp.abs(m_mat))
+        mu = jnp.where(
+            abs_sum > 1e-12, (d1 * n_eff) / (4.0 * jnp.maximum(abs_sum, 1e-12)), 1.0
+        )
+        lam = 1.0 / jnp.sqrt(jnp.maximum(jnp.asarray(d1, jnp.float32), n_eff))
     if cfg.rpca_fixed_iters:
         res = rpca_lib.robust_pca_fixed_iters(
-            m_mat, n_iter=cfg.rpca_iters, shrink_fn=shrink_fn
+            m_mat, n_iter=cfg.rpca_iters, mu=mu, lam=lam, shrink_fn=shrink_fn
         )
     else:
         res = rpca_lib.robust_pca(
-            m_mat, tol=cfg.rpca_tol, max_iter=cfg.rpca_iters, shrink_fn=shrink_fn
+            m_mat, tol=cfg.rpca_tol, max_iter=cfg.rpca_iters, mu=mu, lam=lam,
+            shrink_fn=shrink_fn,
         )
-    low_rank_mean = jnp.mean(res.low_rank, axis=-1)
-    sparse_mean = jnp.mean(res.sparse, axis=-1)
+    if w is None:
+        low_rank_mean = jnp.mean(res.low_rank, axis=-1)
+        sparse_mean = jnp.mean(res.sparse, axis=-1)
+    else:
+        low_rank_mean = res.low_rank @ w
+        sparse_mean = res.sparse @ w
     energy = sparse_energy_ratio(m_mat, res.sparse)
     if cfg.adaptive_beta:
         beta = jnp.clip(1.0 / jnp.maximum(energy, 1e-12), cfg.beta_min, cfg.beta_max)
     else:
         beta = jnp.asarray(cfg.beta, jnp.float32)
     update = low_rank_mean + beta * sparse_mean
-    return update, beta, energy
+    return update, beta, energy, res.residual
 
 
 def _fedrpca_leaf(
-    leaf: jnp.ndarray, cfg: AggregatorConfig, shrink_fn: Callable
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    leaf: jnp.ndarray, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None
+):
     """FedRPCA on one stacked leaf; vmaps RPCA across the module (layer) axis.
 
     Parallel-across-layers per the paper's App. B.2 efficiency note.
     """
     mats = stacking.leaf_matrices(leaf)  # (modules, vec, clients)
-    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn)
-    updates, betas, energies = jax.vmap(fn)(mats.astype(jnp.float32))
+    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w)
+    updates, betas, energies, residuals = jax.vmap(fn)(mats.astype(jnp.float32))
     update_leaf = stacking.matrices_to_leaf_update(updates, leaf)
-    return update_leaf, betas, energies
+    return update_leaf, betas, energies, residuals
 
 
-def _fedrpca_joint_ab(node: dict, cfg: AggregatorConfig, shrink_fn: Callable):
+def _fedrpca_joint_ab(
+    node: dict, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None
+):
     """App. B.2 joint mode: RPCA over concatenated [vec(dA); vec(dB)] columns
     of one adapter pair, then split the update back."""
     mats_a = stacking.leaf_matrices(node["A"]).astype(jnp.float32)  # (mod, va, M)
     mats_b = stacking.leaf_matrices(node["B"]).astype(jnp.float32)  # (mod, vb, M)
     va = mats_a.shape[1]
     joint = jnp.concatenate([mats_a, mats_b], axis=1)
-    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn)
-    updates, betas, energies = jax.vmap(fn)(joint)
+    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w)
+    updates, betas, energies, residuals = jax.vmap(fn)(joint)
     upd_a = stacking.matrices_to_leaf_update(updates[:, :va], node["A"])
     upd_b = stacking.matrices_to_leaf_update(updates[:, va:], node["B"])
-    return {"A": upd_a, "B": upd_b}, betas, energies
+    return {"A": upd_a, "B": upd_b}, betas, energies, residuals
 
 
 def _is_ab_node(node) -> bool:
@@ -212,21 +347,40 @@ def fedrpca(
     cfg: Optional[AggregatorConfig] = None,
     shrink_fn: Callable = rpca_lib.soft_threshold,
     with_diagnostics: bool = False,
+    mask=None,
+    weights=None,
 ):
     """Algorithm 1 server update over a stacked client-delta pytree.
 
     ``cfg.joint_ab`` applies Robust-PCA jointly over each module's
-    concatenated (dA, dB) columns — the paper's App. B.2 variant."""
+    concatenated (dA, dB) columns — the paper's App. B.2 variant.
+
+    Diagnostics carry both the legacy per-leaf scalar keys
+    (``leaf{i}/beta_mean``) and flat per-module arrays under ``"beta"``,
+    ``"energy"`` and ``"residual"`` — the same quantities the packed
+    engine's ``EngineDiagnostics`` exposes, so ``rpca_diag_summary`` works
+    on either engine's output."""
     cfg = cfg or AggregatorConfig()
+    w = _client_weights(mask, weights)
     diag = {}
+    flats = {"beta": [], "energy": [], "residual": []}
+
+    def record(betas, energies, residuals):
+        flats["beta"].append(jnp.ravel(betas))
+        flats["energy"].append(jnp.ravel(energies))
+        flats["residual"].append(jnp.ravel(residuals))
+
     if cfg.joint_ab:
         idx = [0]
 
         def walk(node):
             if _is_ab_node(node):
-                upd, betas, energies = _fedrpca_joint_ab(node, cfg, shrink_fn)
+                upd, betas, energies, residuals = _fedrpca_joint_ab(
+                    node, cfg, shrink_fn, mask=mask, w=w
+                )
                 diag[f"pair{idx[0]}/beta_mean"] = jnp.mean(betas)
                 diag[f"pair{idx[0]}/energy_mean"] = jnp.mean(energies)
+                record(betas, energies, residuals)
                 idx[0] += 1
                 return upd
             if isinstance(node, dict):
@@ -234,25 +388,51 @@ def fedrpca(
             if isinstance(node, (tuple, list)):
                 return type(node)(walk(v) for v in node)
             # bare leaf outside an (A, B) pair: fall back to per-leaf RPCA
-            upd, _, _ = _fedrpca_leaf(node, cfg, shrink_fn)
+            upd, betas, energies, residuals = _fedrpca_leaf(
+                node, cfg, shrink_fn, mask=mask, w=w
+            )
+            record(betas, energies, residuals)
             return upd
 
         out = walk(stacked)
         if with_diagnostics:
+            diag.update({k: jnp.concatenate(v) for k, v in flats.items()})
             return out, diag
         return out
 
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     updates = []
     for i, leaf in enumerate(leaves):
-        upd, betas, energies = _fedrpca_leaf(leaf, cfg, shrink_fn)
+        upd, betas, energies, residuals = _fedrpca_leaf(leaf, cfg, shrink_fn, mask=mask, w=w)
         updates.append(upd)
         diag[f"leaf{i}/beta_mean"] = jnp.mean(betas)
         diag[f"leaf{i}/energy_mean"] = jnp.mean(energies)
+        record(betas, energies, residuals)
     out = jax.tree_util.tree_unflatten(treedef, updates)
     if with_diagnostics:
+        diag.update({k: jnp.concatenate(v) for k, v in flats.items()})
         return out, diag
     return out
+
+
+def rpca_diag_summary(diag) -> dict:
+    """Engine-agnostic scalar summary of fedrpca diagnostics.
+
+    Accepts either the packed engine's ``EngineDiagnostics`` or the
+    reference path's dict (which carries flat "beta"/"energy"/"residual"
+    arrays); both engines therefore report the same keys from
+    ``fed/server.py`` round diagnostics."""
+    if hasattr(diag, "arrays"):  # EngineDiagnostics (duck-typed, no import)
+        return {
+            "beta_mean": diag.mean("beta"),
+            "energy_mean": diag.mean("energy"),
+            "rpca_residual_max": diag.max("residual"),
+        }
+    return {
+        "beta_mean": jnp.mean(diag["beta"]),
+        "energy_mean": jnp.mean(diag["energy"]),
+        "rpca_residual_max": jnp.max(diag["residual"]),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -260,11 +440,21 @@ def fedrpca(
 # ---------------------------------------------------------------------------
 
 _SIMPLE = {
-    "fedavg": lambda stacked, cfg, key: fedavg(stacked),
-    "task_arithmetic": lambda stacked, cfg, key: task_arithmetic(stacked, cfg.beta),
-    "ties": lambda stacked, cfg, key: ties_merging(stacked, cfg.ties_keep, cfg.ties_scale),
-    "fedexp": lambda stacked, cfg, key: fedexp(stacked),
-    "dare": lambda stacked, cfg, key: dare(stacked, cfg.dare_drop, key),
+    "fedavg": lambda stacked, cfg, key, mask, weights: fedavg(
+        stacked, mask=mask, weights=weights
+    ),
+    "task_arithmetic": lambda stacked, cfg, key, mask, weights: task_arithmetic(
+        stacked, cfg.beta, mask=mask, weights=weights
+    ),
+    "ties": lambda stacked, cfg, key, mask, weights: ties_merging(
+        stacked, cfg.ties_keep, cfg.ties_scale, mask=mask, weights=weights
+    ),
+    "fedexp": lambda stacked, cfg, key, mask, weights: fedexp(
+        stacked, mask=mask, weights=weights
+    ),
+    "dare": lambda stacked, cfg, key, mask, weights: dare(
+        stacked, cfg.dare_drop, key, mask=mask, weights=weights
+    ),
 }
 
 
@@ -278,6 +468,8 @@ def aggregate(
     *,
     engine: str = "packed",
     key=None,
+    mask=None,
+    weights=None,
     with_diagnostics: bool = False,
 ) -> PyTree:
     """Aggregate stacked client deltas per ``cfg.method``.
@@ -285,23 +477,40 @@ def aggregate(
     ``engine="packed"`` (default) routes through the batched engine
     (``repro.core.engine``): one dispatch per shape bucket.
     ``engine="reference"`` keeps the per-leaf path for parity testing.
-    ``key`` seeds the stochastic methods (dare); both engines fold it
-    identically so results match across engines.
+    ``key`` seeds the stochastic methods (dare — required for them); both
+    engines fold it identically so results match across engines.
+
+    ``mask`` is a per-client validity vector for shape-static partial
+    participation: padded cohort slots carry mask 0 and are excluded from
+    every method (the masked-padded result equals the dense sub-cohort
+    result).  ``weights`` are raw nonnegative per-client weights (e.g. local
+    dataset sizes — the round drivers pass them when
+    ``cfg.weighting == "data_size"``); they are mask-zeroed and normalized
+    internally.  With both None the legacy unweighted code paths run
+    bit-for-bit unchanged.
     """
     cfg = cfg or AggregatorConfig()
+    if cfg.weighting not in WEIGHTINGS:
+        raise ValueError(f"unknown weighting: {cfg.weighting!r} (expected one of {WEIGHTINGS})")
+    if cfg.method == "dare" and key is None:
+        raise ValueError("dare requires an explicit PRNG key (got key=None)")
     if engine == "packed":
         from repro.core import engine as engine_lib
 
         return engine_lib.aggregate_packed(
-            stacked, cfg, shrink_fn=shrink_fn, key=key, with_diagnostics=with_diagnostics
+            stacked, cfg, shrink_fn=shrink_fn, key=key, mask=mask, weights=weights,
+            with_diagnostics=with_diagnostics,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine: {engine!r} (expected one of {ENGINES})")
     if cfg.method in _SIMPLE:
-        out = _SIMPLE[cfg.method](stacked, cfg, key)
+        out = _SIMPLE[cfg.method](stacked, cfg, key, mask, weights)
         return (out, {}) if with_diagnostics else out
     if cfg.method == "fedrpca":
-        return fedrpca(stacked, cfg, shrink_fn, with_diagnostics=with_diagnostics)
+        return fedrpca(
+            stacked, cfg, shrink_fn, with_diagnostics=with_diagnostics,
+            mask=mask, weights=weights,
+        )
     raise ValueError(f"unknown aggregation method: {cfg.method!r}")
 
 

@@ -41,7 +41,13 @@ import jax.numpy as jnp
 
 from repro.core import rpca as rpca_lib
 from repro.core import stacking
-from repro.core.aggregators import AggregatorConfig, _is_ab_node, sparse_energy_ratio
+from repro.core.aggregators import (
+    AggregatorConfig,
+    _client_weights,
+    _dare_keep,
+    _is_ab_node,
+    sparse_energy_ratio,
+)
 
 PyTree = Any
 
@@ -70,17 +76,27 @@ class PackSpec:
 
     entries: tuple
     skeleton: Any  # original structure with entry indices at leaf positions
-    n_clients: int
+    n_clients: int  # original (pre-padding) cohort size
     bucket_dims: Mapping[BucketKey, tuple]  # key -> (total_modules, padded_vec)
+    cohort_size: int = 0  # canonical (padded) client-axis length; 0 -> n_clients
 
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """One shape bucket: the packed tensor + per-module true vec dims."""
+    """One shape bucket: the packed tensor + per-module true vec dims.
 
-    data: jnp.ndarray  # (total_modules, padded_vec, n_clients)
+    ``client_mask`` / ``weights`` are the per-client validity mask and
+    normalized aggregation weights for shape-static partial participation
+    (None on the dense unweighted path).  When a mask is present the packed
+    ``data`` already has its inactive columns zeroed, so the zero-*column*
+    padding argument mirrors the zero-row one in the module docstring.
+    """
+
+    data: jnp.ndarray  # (total_modules, padded_vec, cohort_size)
     true_dims: jnp.ndarray  # (total_modules,) int32
     dims: tuple = ()  # the same true dims as static Python ints
+    client_mask: jnp.ndarray | None = None  # (cohort_size,) float32 validity
+    weights: jnp.ndarray | None = None  # (cohort_size,) float32, normalized
 
 
 def pack(
@@ -88,6 +104,9 @@ def pack(
     *,
     granularity: str = "module",
     joint_ab: bool = False,
+    client_mask=None,
+    weights=None,
+    cohort_size: int | None = None,
 ) -> tuple[dict, PackSpec]:
     """Pack a stacked client-delta pytree into shape buckets.
 
@@ -97,9 +116,38 @@ def pack(
     operate over the whole leaf).  ``joint_ab`` concatenates each
     ``{"A": ..., "B": ...}`` node's vec dims into one joint matrix (the
     paper's App. B.2 joint mode).
+
+    ``client_mask`` marks valid client slots (1) vs cohort padding (0);
+    masked columns of every bucket are zeroed so garbage in padded slots is
+    inert.  ``weights`` are normalized per-client aggregation weights (the
+    engine passes them pre-masked and normalized); both ride on the
+    returned ``Bucket``s.  ``cohort_size`` zero-pads the client axis up to
+    a canonical size (``stacking.canonical_cohort_size``) and extends the
+    mask with zeros — the shape-static partial-participation layout.
     """
     if granularity not in ("module", "leaf"):
         raise ValueError(f"unknown granularity: {granularity!r}")
+    orig_clients = None
+    if cohort_size is not None:
+        leaves = jax.tree_util.tree_leaves(stacked)
+        if not leaves:
+            raise ValueError("pack: empty pytree")
+        orig_clients = int(jnp.asarray(leaves[0]).shape[0])
+        pad_c = cohort_size - orig_clients
+        if pad_c < 0:
+            raise ValueError(f"cohort_size {cohort_size} < client count {orig_clients}")
+        if pad_c:
+            stacked = stacking.pad_cohort(stacked, cohort_size)
+            base = (
+                jnp.ones((orig_clients,), jnp.float32)
+                if client_mask is None
+                else jnp.asarray(client_mask, jnp.float32)
+            )
+            client_mask = jnp.concatenate([base, jnp.zeros((pad_c,), jnp.float32)])
+            if weights is not None:
+                weights = jnp.concatenate(
+                    [jnp.asarray(weights, jnp.float32), jnp.zeros((pad_c,), jnp.float32)]
+                )
     entries: list[PackEntry] = []
     mats_by_bucket: dict[BucketKey, list] = {}
     dims_by_bucket: dict[BucketKey, list] = {}
@@ -178,19 +226,28 @@ def pack(
     if len(set(n_clients_seen)) != 1:
         raise ValueError(f"inconsistent client counts across leaves: {set(n_clients_seen)}")
 
-    buckets = {
-        key: Bucket(
-            data=jnp.concatenate(mats, axis=0),
+    mask32 = None if client_mask is None else jnp.asarray(client_mask, jnp.float32)
+    w32 = None if weights is None else jnp.asarray(weights, jnp.float32)
+
+    def build(mats, key):
+        data = jnp.concatenate(mats, axis=0)
+        if mask32 is not None:
+            data = data * mask32.astype(data.dtype)
+        return Bucket(
+            data=data,
             true_dims=jnp.asarray(dims_by_bucket[key], jnp.int32),
             dims=tuple(dims_by_bucket[key]),
+            client_mask=mask32,
+            weights=w32,
         )
-        for key, mats in mats_by_bucket.items()
-    }
+
+    buckets = {key: build(mats, key) for key, mats in mats_by_bucket.items()}
     spec = PackSpec(
         entries=tuple(entries),
         skeleton=skeleton,
-        n_clients=n_clients_seen[0],
+        n_clients=orig_clients if orig_clients is not None else n_clients_seen[0],
         bucket_dims={k: (b.data.shape[0], b.data.shape[1]) for k, b in buckets.items()},
+        cohort_size=n_clients_seen[0],
     )
     return buckets, spec
 
@@ -270,8 +327,18 @@ jax.tree_util.register_pytree_node(
 # ---------------------------------------------------------------------------
 
 
+def _bucket_mean(bucket: Bucket) -> jnp.ndarray:
+    """Mean over the client axis: legacy unweighted, or the normalized
+    weighted sum (masked slots carry weight zero) accumulated in float32."""
+    if bucket.weights is None:
+        return jnp.mean(bucket.data, axis=-1)
+    return jnp.einsum(
+        "mvc,c->mv", bucket.data.astype(jnp.float32), bucket.weights
+    ).astype(bucket.data.dtype)
+
+
 def _ties_bucket(
-    data: jnp.ndarray, dims: tuple, keep: float, scale: float
+    data: jnp.ndarray, dims: tuple, keep: float, scale: float, w=None
 ) -> jnp.ndarray:
     """Batched TIES (trim -> elect sign -> disjoint mean) over one bucket.
 
@@ -281,27 +348,44 @@ def _ties_bucket(
     different sizes without float32 truncation skew.  Padded zeros never
     survive the trim (kth threshold > 0 excludes them; a zero threshold
     keeps them as zero values, which the ``trimmed != 0`` mask drops).
+    ``w`` (normalized per-client weights) switches the election to weighted
+    mass and the disjoint mean to a weighted average, mirroring
+    ``aggregators._ties_leaf``.
     """
     b, d, nc = data.shape
     flat = jnp.swapaxes(data, 1, 2).astype(jnp.float32)  # (B, nc, d)
-    k = jnp.asarray([max(int(keep * di), 1) for di in dims], jnp.int32)
+    k_list = [max(int(keep * di), 1) for di in dims]
+    k = jnp.asarray(k_list, jnp.int32)
     absx = jnp.abs(flat)
-    sorted_desc = -jnp.sort(-absx, axis=-1)
+    # top_k once at the bucket's max k; each module reads its own k-th value.
+    topv = jax.lax.top_k(absx, max(k_list))[0]  # (B, nc, max_k) descending
     kth_idx = jnp.broadcast_to((k - 1)[:, None, None], (b, nc, 1))
-    kth = jnp.take_along_axis(sorted_desc, kth_idx, axis=-1)  # per-client k-th largest
+    kth = jnp.take_along_axis(topv, kth_idx, axis=-1)  # per-client k-th largest
     trimmed = jnp.where(absx >= kth, flat, 0.0)
-    elected = jnp.sign(jnp.sum(trimmed, axis=1))  # (B, d)
-    elected = jnp.where(elected == 0.0, 1.0, elected)
-    agree = (jnp.sign(trimmed) == elected[:, None, :]) & (trimmed != 0.0)
-    num = jnp.sum(jnp.where(agree, trimmed, 0.0), axis=1)
-    den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=1), 1.0)
+    if w is None:
+        elected = jnp.sign(jnp.sum(trimmed, axis=1))  # (B, d)
+        elected = jnp.where(elected == 0.0, 1.0, elected)
+        agree = (jnp.sign(trimmed) == elected[:, None, :]) & (trimmed != 0.0)
+        num = jnp.sum(jnp.where(agree, trimmed, 0.0), axis=1)
+        den = jnp.maximum(jnp.sum(agree.astype(jnp.float32), axis=1), 1.0)
+    else:
+        wc = w[None, :, None]
+        elected = jnp.sign(jnp.sum(wc * trimmed, axis=1))
+        elected = jnp.where(elected == 0.0, 1.0, elected)
+        agree = (jnp.sign(trimmed) == elected[:, None, :]) & (trimmed != 0.0)
+        num = jnp.sum(jnp.where(agree, wc * trimmed, 0.0), axis=1)
+        den = jnp.maximum(jnp.sum(wc * agree.astype(jnp.float32), axis=1), 1e-12)
     return scale * num / den
 
 
 def _fedrpca_bucket(
     bucket: Bucket, cfg, shrink_fn: Callable
 ) -> tuple[jnp.ndarray, dict]:
-    """One-dispatch FedRPCA over a bucket: returns ((B, vec) update, diag)."""
+    """One-dispatch FedRPCA over a bucket: returns ((B, vec) update, diag).
+
+    The bucket's client mask rides into ``robust_pca_bucket`` (n_eff ADMM
+    constants, masked tail) and the column means become weighted sums over
+    the active clients."""
     m = bucket.data.astype(jnp.float32)
     res = rpca_lib.robust_pca_bucket(
         m,
@@ -310,10 +394,16 @@ def _fedrpca_bucket(
         tol=None if cfg.rpca_fixed_iters else cfg.rpca_tol,
         shrink_fn=shrink_fn,
         fused_tail=cfg.rpca_fused_tail,
+        client_mask=bucket.client_mask,
     )
-    low_mean = jnp.mean(res.low_rank, axis=-1)
-    sparse_mean = jnp.mean(res.sparse, axis=-1)
-    # E^(t) = ||S . 1|| / ||M . 1|| per module (App. B.3); padded rows are 0.
+    if bucket.weights is None:
+        low_mean = jnp.mean(res.low_rank, axis=-1)
+        sparse_mean = jnp.mean(res.sparse, axis=-1)
+    else:
+        low_mean = jnp.einsum("mvc,c->mv", res.low_rank, bucket.weights)
+        sparse_mean = jnp.einsum("mvc,c->mv", res.sparse, bucket.weights)
+    # E^(t) = ||S . 1|| / ||M . 1|| per module (App. B.3); padded rows and
+    # masked columns are 0 so they drop out of both sums.
     energy = jax.vmap(sparse_energy_ratio)(m, res.sparse)
     if cfg.adaptive_beta:
         beta = jnp.clip(1.0 / jnp.maximum(energy, 1e-12), cfg.beta_min, cfg.beta_max)
@@ -323,15 +413,16 @@ def _fedrpca_bucket(
     return update, {"beta": beta, "energy": energy, "residual": res.residual}
 
 
-def _dare_rescale(stacked: PyTree, drop_rate: float, key) -> PyTree:
+def _dare_rescale(stacked: PyTree, drop_rate: float, key, mask=None) -> PyTree:
     """Per-leaf DARE drop + rescale, RNG-identical to the reference path
-    (fold_in by flattened leaf index over the leaf's own shape)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
+    (``aggregators._dare_keep``: fold_in by flattened leaf index, and by
+    client slot when a cohort mask is present)."""
+    if key is None:
+        raise ValueError("dare requires an explicit PRNG key (got key=None)")
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     out = []
     for i, leaf in enumerate(leaves):
-        k = jax.random.fold_in(key, i)
-        keep = jax.random.bernoulli(k, 1.0 - drop_rate, leaf.shape)
+        keep = _dare_keep(key, i, leaf.shape, drop_rate, mask)
         out.append(jnp.where(keep, leaf, 0) / (1.0 - drop_rate))
     return jax.tree_util.tree_unflatten(treedef, out)
 
@@ -342,6 +433,8 @@ def aggregate_packed(
     *,
     shrink_fn: Callable = rpca_lib.soft_threshold,
     key=None,
+    mask=None,
+    weights=None,
     with_diagnostics: bool = False,
 ):
     """Aggregate stacked client deltas with one batched call per shape bucket.
@@ -350,42 +443,60 @@ def aggregate_packed(
     same results (see tests/test_engine.py parity suite), but the traced
     program contains exactly one RPCA loop / mean / TIES election per bucket
     regardless of how many leaves the delta tree has.
+
+    ``mask``/``weights`` are the per-client validity mask and raw weights of
+    shape-static partial participation (see ``aggregators.aggregate``); the
+    engine zeroes masked bucket columns at pack time and threads normalized
+    weights through every bucket op.  Both None -> the legacy unweighted
+    dispatch, bit-for-bit.
     """
     cfg = cfg or AggregatorConfig()
     method = cfg.method
+    mask32 = None if mask is None else jnp.asarray(mask, jnp.float32)
+    w = _client_weights(mask32, weights)
     if method == "dare":
-        stacked = _dare_rescale(stacked, cfg.dare_drop, key)
+        stacked = _dare_rescale(stacked, cfg.dare_drop, key, mask=mask32)
 
     granularity = "leaf" if method == "ties" else "module"
     joint = method == "fedrpca" and cfg.joint_ab
-    buckets, spec = pack(stacked, granularity=granularity, joint_ab=joint)
+    buckets, spec = pack(
+        stacked, granularity=granularity, joint_ab=joint,
+        client_mask=mask32, weights=w,
+    )
 
     updates: dict[BucketKey, jnp.ndarray] = {}
     diag_arrays: dict[str, dict] = {}
 
     if method in ("fedavg", "dare"):
         for bkey, bucket in buckets.items():
-            updates[bkey] = jnp.mean(bucket.data, axis=-1)
+            updates[bkey] = _bucket_mean(bucket)
     elif method == "task_arithmetic":
         for bkey, bucket in buckets.items():
-            updates[bkey] = cfg.beta * jnp.mean(bucket.data, axis=-1)
+            updates[bkey] = (cfg.beta * _bucket_mean(bucket)).astype(bucket.data.dtype)
     elif method == "ties":
         for bkey, bucket in buckets.items():
             updates[bkey] = _ties_bucket(
-                bucket.data, bucket.dims, cfg.ties_keep, cfg.ties_scale
+                bucket.data, bucket.dims, cfg.ties_keep, cfg.ties_scale, bucket.weights
             )
     elif method == "fedexp":
-        # Global extrapolation factor over ALL buckets (padding adds zeros).
+        # Global extrapolation factor over ALL buckets (padding adds zeros,
+        # and masked columns were zeroed at pack time, so the squared-norm
+        # sums run over active clients only).
         eps = 1e-3
         sum_sq = 0.0
         mean_sq = 0.0
         means = {}
+        n_eff = (
+            spec.n_clients
+            if mask32 is None
+            else jnp.maximum(jnp.sum(mask32), 1.0)
+        )
         for bkey, bucket in buckets.items():
             sum_sq += jnp.sum(jnp.square(bucket.data.astype(jnp.float32)))
-            mean = jnp.mean(bucket.data, axis=-1)
+            mean = _bucket_mean(bucket)
             means[bkey] = mean
             mean_sq += jnp.sum(jnp.square(mean.astype(jnp.float32)))
-        eta = jnp.maximum(1.0, sum_sq / (2.0 * spec.n_clients * (mean_sq + eps)))
+        eta = jnp.maximum(1.0, sum_sq / (2.0 * n_eff * (mean_sq + eps)))
         for bkey, mean in means.items():
             updates[bkey] = (eta * mean).astype(mean.dtype)
     elif method == "fedrpca":

@@ -225,6 +225,7 @@ def robust_pca_bucket(
     shrink_fn: Callable = soft_threshold,
     fused_tail: bool = False,
     interpret: bool | None = None,
+    client_mask: jnp.ndarray | None = None,
 ) -> RPCAResult:
     """RPCA over a whole shape bucket in ONE dispatch (no per-leaf Python).
 
@@ -235,6 +236,15 @@ def robust_pca_bucket(
     the per-matrix reference exactly.  Padded rows stay identically zero
     through both the Gram-trick SVT and the elementwise tail, so the result
     rows equal the unpadded per-matrix decomposition.
+
+    ``client_mask`` is the column-axis twin of the zero-row story: a
+    (n_clients,) validity mask for shape-static partial participation.
+    Masked columns are zeroed on entry, the ADMM constants use the
+    *effective* client count ``n_eff = sum(mask)`` (numel = true_dim *
+    n_eff, lam = 1/sqrt(max(true_dim, n_eff))), and the tail re-masks S/Y
+    each iteration so eigh round-off in the SVT cannot leak into padded
+    slots — the active sub-matrix decomposition matches the dense
+    sub-cohort call (DESIGN.md §5).
 
     ``tol=None`` runs the fixed-iteration fori_loop (shape-static cost, the
     mesh path).  With a tolerance, a while_loop iterates until every module's
@@ -253,15 +263,23 @@ def robust_pca_bucket(
         true_dims = jnp.full((b,), d1p, jnp.int32)
     dims_f = true_dims.astype(jnp.float32)
 
+    if client_mask is not None:
+        cmask = jnp.asarray(client_mask, jnp.float32)
+        m = m * cmask  # zero inactive columns (idempotent if pre-masked)
+        n_eff = jnp.maximum(jnp.sum(cmask), 1.0)
+    else:
+        cmask = None
+        n_eff = float(d2)
+
     abs_sum = jnp.sum(jnp.abs(m), axis=(1, 2))
-    numel = dims_f * d2
+    numel = dims_f * n_eff
     mu_v = jnp.where(abs_sum > _EPS, numel / (4.0 * jnp.maximum(abs_sum, _EPS)), 1.0)
     if mu is not None:
         mu_v = jnp.full((b,), mu, jnp.float32)
     lam_v = (
         jnp.full((b,), lam, jnp.float32)
         if lam is not None
-        else 1.0 / jnp.sqrt(jnp.maximum(dims_f, float(d2)))
+        else 1.0 / jnp.sqrt(jnp.maximum(dims_f, n_eff))
     )
     rho = 1.0 / mu_v
     thresh = rho * lam_v
@@ -280,9 +298,17 @@ def robust_pca_bucket(
 
         def tail(l, y):
             s, y_new, rsq = _tail_kernel.admm_tail(
-                m, l, y, rho, mu_v, thresh, interpret=interp
+                m, l, y, rho, mu_v, thresh, mask=cmask, interpret=interp
             )
             return s, y_new, jnp.sqrt(rsq)
+
+    elif cmask is not None:
+
+        def tail(l, y):
+            s = shrink_fn(m - l + rho[:, None, None] * y, thresh[:, None, None]) * cmask
+            resid = (m - l - s) * cmask
+            y_new = (y + mu_v[:, None, None] * resid) * cmask
+            return s, y_new, jnp.sqrt(jnp.sum(resid * resid, axis=(1, 2)))
 
     else:
 
@@ -331,4 +357,8 @@ def robust_pca_bucket(
         init = (zeros, zeros, zeros, err0, jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32))
         l, s, _, err, _, n_done = jax.lax.while_loop(cond, body, init)
 
+    if cmask is not None:
+        # S/Y are masked inside the tail; the final L gets one mask pass so
+        # eigh round-off cannot leave residue in inactive columns.
+        l = l * cmask
     return RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)

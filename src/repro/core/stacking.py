@@ -74,6 +74,50 @@ def canonical_vec_dim(vec_dim: int) -> int:
     return -(-vec_dim // step) * step
 
 
+#: Canonical cohort (client-axis) sizes for shape-static partial
+#: participation: sampled cohorts pad up to the next power of two (then
+#: 128-multiples) so every cohort size in a bucket shares one trace of the
+#: server round (DESIGN.md §5).
+CANONICAL_COHORT_CAP = 128
+
+
+def canonical_cohort_size(n_clients: int) -> int:
+    """Smallest canonical cohort size >= n_clients.
+
+    Powers of two up to ``CANONICAL_COHORT_CAP``, then cap-multiples — the
+    client axis is the thin dimension of every bucket, so padding waste is
+    bounded by 2x and typically far less.
+    """
+    if n_clients <= 0:
+        raise ValueError(f"cohort size must be positive, got {n_clients}")
+    p = 1
+    while p < n_clients and p < CANONICAL_COHORT_CAP:
+        p *= 2
+    if p >= n_clients:
+        return p
+    return -(-n_clients // CANONICAL_COHORT_CAP) * CANONICAL_COHORT_CAP
+
+
+def pad_cohort(stacked: PyTree, target: int) -> PyTree:
+    """Zero-pad every leaf's leading client axis up to ``target`` slots.
+
+    The padded slots must be excluded from aggregation via a client mask —
+    see ``repro.core.engine.pack(..., cohort_size=...)`` which pads and
+    extends the mask together.
+    """
+
+    def pad_leaf(x):
+        x = jnp.asarray(x)
+        pad = target - x.shape[0]
+        if pad < 0:
+            raise ValueError(f"cohort target {target} < client count {x.shape[0]}")
+        if pad == 0:
+            return x
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+    return jax.tree_util.tree_map(pad_leaf, stacked)
+
+
 def pad_matrices(mats: jnp.ndarray, target_vec: int) -> jnp.ndarray:
     """Zero-pad (modules, vec, clients) matrices along vec up to target_vec."""
     pad = target_vec - mats.shape[1]

@@ -1,5 +1,10 @@
 from repro.fed.client import LocalSpec, make_local_fn
-from repro.fed.partition import dirichlet_partition, label_distribution
+from repro.fed.partition import (
+    client_sizes,
+    data_size_weights,
+    dirichlet_partition,
+    label_distribution,
+)
 from repro.fed.server import (
     FedRunConfig,
     RoundState,
@@ -13,6 +18,8 @@ from repro.fed import synth
 __all__ = [
     "LocalSpec",
     "make_local_fn",
+    "client_sizes",
+    "data_size_weights",
     "dirichlet_partition",
     "label_distribution",
     "FedRunConfig",

@@ -42,6 +42,26 @@ def dirichlet_partition(
     return [np.asarray(sorted(ix)) for ix in idx_per_client]
 
 
+def client_sizes(parts: List[np.ndarray]) -> np.ndarray:
+    """(n_clients,) local dataset sizes of a partition."""
+    return np.asarray([len(ix) for ix in parts], np.int64)
+
+
+def data_size_weights(parts: List[np.ndarray]) -> np.ndarray:
+    """Normalized FedAvg weights n_k / n (Eq. 4) for a partition.
+
+    Feed these to ``run_simulation(..., client_weights=...)`` /
+    ``aggregate(..., weights=...)`` with
+    ``AggregatorConfig(weighting="data_size")`` for the paper's true
+    data-size-weighted FedAvg under heterogeneous client datasets.
+    """
+    sizes = client_sizes(parts).astype(np.float64)
+    total = sizes.sum()
+    if total <= 0:
+        raise ValueError("empty partition: no examples across clients")
+    return sizes / total
+
+
 def label_distribution(labels: np.ndarray, parts: List[np.ndarray], n_classes: int) -> np.ndarray:
     """(n_clients, n_classes) empirical label histogram per client."""
     out = np.zeros((len(parts), n_classes))

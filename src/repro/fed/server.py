@@ -4,6 +4,16 @@ The per-round computation is a single jitted function: clients execute in
 parallel under ``jax.vmap`` (CPU simulation) — the mesh execution path in
 ``repro.launch.train`` replaces the vmap with client-axis sharding, but the
 aggregation code (``repro.core.aggregate``) is byte-identical in both.
+
+Partial participation is *shape-static*: instead of gathering the sampled
+cohort to a ``|S|``-sized stack (which re-traces the whole jitted round for
+every distinct cohort size), the round samples a random permutation, takes a
+fixed ``canonical_cohort_size(clients_per_round)`` prefix of client slots,
+and marks the first ``n_active`` of them valid with a client mask.  The mask
+and (optionally data-size) weights thread through ``aggregate`` and the
+state scatter, so one compilation serves every cohort size that shares a
+canonical bucket — ``n_active`` is a traced scalar argument of the round
+function (see tests/test_cohort.py's retrace regression test).
 """
 from __future__ import annotations
 
@@ -15,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AggregatorConfig, aggregate
+from repro.core.aggregators import WEIGHTINGS, rpca_diag_summary
+from repro.core import stacking
 from repro.fed.client import LocalSpec, make_local_fn
 from repro.utils.pytree import tree_add, tree_zeros_like
 
@@ -52,27 +64,63 @@ def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState
     )
 
 
-def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
-    """Returns jitted fn: RoundState -> (RoundState, diagnostics)."""
+def make_round_fn(
+    base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None
+) -> Callable:
+    """Returns jitted fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
+
+    ``client_weights`` are per-client data sizes (or any nonnegative
+    weights, e.g. ``fed.partition.data_size_weights``); they feed the
+    aggregation when ``cfg.aggregator.weighting == "data_size"``.
+
+    With partial participation, ``n_active`` overrides the cohort size at
+    call time (clamped to the canonical padded size): every value shares the
+    single compiled round, only the validity mask changes.  ``None`` uses
+    ``cfg.clients_per_round``.
+    """
     local_fn = make_local_fn(cfg.local)
     n_clients = data_x.shape[0]
 
     sample_size = cfg.clients_per_round or n_clients
+    if not 0 < sample_size <= n_clients:
+        raise ValueError(
+            f"clients_per_round={cfg.clients_per_round} out of range for {n_clients} clients"
+        )
     partial = sample_size < n_clients
+    # Canonical padded cohort: power-of-two slots, so cohort sizes 5/7/8 of
+    # 16 clients all run the same compiled round with 8 slots.
+    cohort_pad = min(stacking.canonical_cohort_size(sample_size), n_clients)
+
+    if cfg.aggregator.weighting not in WEIGHTINGS:
+        raise ValueError(
+            f"unknown weighting: {cfg.aggregator.weighting!r} (expected one of {WEIGHTINGS})"
+        )
+    use_weights = cfg.aggregator.weighting == "data_size"
+    w_all = None
+    if use_weights:
+        if client_weights is None:
+            raise ValueError(
+                "weighting='data_size' requires client_weights (e.g. "
+                "fed.partition.data_size_weights); refusing to silently "
+                "fall back to uniform"
+            )
+        w_all = jnp.asarray(client_weights, jnp.float32)
 
     @jax.jit
-    def run_round(state: RoundState):
+    def run_round(state: RoundState, n_active=None):
         rng, sub, pick, agg_key = jax.random.split(state.rng, 4)
         if partial:
-            # Partial participation: sample clients w/o replacement, run the
-            # vmapped local phase on the gathered cohort, scatter state back.
-            cohort = jax.random.choice(
-                pick, n_clients, shape=(sample_size,), replace=False
-            )
+            # Shape-static partial participation: the first cohort_pad slots
+            # of a random permutation, of which the first n_active are valid.
+            # (A permutation prefix is a uniform sample without replacement.)
+            na = sample_size if n_active is None else jnp.clip(n_active, 1, cohort_pad)
+            cohort = jax.random.permutation(pick, n_clients)[:cohort_pad]
+            mask = (jnp.arange(cohort_pad) < na).astype(jnp.float32)
         else:
             cohort = jnp.arange(n_clients)
+            mask = None
         take = lambda t: jax.tree_util.tree_map(lambda x: x[cohort], t)
-        client_rngs = jax.random.split(sub, sample_size)
+        client_rngs = jax.random.split(sub, cohort_pad if partial else n_clients)
         results = jax.vmap(
             local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0)
         )(
@@ -85,34 +133,44 @@ def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
             take(state.scaffold_ci),
             take(state.prev_local),
         )
-        stacked_deltas = results.delta  # leaves: (|S|, ...)
-        rpca_diags = {}
-        if cfg.aggregator.method == "fedrpca" and cfg.engine == "packed":
+        stacked_deltas = results.delta  # leaves: (cohort_pad, ...)
+        weights = w_all[cohort] if use_weights else None
+        agg_kw = dict(engine=cfg.engine, key=agg_key, mask=mask, weights=weights)
+        if cfg.aggregator.method == "fedrpca":
             update, ediag = aggregate(
-                stacked_deltas, cfg.aggregator, engine="packed", with_diagnostics=True
+                stacked_deltas, cfg.aggregator, with_diagnostics=True, **agg_kw
             )
-            rpca_diags = {
-                "beta_mean": ediag.mean("beta"),
-                "energy_mean": ediag.mean("energy"),
-                "rpca_residual_max": ediag.max("residual"),
-            }
+            rpca_diags = rpca_diag_summary(ediag)
         else:
-            update = aggregate(
-                stacked_deltas, cfg.aggregator, engine=cfg.engine, key=agg_key
-            )
+            update = aggregate(stacked_deltas, cfg.aggregator, **agg_kw)
+            rpca_diags = {}
         lora_global = tree_add(state.lora_global, update)
 
-        scatter = lambda full, part: jax.tree_util.tree_map(
-            lambda f, p: f.at[cohort].set(p), full, part
-        )
+        if mask is None:
+            n_eff = float(n_clients)
+            bmask = lambda x: 1.0
+            scatter = lambda full, part: jax.tree_util.tree_map(
+                lambda f, p: f.at[cohort].set(p), full, part
+            )
+            loss_mean = jnp.mean(results.final_loss)
+        else:
+            n_eff = jnp.maximum(jnp.sum(mask), 1.0)
+            bmask = lambda x: mask.reshape((cohort_pad,) + (1,) * (x.ndim - 1))
+            # Only valid slots write back: masked padding keeps old state.
+            scatter = lambda full, part: jax.tree_util.tree_map(
+                lambda f, p: f.at[cohort].set(jnp.where(bmask(p) > 0, p, f[cohort])),
+                full,
+                part,
+            )
+            loss_mean = jnp.sum(mask * results.final_loss) / n_eff
         new_ci = scatter(state.scaffold_ci, results.new_ci)
         new_prev = scatter(state.prev_local, results.lora)
         new_c = state.scaffold_c
         if cfg.local.scaffold:
             # c <- c + |S|/M * mean_S(ci_new - ci_old)   (SCAFFOLD eq. 5)
-            frac = sample_size / n_clients
+            frac = n_eff / n_clients
             delta_ci = jax.tree_util.tree_map(
-                lambda new, old: jnp.mean(new - old[cohort], axis=0),
+                lambda new, old: jnp.sum(bmask(new) * (new - old[cohort]), axis=0) / n_eff,
                 results.new_ci,
                 state.scaffold_ci,
             )
@@ -126,7 +184,7 @@ def make_round_fn(base: PyTree, data_x, data_y, cfg: FedRunConfig) -> Callable:
             prev_local=new_prev,
             rng=rng,
         )
-        diags = {"mean_local_loss": jnp.mean(results.final_loss), **rpca_diags}
+        diags = {"mean_local_loss": loss_mean, **rpca_diags}
         return new_state, diags
 
     return run_round
@@ -142,11 +200,12 @@ def run_simulation(
     *,
     eval_every: int = 1,
     log_fn: Optional[Callable[[int, dict], None]] = None,
+    client_weights=None,
 ):
     """Runs ``cfg.rounds`` rounds; returns (final lora, accuracy history)."""
     n_clients = data_x.shape[0]
     state = init_round_state(lora_init, n_clients, cfg.seed)
-    round_fn = make_round_fn(base, data_x, data_y, cfg)
+    round_fn = make_round_fn(base, data_x, data_y, cfg, client_weights=client_weights)
     history = []
     for r in range(cfg.rounds):
         state, diags = round_fn(state)
@@ -159,7 +218,14 @@ def run_simulation(
 
 
 def rounds_to_reach(history: np.ndarray, frac: float = 0.9) -> int:
-    """R@90-style metric: first round index reaching frac * final accuracy."""
+    """R@90-style metric: 1-based count of rounds until frac * final accuracy.
+
+    Returns -1 on an empty history.  When the target is never reached (only
+    possible with a negative final accuracy, since final >= frac * final
+    whenever final >= 0 and frac <= 1) returns ``len(history)`` — the same
+    value as first reaching the target on the final round, so treat the
+    maximum as "took all rounds (or never converged)", an upper bound.
+    """
     if len(history) == 0:
         return -1
     target = frac * history[-1]

@@ -17,14 +17,21 @@ def rpca_admm_tail_ref(
     rho: jnp.ndarray,  # (B,) per-module scalars
     mu: jnp.ndarray,
     thresh: jnp.ndarray,
+    mask=None,  # optional (clients,) validity mask
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused ADMM tail: S update, dual ascent, per-module residual sumsq."""
+    """Fused ADMM tail: S update, dual ascent, per-module residual sumsq.
+
+    ``mask`` zeroes inactive client columns of S / new-Y and excludes them
+    from the residual sums (shape-static partial participation); ``None``
+    behaves as all-ones.
+    """
     rho_ = rho[:, None, None].astype(m.dtype)
     mu_ = mu[:, None, None].astype(m.dtype)
     th_ = thresh[:, None, None].astype(m.dtype)
-    s = soft_threshold_ref(m - l + rho_ * y, th_)
-    resid = m - l - s
-    y_new = y + mu_ * resid
+    msk = 1.0 if mask is None else jnp.asarray(mask, m.dtype)[None, None, :]
+    s = soft_threshold_ref(m - l + rho_ * y, th_) * msk
+    resid = (m - l - s) * msk
+    y_new = (y + mu_ * resid) * msk
     rsq = jnp.sum(jnp.square(resid.astype(jnp.float32)), axis=(1, 2))
     return s, y_new, rsq
 

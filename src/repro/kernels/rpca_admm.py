@@ -30,19 +30,20 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_VEC = 512
 
 
-def _kernel(rho_ref, mu_ref, th_ref, m_ref, l_ref, y_ref, s_ref, yo_ref, r_ref):
+def _kernel(rho_ref, mu_ref, th_ref, mask_ref, m_ref, l_ref, y_ref, s_ref, yo_ref, r_ref):
     j = pl.program_id(1)
     rho = rho_ref[0, 0]
     mu = mu_ref[0, 0]
     th = th_ref[0, 0]
+    msk = mask_ref[...]  # (1, 1, nc) client validity mask; all-ones when dense
     m = m_ref[...]
     l = l_ref[...]
     y = y_ref[...]
     z = m - l + rho * y
-    s = jnp.sign(z) * jnp.maximum(jnp.abs(z) - th, 0.0)
-    resid = m - l - s
+    s = (jnp.sign(z) * jnp.maximum(jnp.abs(z) - th, 0.0)) * msk
+    resid = (m - l - s) * msk
     s_ref[...] = s
-    yo_ref[...] = y + mu * resid
+    yo_ref[...] = (y + mu * resid) * msk
     part = jnp.sum(jnp.square(resid.astype(jnp.float32)))
 
     @pl.when(j == 0)
@@ -63,6 +64,7 @@ def admm_tail(
     mu: jnp.ndarray,
     thresh: jnp.ndarray,
     *,
+    mask: Optional[jnp.ndarray] = None,
     block_vec: int = DEFAULT_BLOCK_VEC,
     interpret: Optional[bool] = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -72,13 +74,20 @@ def admm_tail(
       m, l, y: (B, vec_dim, n_clients) float arrays (zero rows in the padded
         vec region stay exactly zero through the tail).
       rho, mu, thresh: per-module (B,) scalars; ``thresh = rho * lam``.
+      mask: optional (n_clients,) client validity mask for shape-static
+        partial participation.  Masked (zero) columns of S and the new Y are
+        forced to exactly zero and excluded from the blockwise residual
+        partial sums, so padded cohort slots never contribute — even when
+        the SVT step leaked tiny nonzeros into them (DESIGN.md §5).  ``None``
+        is equivalent to all-ones (multiplying by 1.0 is exact, so the dense
+        path is bit-identical).
       block_vec: tile size along the vec dimension.
       interpret: Pallas interpret mode; None autodetects (interpret off-TPU,
         compiled on TPU — same policy as the ops.py wrappers).
 
     Returns:
       (S, Y_new, resid_sumsq) with resid_sumsq a (B,) float32 array of
-      ``sum((M - L - S)^2)`` per module.
+      ``sum((M - L - S)^2)`` per module (active columns only when masked).
     """
     if interpret is None:
         from repro.kernels.ops import _interpret_default
@@ -96,12 +105,15 @@ def admm_tail(
         m, l, y = padder(m), padder(l), padder(y)
     grid = (b, m.shape[1] // bv)
     scal = lambda v: jnp.asarray(v, jnp.float32).reshape(b, 1)
+    mvec = jnp.ones((nc,), jnp.float32) if mask is None else jnp.asarray(mask, jnp.float32)
+    mvec = mvec.reshape(1, 1, nc)
     sspec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    mspec = pl.BlockSpec((1, 1, nc), lambda i, j: (0, 0, 0))
     tspec = pl.BlockSpec((1, bv, nc), lambda i, j: (i, j, 0))
     s, y_new, rsq = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[sspec, sspec, sspec, tspec, tspec, tspec],
+        in_specs=[sspec, sspec, sspec, mspec, tspec, tspec, tspec],
         out_specs=[tspec, tspec, sspec],
         out_shape=[
             jax.ShapeDtypeStruct(m.shape, m.dtype),
@@ -109,7 +121,7 @@ def admm_tail(
             jax.ShapeDtypeStruct((b, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(scal(rho), scal(mu), scal(thresh), m, l, y)
+    )(scal(rho), scal(mu), scal(thresh), mvec, m, l, y)
     if pad_v:
         s, y_new = s[:, :d1, :], y_new[:, :d1, :]
     return s, y_new, rsq[:, 0]

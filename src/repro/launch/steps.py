@@ -35,6 +35,8 @@ def make_fed_train_step(
     remat: bool = True,
     microbatch: int = 1,
     engine: str = "packed",
+    clients_per_round: int = 0,
+    client_weights=None,
 ) -> Callable:
     """(base, lora_global, batch) -> (new_lora_global, metrics).
 
@@ -49,8 +51,22 @@ def make_fed_train_step(
     batched call per shape bucket (the production path — the compiled
     program holds one RPCA loop per bucket instead of one per LoRA leaf);
     "reference" keeps the per-leaf path for parity runs.
+
+    ``clients_per_round`` > 0 enables mask-based partial participation: the
+    client axis is mesh-sharded, so instead of gathering a sub-cohort the
+    step samples a validity mask over the M slots from ``agg_key`` (required
+    in that case) and the aggregation excludes masked clients — the compiled
+    program stays shape-static.  ``client_weights`` are per-client data
+    sizes, used when ``agg_cfg.weighting == "data_size"``.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
+    use_weights = agg_cfg.weighting == "data_size"
+    if use_weights and client_weights is None:
+        raise ValueError(
+            "weighting='data_size' requires client_weights; refusing to "
+            "silently fall back to uniform"
+        )
+    w_clients = None if client_weights is None else jnp.asarray(client_weights, jnp.float32)
 
     def client_update(base, lora_global, client_batch):
         def full_loss(l, b):
@@ -123,11 +139,30 @@ def make_fed_train_step(
         deltas, losses = jax.vmap(client_fn)(
             batch["tokens"], batch["labels"], *extras.values()
         )
+        m = batch["tokens"].shape[0]
+        mask = None
+        if clients_per_round > m:
+            raise ValueError(
+                f"clients_per_round={clients_per_round} exceeds the batch's "
+                f"{m} client slots"
+            )
+        if clients_per_round and clients_per_round < m:
+            if agg_key is None:
+                raise ValueError("clients_per_round > 0 requires an agg_key per round")
+            perm = jax.random.permutation(jax.random.fold_in(agg_key, 0x5EED), m)
+            mask = jnp.zeros((m,), jnp.float32).at[perm[:clients_per_round]].set(1.0)
+        weights = w_clients if use_weights else None
         # agg_key varies the stochastic aggregators (dare) across rounds;
         # None keeps the step a pure (base, lora, batch) function.
-        update = aggregate(deltas, agg_cfg, engine=engine, key=agg_key)
+        update = aggregate(
+            deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights
+        )
         new_lora = tree_add(lora_global, update)
-        return new_lora, {"loss": jnp.mean(losses)}
+        if mask is None:
+            loss = jnp.mean(losses)
+        else:
+            loss = jnp.sum(mask * losses) / jnp.maximum(jnp.sum(mask), 1.0)
+        return new_lora, {"loss": loss}
 
     return fed_train_step
 

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import ENGINES, METHODS, AggregatorConfig
+from repro.core import ENGINES, METHODS, WEIGHTINGS, AggregatorConfig
 from repro.data import client_lm_datasets
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -63,6 +63,12 @@ def main(argv=None):
     ap.add_argument("--aggregator", default="fedrpca", choices=list(METHODS))
     ap.add_argument("--engine", default="packed", choices=list(ENGINES),
                     help="server aggregation engine (packed = bucketed batched)")
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="partial participation: sample this many clients per "
+                         "round via a shape-static validity mask (0 = all)")
+    ap.add_argument("--weighting", default="uniform", choices=list(WEIGHTINGS),
+                    help="client aggregation weights: uniform mean or "
+                         "data-size-weighted (true FedAvg)")
     ap.add_argument("--rpca-iters", type=int, default=30)
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
@@ -90,11 +96,18 @@ def main(argv=None):
         lora, meta = restore_checkpoint(args.ckpt_dir, lora)
         log.info("resumed from step %s", meta.get("step"))
 
-    agg = AggregatorConfig(method=args.aggregator, rpca_iters=args.rpca_iters)
+    agg = AggregatorConfig(
+        method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting
+    )
+    # Synthetic client shards all hold n_seqs sequences; real pipelines pass
+    # partition sizes here (fed.partition.data_size_weights).
+    client_sizes = np.full(args.clients, client_tokens.shape[1], np.float64)
     step = jax.jit(
         steps_lib.make_fed_train_step(
             cfg, agg, local_lr=args.local_lr, local_steps=args.local_steps,
             local_optimizer=args.local_optimizer, remat=False, engine=args.engine,
+            clients_per_round=args.clients_per_round,
+            client_weights=client_sizes / client_sizes.sum(),
         )
     )
 

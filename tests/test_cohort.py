@@ -1,0 +1,418 @@
+"""Shape-static cohorts: mask/weight-aware aggregation across every layer.
+
+The parity suite proves, for every method in METHODS on mixed-shape
+bf16/f32 trees, that (a) the masked-padded cohort result equals the dense
+result computed on the true sub-cohort — for multiple cohort sizes sharing
+one canonical bucket — and (b) the uniform-weight default reproduces the
+legacy unweighted output bit-for-bit.  A retrace regression test asserts
+cohort sizes {5, 7, 8} of 16 clients compile the server round exactly once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregatorConfig,
+    METHODS,
+    aggregate,
+    dare,
+    fedavg,
+    fedexp,
+    fedrpca,
+    task_arithmetic,
+    ties_merging,
+)
+from repro.core import rpca as rpca_lib
+from repro.core.engine import pack, unpack
+from repro.core.stacking import canonical_cohort_size, pad_cohort
+from repro.fed import (
+    FedRunConfig,
+    LocalSpec,
+    init_round_state,
+    make_round_fn,
+    rounds_to_reach,
+    run_simulation,
+    synth,
+)
+from repro.optim import make_optimizer
+
+PAD = 8  # canonical cohort bucket shared by the sampled sizes below
+
+TOL = {
+    jnp.float32: dict(atol=5e-6, rtol=1e-5),
+    jnp.bfloat16: dict(atol=0.02, rtol=0.02),
+}
+
+
+def assert_trees_close(a, b, dtype=jnp.float32):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), **TOL[dtype]
+        ),
+        a,
+        b,
+    )
+
+
+def padded_tree(rng, n_active, dtype=jnp.float32):
+    """Mixed-shape delta tree padded to PAD client slots.
+
+    Slots >= n_active hold *large garbage* (not zeros): the server's padded
+    cohort slots run real local phases on unsampled clients, so masking —
+    not zero padding — must be what excludes them.
+    """
+    def mk(*s):
+        x = rng.normal(size=s).astype(np.float32)
+        live = (np.arange(PAD) < n_active).reshape((PAD,) + (1,) * (len(s) - 1))
+        return jnp.asarray(np.where(live, x, 100.0 * x), dtype)
+
+    return {
+        "blocks": {
+            "attn": {
+                "A": mk(PAD, 4, 6, 8),  # scan-stacked: 4 modules, vec 48
+                "B": mk(PAD, 4, 8, 6),
+            }
+        },
+        "head": mk(PAD, 12, 4),  # single module, vec 48 (same vec bucket)
+        "odd": mk(PAD, 5, 10),  # vec 50 -> padded vec bucket
+    }
+
+
+def take_clients(tree, n):
+    return jax.tree_util.tree_map(lambda x: x[:n], tree)
+
+
+METHOD_CONFIGS = [
+    pytest.param(AggregatorConfig(method="fedavg"), id="fedavg"),
+    pytest.param(AggregatorConfig(method="task_arithmetic", beta=2.5), id="task_arithmetic"),
+    pytest.param(AggregatorConfig(method="ties", ties_keep=0.2), id="ties"),
+    pytest.param(AggregatorConfig(method="fedexp"), id="fedexp"),
+    pytest.param(AggregatorConfig(method="dare", dare_drop=0.5), id="dare"),
+    pytest.param(AggregatorConfig(method="fedrpca", rpca_iters=12), id="fedrpca"),
+    pytest.param(
+        AggregatorConfig(method="fedrpca", joint_ab=True, rpca_iters=12),
+        id="fedrpca-joint",
+    ),
+]
+
+
+class TestCanonicalCohort:
+    def test_power_of_two_buckets(self):
+        assert [canonical_cohort_size(n) for n in (1, 2, 3, 5, 8, 9, 100, 128)] == [
+            1, 2, 4, 8, 8, 16, 128, 128,
+        ]
+        assert canonical_cohort_size(129) == 256
+        assert canonical_cohort_size(300) == 384  # 128-multiples past the cap
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            canonical_cohort_size(0)
+
+    def test_pad_cohort_appends_zero_slots(self, rng):
+        tree = {"w": jnp.asarray(rng.normal(size=(5, 3, 4)), jnp.float32)}
+        out = pad_cohort(tree, 8)
+        assert out["w"].shape == (8, 3, 4)
+        np.testing.assert_array_equal(np.asarray(out["w"][5:]), 0.0)
+        with pytest.raises(ValueError, match="cohort target"):
+            pad_cohort(tree, 4)
+
+
+class TestPackCohort:
+    def test_pack_pads_and_masks(self, rng):
+        tree = {"w": jnp.asarray(rng.normal(size=(6, 6, 8)), jnp.float32)}
+        buckets, spec = pack(tree, cohort_size=8)
+        (bucket,) = buckets.values()
+        assert bucket.data.shape[-1] == 8
+        assert spec.n_clients == 6 and spec.cohort_size == 8
+        np.testing.assert_array_equal(
+            np.asarray(bucket.client_mask), [1, 1, 1, 1, 1, 1, 0, 0]
+        )
+        # zero-column padding is lossless for a weighted mean
+        w = bucket.client_mask / jnp.sum(bucket.client_mask)
+        out = unpack(spec, {k: jnp.einsum("mvc,c->mv", b.data, w) for k, b in buckets.items()})
+        assert_trees_close(out, jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), tree))
+
+    def test_masked_columns_zeroed(self, rng):
+        tree = {"w": jnp.full((4, 3, 3), 7.0, jnp.float32)}
+        mask = jnp.asarray([1, 1, 0, 0], jnp.float32)
+        buckets, _ = pack(tree, client_mask=mask)
+        (bucket,) = buckets.values()
+        np.testing.assert_array_equal(np.asarray(bucket.data[..., 2:]), 0.0)
+
+
+class TestMaskedParity:
+    """Masked-padded cohort == dense sub-cohort, for >= 2 cohort sizes
+    sharing one canonical bucket, on both engines."""
+
+    @pytest.mark.parametrize("engine", ["packed", "reference"])
+    @pytest.mark.parametrize("cfg", METHOD_CONFIGS)
+    def test_masked_equals_dense(self, cfg, engine, rng):
+        key = jax.random.PRNGKey(3)
+        for n_active in (5, 7):  # both pad to the canonical 8-slot bucket
+            tree = padded_tree(rng, n_active)
+            mask = (jnp.arange(PAD) < n_active).astype(jnp.float32)
+            got = aggregate(tree, cfg, engine=engine, key=key, mask=mask)
+            want = aggregate(
+                take_clients(tree, n_active), cfg, engine=engine, key=key,
+                mask=jnp.ones(n_active),
+            )
+            assert_trees_close(got, want)
+
+    @pytest.mark.parametrize("engine", ["packed", "reference"])
+    @pytest.mark.parametrize(
+        "cfg",
+        [
+            pytest.param(AggregatorConfig(method="fedavg"), id="fedavg"),
+            pytest.param(AggregatorConfig(method="fedrpca", rpca_iters=10), id="fedrpca"),
+        ],
+    )
+    def test_masked_equals_dense_bf16(self, cfg, engine, rng):
+        tree = padded_tree(rng, 5, dtype=jnp.bfloat16)
+        mask = (jnp.arange(PAD) < 5).astype(jnp.float32)
+        got = aggregate(tree, cfg, engine=engine, mask=mask)
+        want = aggregate(
+            take_clients(tree, 5), cfg, engine=engine, mask=jnp.ones(5)
+        )
+        assert_trees_close(got, want, jnp.bfloat16)
+
+    @pytest.mark.parametrize("cfg", METHOD_CONFIGS)
+    def test_masked_cross_engine(self, cfg, rng):
+        """Packed and reference agree on the same masked padded cohort."""
+        key = jax.random.PRNGKey(5)
+        tree = padded_tree(rng, 6)
+        mask = (jnp.arange(PAD) < 6).astype(jnp.float32)
+        packed = aggregate(tree, cfg, engine="packed", key=key, mask=mask)
+        ref = aggregate(tree, cfg, engine="reference", key=key, mask=mask)
+        assert_trees_close(packed, ref)
+
+    @pytest.mark.parametrize("engine", ["packed", "reference"])
+    @pytest.mark.parametrize(
+        "method,kw",
+        [("fedavg", {}), ("ties", {}), ("fedexp", {}), ("fedrpca", dict(rpca_iters=10))],
+    )
+    def test_weighted_masked_parity(self, method, kw, engine, rng):
+        """Data-size weights: padded weighted result == dense weighted result."""
+        cfg = AggregatorConfig(method=method, **kw)
+        w = jnp.asarray(rng.uniform(0.5, 2.0, PAD), jnp.float32)
+        tree = padded_tree(rng, 5)
+        mask = (jnp.arange(PAD) < 5).astype(jnp.float32)
+        got = aggregate(tree, cfg, engine=engine, mask=mask, weights=w)
+        want = aggregate(
+            take_clients(tree, 5), cfg, engine=engine, mask=jnp.ones(5), weights=w[:5]
+        )
+        assert_trees_close(got, want)
+
+    def test_weighted_fedavg_is_weighted_sum(self, rng):
+        """True FedAvg: sum_k (n_k / n) d_k, on both engines."""
+        tree = {"w": jnp.asarray(rng.normal(size=(4, 6, 3)), jnp.float32)}
+        sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+        want = jnp.einsum("c,cij->ij", sizes / jnp.sum(sizes), tree["w"])
+        for engine in ("packed", "reference"):
+            got = aggregate(
+                tree, AggregatorConfig(method="fedavg"), engine=engine, weights=sizes
+            )
+            np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want), atol=1e-6)
+
+    def test_uniform_default_bitwise_legacy(self, rng):
+        """weights=uniform (the mask-less, weight-less default) reproduces the
+        legacy unweighted aggregators bit-for-bit."""
+        tree = take_clients(padded_tree(rng, PAD), PAD)
+        key = jax.random.PRNGKey(11)
+        direct = {
+            "fedavg": lambda: fedavg(tree),
+            "task_arithmetic": lambda: task_arithmetic(tree, 2.5),
+            "ties": lambda: ties_merging(tree, 0.2, 1.0),
+            "fedexp": lambda: fedexp(tree),
+            "dare": lambda: dare(tree, 0.5, key),
+            "fedrpca": lambda: fedrpca(
+                tree, AggregatorConfig(method="fedrpca", rpca_iters=12)
+            ),
+        }
+        for p in METHOD_CONFIGS:
+            cfg = p.values[0]
+            if cfg.joint_ab:
+                continue
+            got = aggregate(tree, cfg, engine="reference", key=key)
+            jax.tree_util.tree_map(
+                lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+                got,
+                direct[cfg.method](),
+            )
+
+    def test_all_methods_covered(self):
+        assert {p.values[0].method for p in METHOD_CONFIGS} == set(METHODS)
+
+
+class TestMaskedBucketRPCA:
+    def test_masked_matches_dense_subcohort(self, rng):
+        ms = jnp.asarray(rng.normal(size=(3, 40, 5)), jnp.float32)
+        garbage = 100.0 * jnp.asarray(rng.normal(size=(3, 40, 3)), jnp.float32)
+        padded = jnp.concatenate([ms, garbage], axis=-1)
+        mask = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+        got = rpca_lib.robust_pca_bucket(padded, client_mask=mask, n_iter=30)
+        want = rpca_lib.robust_pca_bucket(ms, n_iter=30)
+        np.testing.assert_allclose(got.low_rank[..., :5], want.low_rank, atol=1e-5)
+        np.testing.assert_allclose(got.sparse[..., :5], want.sparse, atol=1e-5)
+        # masked columns are exactly zero (no eigh leakage)
+        assert float(jnp.abs(got.low_rank[..., 5:]).max()) == 0.0
+        assert float(jnp.abs(got.sparse[..., 5:]).max()) == 0.0
+
+    def test_masked_fused_tail_matches_unfused(self, rng):
+        ms = jnp.asarray(rng.normal(size=(2, 48, 8)), jnp.float32)
+        mask = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], jnp.float32)
+        plain = rpca_lib.robust_pca_bucket(ms, client_mask=mask, n_iter=20)
+        fused = rpca_lib.robust_pca_bucket(
+            ms, client_mask=mask, n_iter=20, fused_tail=True, interpret=True
+        )
+        np.testing.assert_allclose(fused.low_rank, plain.low_rank, atol=2e-6)
+        np.testing.assert_allclose(fused.sparse, plain.sparse, atol=2e-6)
+        np.testing.assert_allclose(fused.residual, plain.residual, rtol=1e-5)
+
+    def test_masked_tol_mode(self, rng):
+        ms = jnp.asarray(rng.normal(size=(2, 40, 6)), jnp.float32)
+        mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+        got = rpca_lib.robust_pca_bucket(ms, client_mask=mask, n_iter=100, tol=1e-5)
+        want = rpca_lib.robust_pca_bucket(ms[..., :4], n_iter=100, tol=1e-5)
+        np.testing.assert_allclose(got.low_rank[..., :4], want.low_rank, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.n_iter), np.asarray(want.n_iter))
+
+
+class TestDareKeyRequired:
+    def test_direct_call_raises(self, rng):
+        tree = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)}
+        with pytest.raises(ValueError, match="PRNG key"):
+            dare(tree, 0.5)
+
+    @pytest.mark.parametrize("engine", ["packed", "reference"])
+    def test_aggregate_raises(self, engine, rng):
+        tree = {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)}
+        with pytest.raises(ValueError, match="PRNG key"):
+            aggregate(tree, AggregatorConfig(method="dare"), engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# Server round: one compilation serves every cohort size in a bucket
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def retrace_task():
+    return synth.make_synth_task(n_clients=16, n_per_client=24, alpha=0.4, seed=9)
+
+
+def _local_spec(task, **kw):
+    loss = lambda base, lora, batch: synth.loss_fn(base, lora, batch, task.lora_scale)
+    defaults = dict(
+        loss_fn=loss,
+        optimizer=make_optimizer("adam", 1e-2),
+        local_steps=2,
+        batch_size=8,
+        lr=1e-2,
+    )
+    defaults.update(kw)
+    return LocalSpec(**defaults)
+
+
+class TestShapeStaticRounds:
+    def test_one_compile_many_cohort_sizes(self, retrace_task):
+        """Cohort sizes {5, 7, 8} of 16 clients share the canonical 8-slot
+        bucket -> the jitted round function compiles exactly once."""
+        task = retrace_task
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedrpca", rpca_iters=5),
+            local=_local_spec(task),
+            rounds=1,
+            clients_per_round=8,
+        )
+        round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+        state = init_round_state(synth.init_lora(task), 16, 0)
+        losses = []
+        for n_active in (5, 7, 8):
+            state, diags = round_fn(state, n_active)
+            losses.append(float(diags["mean_local_loss"]))
+        assert np.isfinite(losses).all()
+        assert round_fn._cache_size() == 1, "cohort sizes {5,7,8} must share one trace"
+
+    def test_masked_slots_do_not_touch_state(self, retrace_task):
+        """Padded cohort slots must leave per-client state untouched."""
+        task = retrace_task
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedavg"),
+            local=_local_spec(task, scaffold=True),
+            rounds=1,
+            clients_per_round=8,
+        )
+        round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+        state = init_round_state(synth.init_lora(task), 16, 0)
+        new_state, _ = round_fn(state, 5)
+        changed = jax.tree_util.tree_map(
+            lambda new, old: np.flatnonzero(
+                np.any(
+                    np.reshape(np.asarray(new != old), (16, -1)), axis=1
+                )
+            ),
+            new_state.prev_local,
+            state.prev_local,
+        )
+        for idx in jax.tree_util.tree_leaves(changed):
+            assert len(idx) <= 5, f"more than n_active clients mutated: {idx}"
+
+    @pytest.mark.parametrize("engine", ["packed", "reference"])
+    def test_rpca_diag_keys_uniform_across_engines(self, retrace_task, engine):
+        """Both engines report the same fedrpca diagnostic keys (the packed
+        engine used to be the only one with beta/energy/residual)."""
+        task = retrace_task
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedrpca", rpca_iters=5),
+            local=_local_spec(task),
+            rounds=1,
+            engine=engine,
+        )
+        round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+        state = init_round_state(synth.init_lora(task), 16, 0)
+        _, diags = round_fn(state)
+        assert set(diags) == {
+            "mean_local_loss", "beta_mean", "energy_mean", "rpca_residual_max",
+        }
+        assert all(np.isfinite(float(v)) for v in diags.values())
+
+    def test_data_size_weighted_round_runs(self, retrace_task):
+        task = retrace_task
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedavg", weighting="data_size"),
+            local=_local_spec(task),
+            rounds=2,
+            clients_per_round=6,
+        )
+        eval_fn = lambda lora: synth.accuracy(
+            task.base, lora, task.test_x, task.test_y, task.lora_scale
+        )
+        weights = np.linspace(1.0, 2.0, 16)
+        _, hist = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y,
+            cfg, eval_fn, client_weights=weights,
+        )
+        assert np.isfinite(hist).all()
+
+
+class TestRoundsToReachEdges:
+    def test_empty_history(self):
+        assert rounds_to_reach(np.asarray([])) == -1
+
+    def test_single_round(self):
+        assert rounds_to_reach(np.asarray([0.5])) == 1
+
+    def test_never_reached_negative_final(self):
+        # target = 0.9 * (-1.0) = -0.9 > every entry -> never reached
+        assert rounds_to_reach(np.asarray([-2.0, -1.5, -1.0])) == 3
+
+    def test_negative_history_with_hit(self):
+        # target = 0.9 * (-0.1) = -0.09; first entry >= target is index 2
+        assert rounds_to_reach(np.asarray([-1.0, -0.5, -0.05, -0.1])) == 3
+
+    def test_zero_history(self):
+        assert rounds_to_reach(np.asarray([0.0, 0.0])) == 1
+
+    def test_monotone_history(self):
+        assert rounds_to_reach(np.asarray([0.1, 0.5, 0.8, 0.85, 0.9]), 0.9) == 4

@@ -71,6 +71,24 @@ class TestRPCAAdmmTail:
         assert float(jnp.abs(y_new[:, 40:]).max()) == 0.0
         np.testing.assert_allclose(rsq, rsq_ref, rtol=1e-5)
 
+    def test_client_mask_blanks_inactive_columns(self, rng):
+        """Masked client columns are forced to zero and excluded from the
+        blockwise residual sums (shape-static partial participation)."""
+        m, l, y, rho, mu, th = self._inputs(rng, 2, 40, 8)
+        mask = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+        s, y_new, rsq = rpca_admm.admm_tail(m, l, y, rho, mu, th, mask=mask, interpret=True)
+        s_w, y_w, rsq_w = ref.rpca_admm_tail_ref(m, l, y, rho, mu, th, mask=mask)
+        np.testing.assert_allclose(s, s_w, atol=2e-6)
+        np.testing.assert_allclose(y_new, y_w, atol=2e-6)
+        np.testing.assert_allclose(rsq, rsq_w, rtol=1e-5)
+        assert float(jnp.abs(s[:, :, 5:]).max()) == 0.0
+        assert float(jnp.abs(y_new[:, :, 5:]).max()) == 0.0
+        # residual sums match the dense sub-cohort tail on the active columns
+        _, _, rsq_dense = ref.rpca_admm_tail_ref(
+            m[:, :, :5], l[:, :, :5], y[:, :, :5], rho, mu, th
+        )
+        np.testing.assert_allclose(rsq, rsq_dense, rtol=1e-5)
+
 
 class TestLoraMatmul:
     @pytest.mark.parametrize(
