@@ -1,20 +1,32 @@
-"""Packed-engine vs per-leaf aggregation wall-time.
+"""Packed-engine vs per-leaf aggregation wall-time, across SVT modes.
 
 Builds delta pytrees with many *separate* module leaves (the non-scan layout
 where the per-leaf reference path hurts most: one vmapped ADMM loop, one tiny
 eigh and one stack of elementwise ops per leaf) and times one jitted
-``aggregate`` call per (engine, n_modules, n_clients) cell.
+``aggregate`` call per (method, engine, svt_mode, n_modules, n_clients) cell.
+
+The trees follow the FedRPCA workload model (a shared low-rank signal plus
+per-client sparse outliers — the paper's planted structure) rather than raw
+Gaussian noise, so the SVT spectrum settles to a low post-shrink rank within
+a few ADMM iterations: the regime the warm-started subspace SVT targets.
+LoRA shapes span both the 64- and 128-dim canonical vec buckets.
 
 Sweeps module counts 32 / 128 / 512 and client counts 8 / 32 / 100.
 Quick mode (BENCH_QUICK=1 or --quick, either entry point) runs only the
-32-module, 8/32-client cells — tracing hundreds of per-leaf RPCA loops is
-exactly the dispatch pathology this engine removes, and it is slow.
+32-module, 8/32-client cells.
 
-CSV rows via the harness contract: name,us_per_call,derived — derived is the
-packed-engine speedup (reference_us / packed_us) plus compile seconds.
+Output contract:
+  * CSV rows (stdout): name,us_per_call,derived — derived carries the
+    packed speedup vs reference and, for svt_mode=subspace, the speedup vs
+    the gram-mode cell.
+  * ``BENCH_agg.json`` (path overridable via BENCH_AGG_JSON): machine-
+    readable record list {method, engine, svt_mode, n_modules, n_clients,
+    masked, us_per_call, compile_s} — uploaded as a CI artifact so the perf
+    trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -32,72 +44,113 @@ from repro.core import AggregatorConfig, aggregate  # noqa: E402
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
-RPCA_ITERS = 8
-# Two LoRA shapes so the packed engine exercises real bucketing.
-SHAPES = ((4, 16), (8, 8))
+RPCA_ITERS = 40
+# Four LoRA shapes spanning the 64- and 128-dim canonical vec buckets.
+SHAPES = ((4, 16), (8, 8), (8, 16), (4, 32))
+# Cheap non-RPCA methods included so the JSON covers the method axis.
+SIMPLE_METHODS = ("fedavg", "ties")
+
+RECORDS: list[dict] = []
 
 
-def make_tree(n_modules: int, n_clients: int, seed: int = 0) -> dict:
+def make_tree(n_modules: int, n_clients: int, seed: int = 0, rank: int = 2,
+              sparsity: float = 0.05) -> dict:
+    """Planted FedRPCA deltas: shared low-rank core + per-client sparse."""
     rng = np.random.default_rng(seed)
-    return {
-        f"layer{i:03d}": jnp.asarray(
-            rng.normal(size=(n_clients, *SHAPES[i % len(SHAPES)])), jnp.float32
-        )
-        for i in range(n_modules)
-    }
+    tree = {}
+    for i in range(n_modules):
+        shape = SHAPES[i % len(SHAPES)]
+        d = int(np.prod(shape))
+        low = rng.normal(size=(d, rank)) @ rng.normal(size=(rank, n_clients))
+        spikes = rng.random((d, n_clients)) < sparsity
+        sparse = np.where(spikes, 5.0 * rng.normal(size=(d, n_clients)), 0.0)
+        mats = (low + sparse).T.reshape(n_clients, *shape)
+        tree[f"layer{i:03d}"] = jnp.asarray(mats, jnp.float32)
+    return tree
 
 
-def time_engine(tree, cfg, engine: str, repeats: int = 3) -> tuple[float, float]:
+def record(name: str, us: float, derived: str, **meta) -> None:
+    common.emit(name, us, derived)
+    RECORDS.append({**meta, "us_per_call": round(us, 1)})
+
+
+def time_fn(fn, *args, repeats: int = 3) -> tuple[float, float]:
     """Returns (seconds_per_call, compile_seconds)."""
-    fn = jax.jit(lambda t: aggregate(t, cfg, engine=engine))
     t0 = time.perf_counter()
-    out = fn(tree)
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn(*args))
     compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     for _ in range(repeats):
-        jax.block_until_ready(fn(tree))
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / repeats, compile_s
 
 
-def time_masked(tree, cfg, n_clients: int, repeats: int = 3) -> float:
-    """Masked shape-static cohort (3/4 of the clients active), packed engine."""
+def bench_cell(tree, n_modules: int, n_clients: int) -> None:
     mask = (jnp.arange(n_clients) < max(3 * n_clients // 4, 1)).astype(jnp.float32)
-    fn = jax.jit(lambda t, m: aggregate(t, cfg, engine="packed", mask=m))
-    jax.block_until_ready(fn(tree, mask))
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        jax.block_until_ready(fn(tree, mask))
-    return (time.perf_counter() - t0) / repeats
+
+    # fedrpca: packed x {gram, subspace} + reference, dense and masked.
+    secs = {}
+    for svt_mode in ("gram", "subspace"):
+        cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS, svt_mode=svt_mode)
+        fn = jax.jit(lambda t, c=cfg: aggregate(t, c, engine="packed"))
+        s, comp = time_fn(fn, tree)
+        secs[svt_mode] = s
+        extra = "" if svt_mode == "gram" else f" svt_speedup={secs['gram'] / s:.2f}x"
+        record(
+            f"agg_fedrpca_packed_{svt_mode}_m{n_modules}_c{n_clients}",
+            s * 1e6, f"compile={comp:.2f}s{extra}",
+            method="fedrpca", engine="packed", svt_mode=svt_mode,
+            n_modules=n_modules, n_clients=n_clients, masked=False,
+            compile_s=round(comp, 2),
+        )
+        mfn = jax.jit(lambda t, m, c=cfg: aggregate(t, c, engine="packed", mask=m))
+        ms, mcomp = time_fn(mfn, tree, mask)
+        record(
+            f"agg_fedrpca_masked_{svt_mode}_m{n_modules}_c{n_clients}",
+            ms * 1e6, f"overhead_vs_dense={ms / s:.2f}x",
+            method="fedrpca", engine="packed", svt_mode=svt_mode,
+            n_modules=n_modules, n_clients=n_clients, masked=True,
+            compile_s=round(mcomp, 2),
+        )
+    cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
+    rfn = jax.jit(lambda t: aggregate(t, cfg, engine="reference"))
+    rs, rcomp = time_fn(rfn, tree)
+    record(
+        f"agg_fedrpca_reference_m{n_modules}_c{n_clients}",
+        rs * 1e6,
+        f"packed_gram_speedup={rs / secs['gram']:.2f}x "
+        f"packed_subspace_speedup={rs / secs['subspace']:.2f}x compile={rcomp:.2f}s",
+        method="fedrpca", engine="reference", svt_mode="gram",
+        n_modules=n_modules, n_clients=n_clients, masked=False,
+        compile_s=round(rcomp, 2),
+    )
+
+    # Cheap methods: one cell per engine for the JSON's method axis.
+    for method in SIMPLE_METHODS:
+        mc = AggregatorConfig(method=method)
+        for engine in ("packed", "reference"):
+            fn = jax.jit(lambda t, c=mc, e=engine: aggregate(t, c, engine=e))
+            s, comp = time_fn(fn, tree)
+            record(
+                f"agg_{method}_{engine}_m{n_modules}_c{n_clients}",
+                s * 1e6, f"compile={comp:.2f}s",
+                method=method, engine=engine, svt_mode=None,
+                n_modules=n_modules, n_clients=n_clients, masked=False,
+                compile_s=round(comp, 2),
+            )
 
 
 def main(quick: bool | None = None) -> None:
     quick = common.QUICK if quick is None else quick
     module_counts = (32,) if quick else MODULE_COUNTS
     client_counts = (8, 32) if quick else CLIENT_COUNTS
-    cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
     for n_modules in module_counts:
         for n_clients in client_counts:
-            tree = make_tree(n_modules, n_clients)
-            packed_s, packed_c = time_engine(tree, cfg, "packed")
-            ref_s, ref_c = time_engine(tree, cfg, "reference")
-            speedup = ref_s / packed_s
-            common.emit(
-                f"agg_fedrpca_packed_m{n_modules}_c{n_clients}",
-                packed_s * 1e6,
-                f"speedup={speedup:.2f}x compile={packed_c:.2f}s ref_compile={ref_c:.2f}s",
-            )
-            common.emit(
-                f"agg_fedrpca_reference_m{n_modules}_c{n_clients}",
-                ref_s * 1e6,
-                f"speedup=1.00x compile={ref_c:.2f}s",
-            )
-            masked_s = time_masked(tree, cfg, n_clients)
-            common.emit(
-                f"agg_fedrpca_masked_m{n_modules}_c{n_clients}",
-                masked_s * 1e6,
-                f"overhead_vs_dense={masked_s / packed_s:.2f}x",
-            )
+            bench_cell(make_tree(n_modules, n_clients), n_modules, n_clients)
+    out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")
+    with open(out_path, "w") as f:
+        json.dump(RECORDS, f, indent=1)
+    print(f"# wrote {len(RECORDS)} records to {out_path}", flush=True)
 
 
 if __name__ == "__main__":

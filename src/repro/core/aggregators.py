@@ -38,8 +38,12 @@ PyTree = Any
 
 #: Client weighting schemes understood by the round drivers: "uniform"
 #: averages active clients equally; "data_size" weights each client's delta
-#: by its local dataset size (the paper's FedAvg, Eq. 4 with n_k / n).
-WEIGHTINGS = ("uniform", "data_size")
+#: by its local dataset size (the paper's FedAvg, Eq. 4 with n_k / n);
+#: "data_size_rpca" additionally column-scales the RPCA input M by the
+#: normalized data-size weights *before* the low-rank/sparse split, so
+#: weights shape the recovered subspace rather than only the final means
+#: (non-fedrpca methods treat it exactly like "data_size").
+WEIGHTINGS = ("uniform", "data_size", "data_size_rpca")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +51,7 @@ class AggregatorConfig:
     """Configuration shared by all aggregation strategies."""
 
     method: str = "fedrpca"  # fedavg | task_arithmetic | ties | fedrpca
-    weighting: str = "uniform"  # uniform | data_size (see WEIGHTINGS)
+    weighting: str = "uniform"  # uniform | data_size | data_size_rpca
     beta: float = 2.0  # scaling factor (task_arithmetic, fixed-beta fedrpca)
     adaptive_beta: bool = True  # fedrpca: beta = 1 / E^(t)
     beta_min: float = 1.0  # clip range for the adaptive beta
@@ -56,6 +60,10 @@ class AggregatorConfig:
     rpca_tol: float = 1e-7  # stopping tolerance when rpca_fixed_iters=False
     rpca_fixed_iters: bool = True  # False: tolerance-based early stopping
     rpca_fused_tail: bool = False  # packed engine: Pallas fused ADMM tail
+    svt_mode: str = "gram"  # gram (per-iteration eigh) | subspace (warm-started)
+    svt_rank: int = 8  # subspace mode: carried basis width cap
+    svt_sweeps: int = 2  # subspace mode: power sweeps per ADMM iteration
+    svt_fallback_tol: float = 1e-3  # subspace-residual bound before eigh fallback
     ties_keep: float = 0.1  # TIES trim: fraction of entries kept per client
     ties_scale: float = 1.0  # TIES final scaling (lambda in the paper)
     dare_drop: float = 0.9  # DARE drop rate
@@ -259,6 +267,7 @@ def _fedrpca_matrix(
     shrink_fn: Callable,
     mask=None,
     w=None,
+    col_scale=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """FedRPCA on one (vec_dim, n_clients) matrix.
 
@@ -266,14 +275,20 @@ def _fedrpca_matrix(
     to the effective client count n_eff (numel = d1 * n_eff, lam =
     1/sqrt(max(d1, n_eff))) so the decomposition of the active sub-matrix
     matches a dense sub-cohort call; ``w`` (normalized weights, masked slots
-    zero) replaces the plain column means.  The n_eff derivation is
-    intentionally re-stated here rather than shared with
+    zero) replaces the plain column means.  ``col_scale`` (per-client
+    scale, importance-weighted RPCA — ``weighting="data_size_rpca"``)
+    multiplies M's columns *before* the split so weights shape the
+    recovered subspace; the caller then passes the uniform-over-active
+    ``w`` because the scaling already encodes the weighting.  The n_eff
+    derivation is intentionally re-stated here rather than shared with
     ``rpca.robust_pca_bucket`` — this path is the parity oracle for the
     packed engine, so the two must agree without sharing code; change them
     together.
 
     Returns (update_vector, beta, energy_ratio, residual)."""
     mu = lam = None
+    if col_scale is not None:
+        m_mat = m_mat * jnp.asarray(col_scale, m_mat.dtype)[None, :]
     if mask is not None:
         cmask = jnp.asarray(mask, m_mat.dtype)
         m_mat = m_mat * cmask
@@ -284,14 +299,19 @@ def _fedrpca_matrix(
             abs_sum > 1e-12, (d1 * n_eff) / (4.0 * jnp.maximum(abs_sum, 1e-12)), 1.0
         )
         lam = 1.0 / jnp.sqrt(jnp.maximum(jnp.asarray(d1, jnp.float32), n_eff))
+    svt_kw = dict(
+        svt_mode=cfg.svt_mode, svt_rank=cfg.svt_rank, svt_sweeps=cfg.svt_sweeps,
+        svt_fallback_tol=cfg.svt_fallback_tol,
+    )
     if cfg.rpca_fixed_iters:
         res = rpca_lib.robust_pca_fixed_iters(
-            m_mat, n_iter=cfg.rpca_iters, mu=mu, lam=lam, shrink_fn=shrink_fn
+            m_mat, n_iter=cfg.rpca_iters, mu=mu, lam=lam, shrink_fn=shrink_fn,
+            **svt_kw,
         )
     else:
         res = rpca_lib.robust_pca(
             m_mat, tol=cfg.rpca_tol, max_iter=cfg.rpca_iters, mu=mu, lam=lam,
-            shrink_fn=shrink_fn,
+            shrink_fn=shrink_fn, **svt_kw,
         )
     if w is None:
         low_rank_mean = jnp.mean(res.low_rank, axis=-1)
@@ -309,21 +329,26 @@ def _fedrpca_matrix(
 
 
 def _fedrpca_leaf(
-    leaf: jnp.ndarray, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None
+    leaf: jnp.ndarray, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None,
+    col_scale=None,
 ):
     """FedRPCA on one stacked leaf; vmaps RPCA across the module (layer) axis.
 
     Parallel-across-layers per the paper's App. B.2 efficiency note.
     """
     mats = stacking.leaf_matrices(leaf)  # (modules, vec, clients)
-    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w)
+    fn = functools.partial(
+        _fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w,
+        col_scale=col_scale,
+    )
     updates, betas, energies, residuals = jax.vmap(fn)(mats.astype(jnp.float32))
     update_leaf = stacking.matrices_to_leaf_update(updates, leaf)
     return update_leaf, betas, energies, residuals
 
 
 def _fedrpca_joint_ab(
-    node: dict, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None
+    node: dict, cfg: AggregatorConfig, shrink_fn: Callable, mask=None, w=None,
+    col_scale=None,
 ):
     """App. B.2 joint mode: RPCA over concatenated [vec(dA); vec(dB)] columns
     of one adapter pair, then split the update back."""
@@ -331,7 +356,10 @@ def _fedrpca_joint_ab(
     mats_b = stacking.leaf_matrices(node["B"]).astype(jnp.float32)  # (mod, vb, M)
     va = mats_a.shape[1]
     joint = jnp.concatenate([mats_a, mats_b], axis=1)
-    fn = functools.partial(_fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w)
+    fn = functools.partial(
+        _fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w,
+        col_scale=col_scale,
+    )
     updates, betas, energies, residuals = jax.vmap(fn)(joint)
     upd_a = stacking.matrices_to_leaf_update(updates[:, :va], node["A"])
     upd_b = stacking.matrices_to_leaf_update(updates[:, va:], node["B"])
@@ -362,6 +390,15 @@ def fedrpca(
     on either engine's output."""
     cfg = cfg or AggregatorConfig()
     w = _client_weights(mask, weights)
+    col_scale = None
+    if cfg.weighting == "data_size_rpca" and w is not None:
+        # Importance-weighted RPCA: fold the normalized weights into M's
+        # columns (scaled by n_eff so uniform weights are a no-op) and fall
+        # back to uniform-over-active means after the split — the scaling
+        # already encodes the weighting, so the subspace sees it too.
+        n_clients = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        col_scale = w * _mask_n_eff(mask, n_clients)
+        w = None if mask is None else _client_weights(mask, None)
     diag = {}
     flats = {"beta": [], "energy": [], "residual": []}
 
@@ -376,7 +413,7 @@ def fedrpca(
         def walk(node):
             if _is_ab_node(node):
                 upd, betas, energies, residuals = _fedrpca_joint_ab(
-                    node, cfg, shrink_fn, mask=mask, w=w
+                    node, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
                 )
                 diag[f"pair{idx[0]}/beta_mean"] = jnp.mean(betas)
                 diag[f"pair{idx[0]}/energy_mean"] = jnp.mean(energies)
@@ -389,7 +426,7 @@ def fedrpca(
                 return type(node)(walk(v) for v in node)
             # bare leaf outside an (A, B) pair: fall back to per-leaf RPCA
             upd, betas, energies, residuals = _fedrpca_leaf(
-                node, cfg, shrink_fn, mask=mask, w=w
+                node, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
             )
             record(betas, energies, residuals)
             return upd
@@ -403,7 +440,9 @@ def fedrpca(
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     updates = []
     for i, leaf in enumerate(leaves):
-        upd, betas, energies, residuals = _fedrpca_leaf(leaf, cfg, shrink_fn, mask=mask, w=w)
+        upd, betas, energies, residuals = _fedrpca_leaf(
+            leaf, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
+        )
         updates.append(upd)
         diag[f"leaf{i}/beta_mean"] = jnp.mean(betas)
         diag[f"leaf{i}/energy_mean"] = jnp.mean(energies)
@@ -492,6 +531,10 @@ def aggregate(
     cfg = cfg or AggregatorConfig()
     if cfg.weighting not in WEIGHTINGS:
         raise ValueError(f"unknown weighting: {cfg.weighting!r} (expected one of {WEIGHTINGS})")
+    if cfg.svt_mode not in rpca_lib.SVT_MODES:
+        raise ValueError(
+            f"unknown svt_mode: {cfg.svt_mode!r} (expected one of {rpca_lib.SVT_MODES})"
+        )
     if cfg.method == "dare" and key is None:
         raise ValueError("dare requires an explicit PRNG key (got key=None)")
     if engine == "packed":

@@ -385,8 +385,21 @@ def _fedrpca_bucket(
 
     The bucket's client mask rides into ``robust_pca_bucket`` (n_eff ADMM
     constants, masked tail) and the column means become weighted sums over
-    the active clients."""
+    the active clients.  ``weighting="data_size_rpca"`` column-scales the
+    bucket by n_eff-normalized weights *before* the split (importance-
+    weighted RPCA — weights shape the subspace) and reverts to uniform
+    means over active clients afterwards, mirroring the reference path's
+    ``col_scale`` branch exactly."""
     m = bucket.data.astype(jnp.float32)
+    col_scaled = cfg.weighting == "data_size_rpca" and bucket.weights is not None
+    if bucket.client_mask is None:
+        n_eff = float(m.shape[-1])
+        w_uniform = None
+    else:
+        n_eff = jnp.maximum(jnp.sum(bucket.client_mask), 1.0)
+        w_uniform = bucket.client_mask / n_eff
+    if col_scaled:
+        m = m * (bucket.weights * n_eff)[None, None, :]
     res = rpca_lib.robust_pca_bucket(
         m,
         bucket.true_dims,
@@ -395,13 +408,18 @@ def _fedrpca_bucket(
         shrink_fn=shrink_fn,
         fused_tail=cfg.rpca_fused_tail,
         client_mask=bucket.client_mask,
+        svt_mode=cfg.svt_mode,
+        svt_rank=cfg.svt_rank,
+        svt_sweeps=cfg.svt_sweeps,
+        svt_fallback_tol=cfg.svt_fallback_tol,
     )
-    if bucket.weights is None:
+    w_post = w_uniform if col_scaled else bucket.weights
+    if w_post is None:
         low_mean = jnp.mean(res.low_rank, axis=-1)
         sparse_mean = jnp.mean(res.sparse, axis=-1)
     else:
-        low_mean = jnp.einsum("mvc,c->mv", res.low_rank, bucket.weights)
-        sparse_mean = jnp.einsum("mvc,c->mv", res.sparse, bucket.weights)
+        low_mean = jnp.einsum("mvc,c->mv", res.low_rank, w_post)
+        sparse_mean = jnp.einsum("mvc,c->mv", res.sparse, w_post)
     # E^(t) = ||S . 1|| / ||M . 1|| per module (App. B.3); padded rows and
     # masked columns are 0 so they drop out of both sums.
     energy = jax.vmap(sparse_energy_ratio)(m, res.sparse)

@@ -76,6 +76,258 @@ def svt_svd(x: jnp.ndarray, t, shrink_fn: Callable = soft_threshold) -> jnp.ndar
     return (u * shrink_fn(s, t)[None, :]) @ vh
 
 
+# ---------------------------------------------------------------------------
+# Warm-started subspace-iteration SVT (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+#
+# Near the ADMM fixed point the low-rank iterate L lives in a slowly-rotating
+# right-singular subspace, so the eigenbasis of G = X^T X barely changes
+# between iterations.  Instead of a fresh full eigh per iteration, the loop
+# carries an orthonormal basis V in R^{d2 x r} and refines it with a few
+# matmul-only power sweeps + a Rayleigh-Ritz step on the tiny r x r
+# projection; the full eigh runs only on the cold start, when the live-
+# direction subspace residual exceeds a tolerance, or when the post-shrink
+# rank saturates the carried width r (the subspace might then be truncating
+# super-threshold singular values, so exactness requires the full basis).
+
+#: Valid ``svt_mode`` values for the RPCA drivers / AggregatorConfig.
+SVT_MODES = ("gram", "subspace")
+
+
+class SubspaceState(NamedTuple):
+    """Warm-start carry threaded through the ADMM loop.
+
+    ``v``: (B, d2, r) orthonormal basis of the tracked right-singular
+    subspace.  ``g``: (B, d2, d2) Gram matrix ``X^T X`` of the *current*
+    ADMM iterate X (refreshed by the loop body after the S/Y update, or by
+    the fused Pallas kernel's accumulator).  ``n_live``: (B,) int32 count
+    of post-shrink live directions from the last SVT — the rank-adaptive
+    signal.  ``rel``: (B,) last subspace residual estimate over the live
+    directions (drives both the eigh fallback and the sweep-count cut).
+    """
+
+    v: jnp.ndarray
+    g: jnp.ndarray
+    n_live: jnp.ndarray
+    rel: jnp.ndarray
+
+
+class SVTSubspaceResult(NamedTuple):
+    low_rank: jnp.ndarray
+    v: jnp.ndarray  # warm-start basis for the next call
+    n_live: jnp.ndarray
+    rel: jnp.ndarray
+    fell_back: jnp.ndarray  # True when the exact eigh path ran
+
+
+def subspace_rank(d2: int, rank: int) -> int:
+    """Static carried subspace width: the user cap, but never more than half
+    the Gram dimension — tracking the majority of the spectrum costs as much
+    as the full eigh (r x r Ritz eigh ~ d2 x d2 eigh), at which point gram
+    mode is strictly cheaper.  Small cohorts therefore auto-narrow: d2=8
+    carries r<=4 regardless of the cap."""
+    return max(1, min(rank, d2 // 2)) if d2 > 1 else 1
+
+
+def subspace_init(m: jnp.ndarray, rank: int) -> SubspaceState:
+    """Cold-start carry for a (B, d1, d2) bucket: identity-column basis (the
+    first SVT always takes the exact path) and the Gram of X_0 = M."""
+    b, _, d2 = m.shape
+    r = subspace_rank(d2, rank)
+    v = jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (b, d2, r))
+    g = jnp.einsum("bdc,bde->bce", m, m)
+    return SubspaceState(
+        v=v,
+        g=g,
+        n_live=jnp.full((b,), r, jnp.int32),
+        rel=jnp.full((b,), jnp.inf, jnp.float32),
+    )
+
+
+def _exact_projector(g, t, r, shrink_fn):
+    """Full-eigh fallback: exact SVT projector P with all d2 directions,
+    plus the top-r eigenbasis to (re)seed the warm-start carry."""
+    w, v_full = jnp.linalg.eigh(g)  # ascending
+    s = jnp.sqrt(jnp.maximum(w, 0.0))
+    s_shrunk = shrink_fn(s, t[:, None])
+    coef = jnp.where(s > _EPS, s_shrunk / jnp.maximum(s, _EPS), 0.0)
+    p = jnp.einsum("bnk,bk,bmk->bnm", v_full, coef, v_full)
+    v_top = jnp.flip(v_full[:, :, -r:], axis=-1)  # descending eigenvalue order
+    n_live = jnp.sum((s_shrunk > 0.0).astype(jnp.int32), axis=-1)
+    rel = jnp.zeros(t.shape, jnp.float32)  # basis is exact at this iterate
+    return p, v_top, n_live, rel
+
+
+def _orthonormalize(z):
+    """Batched CholeskyQR: Q with span(Q) = span(Z), via Z^T Z = R^T R and
+    Q = Z R^{-1}.  Pure batched matmuls + one tiny (r, r) Cholesky /
+    triangular solve — MXU-friendly where a batched LAPACK thin QR is not.
+    A trace-scaled jitter keeps rank-deficient Z (converged ADMM iterates
+    whose trailing directions died) factorizable; the junk directions it
+    admits carry near-zero Ritz values and are shrunk to zero downstream.
+    """
+    szz = jnp.einsum("bnr,bns->brs", z, z)
+    r = szz.shape[-1]
+    # Relative jitter well above f32 round-off: exactly-low-rank iterates
+    # make Z rank-deficient, and an un-jittered Cholesky would go NaN.
+    jitter = (1e-6 / r) * (jnp.trace(szz, axis1=-2, axis2=-1) + _EPS)[:, None, None]
+    chol = jnp.linalg.cholesky(szz + jitter * jnp.eye(r, dtype=szz.dtype))
+    return jax.lax.linalg.triangular_solve(
+        chol, z, left_side=False, lower=True, transpose_a=True
+    )
+
+
+def _ritz_projector(g, t, v, n_sweeps, shrink_fn):
+    """Matmul-only refinement: ``n_sweeps`` power sweeps (G @ V +
+    CholeskyQR) advancing the span, then Rayleigh-Ritz on the r x r
+    projection with the shrink applied to the Ritz values.
+
+    The final G-apply serves triple duty: it forms the Ritz projection
+    ``T = V^T (G V)``, reuses ``(G V) W`` for the subspace residual, and
+    on CPU keeps the warm path's op count below the batched eigh it
+    replaces (tiny batched ops are dispatch-bound, not flop-bound).
+
+    Returns (P, Ritz basis, live count, live-direction subspace residual).
+    The residual is restricted to directions the shrink keeps: converged
+    modules whose trailing junk directions still rotate do strictly less
+    work because those directions can neither trip the fallback nor demand
+    extra sweeps.
+    """
+    for _ in range(n_sweeps):  # static unroll: n_sweeps is a Python int
+        v = _orthonormalize(jnp.einsum("bnm,bmr->bnr", g, v))
+    gv = jnp.einsum("bnm,bmr->bnr", g, v)
+    t_small = jnp.einsum("bnr,bns->brs", v, gv)  # V^T G V, (B, r, r)
+    theta, w_rot = jnp.linalg.eigh(t_small)  # ascending Ritz values
+    # One fused rotation for [V; GV] @ W — tiny batched ops are dispatch-
+    # bound on CPU, so fewer dispatches beat fewer flops.
+    both = jnp.einsum("bnr,brs->bns", jnp.concatenate([v, gv], axis=1), w_rot)
+    d2 = v.shape[1]
+    vr, gvr = both[:, :d2], both[:, d2:]  # Ritz basis and G @ Vr
+    s = jnp.sqrt(jnp.maximum(theta, 0.0))
+    s_shrunk = shrink_fn(s, t[:, None])
+    coef = jnp.where(s > _EPS, s_shrunk / jnp.maximum(s, _EPS), 0.0)
+    p = jnp.einsum("bnr,br,bmr->bnm", vr, coef, vr)
+    live = (s_shrunk > 0.0).astype(jnp.float32)
+    res = (gvr - vr * theta[:, None, :]) * live[:, None, :]
+    # Normalize by the captured spectral mass (trace of the projection) —
+    # free from theta, same scale as ||G||_F for the low-rank spectra this
+    # tracks, and one fewer full pass over G.
+    g_mass = jnp.sum(jnp.maximum(theta, 0.0), axis=-1)
+    rel = jnp.sqrt(jnp.sum(res * res, axis=(1, 2))) / jnp.maximum(g_mass, _EPS)
+    n_live = jnp.sum(live.astype(jnp.int32), axis=-1)
+    return p, vr, n_live, rel
+
+
+def svt_subspace_step(
+    t: jnp.ndarray,
+    state: SubspaceState,
+    *,
+    cold,
+    sweeps: int = 2,
+    fallback_tol: float = 1e-3,
+    shrink_fn: Callable = soft_threshold,
+) -> tuple[jnp.ndarray, SubspaceState, jnp.ndarray]:
+    """One warm-started SVT on the Gram carry: (P, new state, fell_back).
+
+    The batched full eigh runs (under ``lax.cond``) in three cases: the
+    cold start; *pre-routed* saturation — the previous step's post-shrink
+    rank filled the carried width, a condition that persists through the
+    ADMM burn-in, so those iterations skip the wasted Ritz attempt and pay
+    exactly the gram-mode cost; and *post-guard* breach — the Ritz attempt
+    ran but its live-direction subspace residual exceeded ``fallback_tol``
+    or its live count saturated, so the one transition iteration pays both.
+    When the previous step's residuals were all far inside tolerance the
+    sweep count drops to 1 (a ``lax.cond`` between statically-unrolled
+    sweep chains) — with the live-masked residual and the saturation
+    routing, the rank-adaptive "converged buckets do strictly less work"
+    path.  The caller applies P as ``L = X @ P`` and refreshes ``state.g``
+    from the post-tail iterate.
+    """
+    r = state.v.shape[-1]
+    g = state.g
+
+    def exact():
+        p, v2, live, rel = _exact_projector(g, t, r, shrink_fn)
+        return p, v2, live, rel, jnp.asarray(True)
+
+    def attempt():
+        # Steady state (last residuals far inside tolerance): one sweep
+        # tracks the slow rotation.  Otherwise advance the span the full
+        # `sweeps` power applications to re-capture it.
+        if sweeps > 1:
+            p, v2, live, rel = jax.lax.cond(
+                jnp.max(state.rel) <= 0.1 * fallback_tol,
+                lambda: _ritz_projector(g, t, state.v, 1, shrink_fn),
+                lambda: _ritz_projector(g, t, state.v, sweeps, shrink_fn),
+            )
+        else:
+            p, v2, live, rel = _ritz_projector(g, t, state.v, max(sweeps, 1), shrink_fn)
+        bad = jnp.logical_or(jnp.any(rel > fallback_tol), jnp.any(live >= r))
+        return jax.lax.cond(bad, exact, lambda: (p, v2, live, rel, jnp.asarray(False)))
+
+    pre_full = jnp.logical_or(jnp.asarray(cold), jnp.any(state.n_live >= r))
+    p, v2, live2, rel2, fell = jax.lax.cond(pre_full, exact, attempt)
+    # An exact step leaves no residual signal (its basis is exact *for this
+    # iterate*), but the subspace is still rotating — report rel at half the
+    # fallback tolerance so the next attempt runs real tracking sweeps
+    # instead of the 0-sweep span-hold (which right after a fallback cannot
+    # follow the rotation and would ping-pong back to the eigh forever).
+    rel2 = jnp.where(fell, 0.5 * fallback_tol, rel2)
+    return p, SubspaceState(v=v2, g=g, n_live=live2, rel=rel2), fell
+
+
+def svt_subspace(
+    x: jnp.ndarray,
+    t,
+    v: jnp.ndarray | None = None,
+    *,
+    rank: int = 8,
+    sweeps: int = 2,
+    fallback_tol: float = 1e-3,
+    shrink_fn: Callable = soft_threshold,
+) -> SVTSubspaceResult:
+    """Single-matrix warm-started subspace SVT (the svt_gram counterpart).
+
+    ``v=None`` is a cold start: the exact eigh path runs and the returned
+    ``v`` (top-``rank`` right-singular basis) warm-starts the next call.
+    With a basis the call is matmul-only (plus an r x r eigh) unless the
+    subspace residual or rank saturation trips the exact fallback.  The
+    Gram matrix lives on the d2 side unconditionally — unlike ``svt_gram``
+    there is no transpose trick, so prefer gram mode for wide matrices.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"svt_subspace expects a 2-D matrix, got {x.shape}")
+    d2 = x.shape[1]
+    r = subspace_rank(d2, rank)
+    xb = x[None].astype(jnp.float32)
+    g = jnp.einsum("bdc,bde->bce", xb, xb)
+    cold = v is None
+    vb = (
+        jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (1, d2, r))
+        if cold
+        else v[None].astype(jnp.float32)
+    )
+    # Warm calls start below saturation with a mid-tolerance residual: the
+    # Ritz attempt runs with full tracking sweeps and the post-guard (not
+    # the pre-route) decides whether the exact path is needed.
+    state = SubspaceState(
+        v=vb,
+        g=g,
+        n_live=jnp.zeros((1,), jnp.int32),
+        rel=jnp.full((1,), 0.5 * fallback_tol, jnp.float32),
+    )
+    tb = jnp.asarray(t, jnp.float32).reshape(1)
+    p, state, fell = svt_subspace_step(
+        tb, state, cold=cold, sweeps=sweeps, fallback_tol=fallback_tol,
+        shrink_fn=shrink_fn,
+    )
+    low = jnp.einsum("bdc,bce->bde", xb, p)[0].astype(x.dtype)
+    return SVTSubspaceResult(
+        low_rank=low, v=state.v[0], n_live=state.n_live[0], rel=state.rel[0],
+        fell_back=fell,
+    )
+
+
 class RPCAResult(NamedTuple):
     low_rank: jnp.ndarray
     sparse: jnp.ndarray
@@ -92,6 +344,10 @@ def robust_pca(
     max_iter: int = 200,
     svt_fn: Callable = svt_gram,
     shrink_fn: Callable = soft_threshold,
+    svt_mode: str = "gram",
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    svt_fallback_tol: float = 1e-3,
 ) -> RPCAResult:
     """Decompose ``m`` into low-rank + sparse, per the paper's Algorithm 2.
 
@@ -101,12 +357,29 @@ def robust_pca(
       tol: relative Frobenius residual stopping tolerance.
       max_iter: compile-time iteration cap (lax.while_loop bound).
       svt_fn / shrink_fn: pluggable SVT and shrinkage (e.g. Pallas kernel).
+      svt_mode: "gram" (per-iteration eigh, the legacy exact path) or
+        "subspace" (warm-started subspace-iteration SVT, DESIGN.md §6 —
+        routes through the B=1 bucket loop so the eigenbasis carry threads
+        the ADMM iterations).
+      svt_rank / svt_sweeps / svt_fallback_tol: subspace-mode knobs.
 
     Returns:
       RPCAResult(low_rank=L, sparse=S, n_iter, residual).
     """
     if m.ndim != 2:
         raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
+    if svt_mode != "gram":
+        if svt_fn is not svt_gram:
+            raise ValueError(
+                "custom svt_fn is only honored with svt_mode='gram'; the "
+                "subspace path owns its SVT (basis carry + fallback)"
+            )
+        res = robust_pca_bucket(
+            m[None], n_iter=max_iter, tol=tol, mu=mu, lam=lam,
+            shrink_fn=shrink_fn, svt_mode=svt_mode, svt_rank=svt_rank,
+            svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
+        )
+        return RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0])
     orig_dtype = m.dtype
     m = m.astype(jnp.float32)
     d1, d2 = m.shape
@@ -147,15 +420,35 @@ def robust_pca_fixed_iters(
     lam: float | None = None,
     svt_fn: Callable = svt_gram,
     shrink_fn: Callable = soft_threshold,
+    svt_mode: str = "gram",
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    svt_fallback_tol: float = 1e-3,
 ) -> RPCAResult:
     """Fixed-iteration RPCA (fori_loop) — deterministic cost for the mesh path.
 
     The production ``fed_train_step`` lowers this variant so that the compiled
     program's FLOP count is shape-static (no data-dependent trip count), which
     both keeps SPMD pipelining simple and makes the roofline analysis exact.
+    ``svt_mode="subspace"`` threads the warm-started eigenbasis through the
+    loop via the B=1 bucket path (note: the whole-bucket eigh fallback
+    ``lax.cond`` lowers to a select under ``jax.vmap``, so vmapped callers
+    pay both branches — batch via ``robust_pca_bucket`` instead).
     """
     if m.ndim != 2:
         raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
+    if svt_mode != "gram":
+        if svt_fn is not svt_gram:
+            raise ValueError(
+                "custom svt_fn is only honored with svt_mode='gram'; the "
+                "subspace path owns its SVT (basis carry + fallback)"
+            )
+        res = robust_pca_bucket(
+            m[None], n_iter=n_iter, tol=None, mu=mu, lam=lam,
+            shrink_fn=shrink_fn, svt_mode=svt_mode, svt_rank=svt_rank,
+            svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
+        )
+        return RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0])
     orig_dtype = m.dtype
     m = m.astype(jnp.float32)
     d1, d2 = m.shape
@@ -226,6 +519,10 @@ def robust_pca_bucket(
     fused_tail: bool = False,
     interpret: bool | None = None,
     client_mask: jnp.ndarray | None = None,
+    svt_mode: str = "gram",
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    svt_fallback_tol: float = 1e-3,
 ) -> RPCAResult:
     """RPCA over a whole shape bucket in ONE dispatch (no per-leaf Python).
 
@@ -253,9 +550,22 @@ def robust_pca_bucket(
 
     ``fused_tail=True`` routes the S/Y/residual tail through the Pallas
     kernel ``repro.kernels.rpca_admm.admm_tail`` (one VMEM pass).
+
+    ``svt_mode="subspace"`` replaces the per-iteration batched eigh with
+    the warm-started subspace-iteration SVT (DESIGN.md §6): the loop carry
+    grows a ``SubspaceState`` (eigenbasis V, Gram of the current iterate,
+    live-rank/residual trackers) and each iteration runs matmul-only power
+    sweeps + an r x r Rayleigh-Ritz shrink, falling back to the full eigh
+    only on the cold start, on subspace-residual breach, or on rank
+    saturation.  With ``fused_tail=True`` the sweep tail (reconstruction
+    ``L = X @ P``, shrink, dual ascent, residual partial sums, and the
+    next iteration's Gram accumulation) runs as one Pallas VMEM pass
+    (``repro.kernels.svt_subspace.subspace_apply``).
     """
     if m.ndim != 3:
         raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
+    if svt_mode not in SVT_MODES:
+        raise ValueError(f"unknown svt_mode: {svt_mode!r} (expected one of {SVT_MODES})")
     orig_dtype = m.dtype
     m = m.astype(jnp.float32)
     b, d1p, d2 = m.shape
@@ -285,8 +595,10 @@ def robust_pca_bucket(
     thresh = rho * lam_v
     m_norm = jnp.maximum(jnp.sqrt(jnp.sum(m * m, axis=(1, 2))), _EPS)
 
+    use_subspace = svt_mode == "subspace"
+    use_sub_kernel = use_subspace and fused_tail
+
     if fused_tail:
-        from repro.kernels import rpca_admm as _tail_kernel
         from repro.kernels.ops import _interpret_default
 
         if shrink_fn is not soft_threshold:
@@ -295,6 +607,9 @@ def robust_pca_bucket(
                 "kernel; custom shrink_fn requires fused_tail=False"
             )
         interp = _interpret_default() if interpret is None else interpret
+
+    if fused_tail and not use_subspace:
+        from repro.kernels import rpca_admm as _tail_kernel
 
         def tail(l, y):
             s, y_new, rsq = _tail_kernel.admm_tail(
@@ -318,22 +633,93 @@ def robust_pca_bucket(
             y_new = y + mu_v[:, None, None] * resid
             return s, y_new, jnp.sqrt(jnp.sum(resid * resid, axis=(1, 2)))
 
-    def step(l, s, y):
-        l = svt_gram_batched(m - s + rho[:, None, None] * y, rho, shrink_fn)
-        s, y, rnorm = tail(l, y)
-        return l, s, y, rnorm / m_norm
+    if use_subspace:
+        if use_sub_kernel:
+            from repro.kernels import svt_subspace as _sub_kernel
+
+        def step_sub(l, s, y, sub, it):
+            p, sub, _fell = svt_subspace_step(
+                rho, sub, cold=(it == 0), sweeps=svt_sweeps,
+                fallback_tol=svt_fallback_tol, shrink_fn=shrink_fn,
+            )
+            if use_sub_kernel:
+                l, s2, y2, rsq, g2 = _sub_kernel.subspace_apply(
+                    m, s, y, p, rho, mu_v, thresh, mask=cmask, interpret=interp
+                )
+                rnorm = jnp.sqrt(rsq)
+            else:
+                x = m - s + rho[:, None, None] * y
+                l = jnp.einsum("bdc,bce->bde", x, p)
+                s2, y2, rnorm = tail(l, y)
+                x2 = m - s2 + rho[:, None, None] * y2
+                g2 = jnp.einsum("bdc,bde->bce", x2, x2)
+            return l, s2, y2, rnorm / m_norm, sub._replace(g=g2)
+
+    else:
+
+        def step(l, s, y):
+            l = svt_gram_batched(m - s + rho[:, None, None] * y, rho, shrink_fn)
+            s, y, rnorm = tail(l, y)
+            return l, s, y, rnorm / m_norm
 
     zeros = jnp.zeros_like(m)
     err0 = jnp.full((b,), jnp.inf, jnp.float32)
 
     if tol is None:
+        if use_subspace:
+            sub0 = subspace_init(m, svt_rank)
 
-        def body(_, state):
-            l, s, y, _err = state
-            return step(l, s, y)
+            def body_sub(it, state):
+                l, s, y, _err, sub = state
+                return step_sub(l, s, y, sub, it)
 
-        l, s, _, err = jax.lax.fori_loop(0, n_iter, body, (zeros, zeros, zeros, err0))
+            l, s, _, err, _ = jax.lax.fori_loop(
+                0, n_iter, body_sub, (zeros, zeros, zeros, err0, sub0)
+            )
+        else:
+
+            def body(_, state):
+                l, s, y, _err = state
+                return step(l, s, y)
+
+            l, s, _, err = jax.lax.fori_loop(0, n_iter, body, (zeros, zeros, zeros, err0))
         n_done = jnp.full((b,), n_iter, jnp.int32)
+    elif use_subspace:
+        sub0 = subspace_init(m, svt_rank)
+
+        def cond_sub(state):
+            _, _, _, err, i, _, _ = state
+            return jnp.logical_and(i < n_iter, jnp.any(err > tol))
+
+        def body_sub(state):
+            l, s, y, err, i, niter, sub = state
+            l2, s2, y2, err2, sub2 = step_sub(l, s, y, sub, i)
+            active = err > tol  # matches vmap(while_loop) select semantics
+            sel = lambda new, old: jnp.where(active[:, None, None], new, old)
+            selv = lambda new, old: jnp.where(active, new, old)
+            # Frozen modules keep their basis/Gram carry so a later thaw
+            # (impossible here, but cheap to keep exact) resumes cleanly.
+            sub_sel = SubspaceState(
+                v=sel(sub2.v, sub.v),
+                g=sel(sub2.g, sub.g),
+                n_live=selv(sub2.n_live, sub.n_live),
+                rel=selv(sub2.rel, sub.rel),
+            )
+            return (
+                sel(l2, l),
+                sel(s2, s),
+                sel(y2, y),
+                selv(err2, err),
+                i + 1,
+                jnp.where(active, i + 1, niter),
+                sub_sel,
+            )
+
+        init = (
+            zeros, zeros, zeros, err0,
+            jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32), sub0,
+        )
+        l, s, _, err, _, n_done, _ = jax.lax.while_loop(cond_sub, body_sub, init)
     else:
 
         def cond(state):

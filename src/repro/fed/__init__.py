@@ -6,10 +6,12 @@ from repro.fed.partition import (
     label_distribution,
 )
 from repro.fed.server import (
+    SAMPLERS,
     FedRunConfig,
     RoundState,
     init_round_state,
     make_round_fn,
+    make_sampler,
     rounds_to_reach,
     run_simulation,
 )
@@ -22,10 +24,12 @@ __all__ = [
     "data_size_weights",
     "dirichlet_partition",
     "label_distribution",
+    "SAMPLERS",
     "FedRunConfig",
     "RoundState",
     "init_round_state",
     "make_round_fn",
+    "make_sampler",
     "rounds_to_reach",
     "run_simulation",
     "synth",

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.optim import Optimizer
 from repro.optim.optimizers import apply_updates
-from repro.utils.pytree import tree_scale, tree_sub, tree_dot
+from repro.utils.pytree import tree_sub, tree_dot
 
 PyTree = Any
 
@@ -56,10 +56,22 @@ def _sqnorm(tree: PyTree) -> jnp.ndarray:
 def make_local_fn(spec: LocalSpec) -> Callable:
     """Build the per-client local optimization function.
 
-    Signature: (base, lora_global, data_x, data_y, rng, c, ci, prev_lora)
-      -> LocalResult.  ``c``/``ci`` are SCAFFOLD variates (pass zero trees
-      when disabled); ``prev_lora`` is the client's previous-round local model
-      (MOON; pass lora_global when unused).
+    Signature: (base, lora_global, data_x, data_y, rng, c, ci, prev_lora
+      [, active]) -> LocalResult.  ``c``/``ci`` are SCAFFOLD variates (pass
+      zero trees when disabled); ``prev_lora`` is the client's previous-round
+      local model (MOON; pass lora_global when unused).
+
+    ``active`` (optional scalar, 1/0) is the shape-static partial-
+    participation early-exit: a masked cohort slot (``active == 0``) skips
+    the whole local scan under ``lax.cond`` and returns a zero delta /
+    untouched variates / zero loss.  When the local fn is dispatched with a
+    scalar predicate (one client per device/process, no vmap) the branch is
+    genuinely skipped; under ``jax.vmap`` (CPU simulation, SPMD-sharded
+    client axes) the cond lowers to a select — both lanes are computed, but
+    masked slots now return exact zeros instead of a wasted real
+    optimization, which keeps every downstream consumer's masking
+    trivially cheap.  ``active=None`` (the default) is the legacy
+    unconditional path, bit-for-bit.
     """
 
     def total_loss(base, lora, lora_global, prev_lora, batch):
@@ -79,7 +91,8 @@ def make_local_fn(spec: LocalSpec) -> Callable:
             loss = loss + spec.moon_mu * contrast
         return loss
 
-    def local_optimize(base, lora_global, data_x, data_y, rng, c, ci, prev_lora):
+    def local_optimize(base, lora_global, data_x, data_y, rng, c, ci, prev_lora,
+                       active=None):
         n_local = data_x.shape[0]
         opt_state = spec.optimizer.init(lora_global)
         rngs = jax.random.split(rng, spec.local_steps)
@@ -99,18 +112,35 @@ def make_local_fn(spec: LocalSpec) -> Callable:
             lora = apply_updates(lora, updates)
             return (lora, opt_state), loss
 
-        (lora, _), losses = jax.lax.scan(step, (lora_global, opt_state), rngs)
-        delta = tree_sub(lora, lora_global)
-        if spec.scaffold:
-            # Option II variate refresh.
-            new_ci = jax.tree_util.tree_map(
-                lambda ci_, c_, d: ci_ - c_ - d / (spec.local_steps * spec.lr),
-                ci,
-                c,
-                delta,
+        def run(_):
+            (lora, _), losses = jax.lax.scan(step, (lora_global, opt_state), rngs)
+            delta = tree_sub(lora, lora_global)
+            if spec.scaffold:
+                # Option II variate refresh.
+                new_ci = jax.tree_util.tree_map(
+                    lambda ci_, c_, d: ci_ - c_ - d / (spec.local_steps * spec.lr),
+                    ci,
+                    c,
+                    delta,
+                )
+            else:
+                new_ci = ci
+            return LocalResult(
+                lora=lora, delta=delta, new_ci=new_ci,
+                final_loss=losses[-1].astype(jnp.float32),
             )
-        else:
-            new_ci = ci
-        return LocalResult(lora=lora, delta=delta, new_ci=new_ci, final_loss=losses[-1])
+
+        if active is None:
+            return run(None)
+
+        def skip(_):
+            return LocalResult(
+                lora=lora_global,
+                delta=jax.tree_util.tree_map(jnp.zeros_like, lora_global),
+                new_ci=ci,
+                final_loss=jnp.zeros((), jnp.float32),
+            )
+
+        return jax.lax.cond(active > 0, run, skip, None)
 
     return local_optimize

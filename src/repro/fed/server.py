@@ -39,6 +39,9 @@ class RoundState(NamedTuple):
     scaffold_ci: PyTree  # (M, ...) per-client variates
     prev_local: PyTree  # (M, ...) previous-round local models (MOON)
     rng: jnp.ndarray
+    # Plain-int default: no device array (or backend init) at import time;
+    # init_round_state sets the concrete int32 counter.
+    round_idx: Any = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +52,7 @@ class FedRunConfig:
     seed: int = 0
     clients_per_round: int = 0  # 0 = full participation (the paper's setting)
     engine: str = "packed"  # "packed" (bucketed batched engine) | "reference"
+    sampler: str = "uniform"  # client sampler (see SAMPLERS)
 
 
 def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
@@ -61,22 +65,110 @@ def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState
         scaffold_ci=tree_zeros_like(stacked),
         prev_local=stacked,
         rng=jax.random.PRNGKey(seed),
+        round_idx=jnp.asarray(0, jnp.int32),
     )
 
 
+# ---------------------------------------------------------------------------
+# Pluggable client samplers (shape-static: every sampler fills the same
+# cohort_pad slots; only the cohort indices and the validity mask vary)
+# ---------------------------------------------------------------------------
+
+#: Built-in sampler kinds for ``FedRunConfig.sampler`` / ``make_sampler``.
+SAMPLERS = ("uniform", "trace", "size_weighted")
+
+
+def make_sampler(
+    kind: str,
+    n_clients: int,
+    cohort_pad: int,
+    *,
+    availability=None,
+    weights=None,
+) -> Callable:
+    """Build a jit-safe client sampler: ``(key, round_idx) -> (cohort,
+    slot_valid)`` with ``cohort`` a (cohort_pad,) int32 index vector and
+    ``slot_valid`` a (cohort_pad,) float32 per-slot validity factor.
+
+    * ``uniform`` — prefix of a random permutation (a uniform sample
+      without replacement; the legacy stream, bit-identical).
+    * ``trace`` — fixed availability trace: ``availability`` is a
+      ``(n_clients,)`` or ``(rounds, n_clients)`` 0/1 array; the round's
+      row (cycled by ``round_idx``) restricts sampling to available
+      clients, uniformly.  Available clients sort first, so ``slot_valid``
+      zeroes any slot beyond the round's availability head-count — rounds
+      with fewer available clients than requested shrink n_eff instead of
+      aggregating stale deltas.
+    * ``size_weighted`` — without-replacement sampling proportional to
+      ``weights`` (e.g. local data sizes) via the Gumbel-top-k trick.
+
+    All samplers share one compiled round: the outputs are shape-static
+    and ``round_idx`` is a traced scalar.
+    """
+    if kind == "uniform":
+
+        def sample(key, round_idx):
+            del round_idx
+            cohort = jax.random.permutation(key, n_clients)[:cohort_pad]
+            return cohort, jnp.ones((cohort_pad,), jnp.float32)
+
+        return sample
+    if kind == "size_weighted":
+        if weights is None:
+            raise ValueError("sampler='size_weighted' requires client weights")
+        logw = jnp.log(jnp.maximum(jnp.asarray(weights, jnp.float32), 1e-12))
+
+        def sample(key, round_idx):
+            del round_idx
+            u = jax.random.uniform(key, (n_clients,), minval=1e-12, maxval=1.0)
+            gumbel = -jnp.log(-jnp.log(u))
+            cohort = jax.lax.top_k(logw + gumbel, cohort_pad)[1]
+            return cohort, jnp.ones((cohort_pad,), jnp.float32)
+
+        return sample
+    if kind == "trace":
+        if availability is None:
+            raise ValueError("sampler='trace' requires an availability trace")
+        avail = jnp.asarray(availability, jnp.float32)
+        if avail.ndim == 1:
+            avail = avail[None]
+        if avail.shape[-1] != n_clients:
+            raise ValueError(
+                f"availability trace covers {avail.shape[-1]} clients, "
+                f"expected {n_clients}"
+            )
+
+        def sample(key, round_idx):
+            row = avail[round_idx % avail.shape[0]]
+            # Available clients draw a uniform score in [0, 1); unavailable
+            # ones score below it — top_k puts available clients first.
+            score = jnp.where(row > 0, jax.random.uniform(key, (n_clients,)), -1.0)
+            cohort = jax.lax.top_k(score, cohort_pad)[1]
+            return cohort, (row[cohort] > 0).astype(jnp.float32)
+
+        return sample
+    raise ValueError(f"unknown sampler: {kind!r} (expected one of {SAMPLERS})")
+
+
 def make_round_fn(
-    base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None
+    base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None,
+    availability=None,
 ) -> Callable:
     """Returns jitted fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
 
     ``client_weights`` are per-client data sizes (or any nonnegative
     weights, e.g. ``fed.partition.data_size_weights``); they feed the
-    aggregation when ``cfg.aggregator.weighting == "data_size"``.
+    aggregation when ``cfg.aggregator.weighting`` is "data_size" /
+    "data_size_rpca", and the sampler when ``cfg.sampler ==
+    "size_weighted"``.  ``availability`` is the 0/1 trace for
+    ``cfg.sampler == "trace"`` (see ``make_sampler``).
 
     With partial participation, ``n_active`` overrides the cohort size at
     call time (clamped to the canonical padded size): every value shares the
     single compiled round, only the validity mask changes.  ``None`` uses
-    ``cfg.clients_per_round``.
+    ``cfg.clients_per_round``.  Masked cohort slots early-exit their local
+    phase (``make_local_fn``'s ``active`` argument) and return exact zero
+    deltas.
     """
     local_fn = make_local_fn(cfg.local)
     n_clients = data_x.shape[0]
@@ -95,35 +187,47 @@ def make_round_fn(
         raise ValueError(
             f"unknown weighting: {cfg.aggregator.weighting!r} (expected one of {WEIGHTINGS})"
         )
-    use_weights = cfg.aggregator.weighting == "data_size"
+    use_weights = cfg.aggregator.weighting in ("data_size", "data_size_rpca")
     w_all = None
     if use_weights:
         if client_weights is None:
             raise ValueError(
-                "weighting='data_size' requires client_weights (e.g. "
-                "fed.partition.data_size_weights); refusing to silently "
-                "fall back to uniform"
+                f"weighting={cfg.aggregator.weighting!r} requires "
+                "client_weights (e.g. fed.partition.data_size_weights); "
+                "refusing to silently fall back to uniform"
             )
         w_all = jnp.asarray(client_weights, jnp.float32)
+
+    if cfg.sampler not in SAMPLERS:
+        raise ValueError(f"unknown sampler: {cfg.sampler!r} (expected one of {SAMPLERS})")
+    # Full participation never samples: skip building (and validating the
+    # inputs of) a sampler that would never be invoked.
+    sampler = (
+        make_sampler(
+            cfg.sampler, n_clients, cohort_pad,
+            availability=availability, weights=client_weights,
+        )
+        if partial
+        else None
+    )
 
     @jax.jit
     def run_round(state: RoundState, n_active=None):
         rng, sub, pick, agg_key = jax.random.split(state.rng, 4)
         if partial:
-            # Shape-static partial participation: the first cohort_pad slots
-            # of a random permutation, of which the first n_active are valid.
-            # (A permutation prefix is a uniform sample without replacement.)
+            # Shape-static partial participation: the sampler fills the
+            # fixed cohort_pad slots, of which the first n_active (further
+            # restricted by the sampler's own slot validity, e.g. an
+            # availability trace) are valid.
             na = sample_size if n_active is None else jnp.clip(n_active, 1, cohort_pad)
-            cohort = jax.random.permutation(pick, n_clients)[:cohort_pad]
-            mask = (jnp.arange(cohort_pad) < na).astype(jnp.float32)
+            cohort, slot_valid = sampler(pick, state.round_idx)
+            mask = (jnp.arange(cohort_pad) < na).astype(jnp.float32) * slot_valid
         else:
             cohort = jnp.arange(n_clients)
             mask = None
         take = lambda t: jax.tree_util.tree_map(lambda x: x[cohort], t)
         client_rngs = jax.random.split(sub, cohort_pad if partial else n_clients)
-        results = jax.vmap(
-            local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0)
-        )(
+        local_args = (
             base,
             state.lora_global,
             data_x[cohort],
@@ -133,6 +237,16 @@ def make_round_fn(
             take(state.scaffold_ci),
             take(state.prev_local),
         )
+        if partial:
+            # Masked slots early-exit the local phase (zero delta, untouched
+            # variates) instead of optimizing a client that won't aggregate.
+            results = jax.vmap(
+                local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0, 0)
+            )(*local_args, mask)
+        else:
+            results = jax.vmap(
+                local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0)
+            )(*local_args)
         stacked_deltas = results.delta  # leaves: (cohort_pad, ...)
         weights = w_all[cohort] if use_weights else None
         agg_kw = dict(engine=cfg.engine, key=agg_key, mask=mask, weights=weights)
@@ -183,6 +297,7 @@ def make_round_fn(
             scaffold_ci=new_ci,
             prev_local=new_prev,
             rng=rng,
+            round_idx=state.round_idx + 1,
         )
         diags = {"mean_local_loss": loss_mean, **rpca_diags}
         return new_state, diags
@@ -201,11 +316,15 @@ def run_simulation(
     eval_every: int = 1,
     log_fn: Optional[Callable[[int, dict], None]] = None,
     client_weights=None,
+    availability=None,
 ):
     """Runs ``cfg.rounds`` rounds; returns (final lora, accuracy history)."""
     n_clients = data_x.shape[0]
     state = init_round_state(lora_init, n_clients, cfg.seed)
-    round_fn = make_round_fn(base, data_x, data_y, cfg, client_weights=client_weights)
+    round_fn = make_round_fn(
+        base, data_x, data_y, cfg, client_weights=client_weights,
+        availability=availability,
+    )
     history = []
     for r in range(cfg.rounds):
         state, diags = round_fn(state)

@@ -2,6 +2,8 @@
 
   soft_threshold  — RPCA shrinkage (ADMM inner loop elementwise op)
   rpca_admm       — fused RPCA ADMM elementwise tail (S/Y update + residual)
+  svt_subspace    — fused subspace-SVT sweep tail (reconstruction + tail +
+                    next-iteration Gram accumulation, DESIGN.md §6)
   lora_matmul     — fused base + LoRA projection y = xW + s(xA)B
   local_attention — flash-style causal sliding-window attention
   ssd_scan        — Mamba-2 chunked SSD with VMEM-resident recurrent state
@@ -9,15 +11,18 @@
 Validated against ``repro.kernels.ref`` in interpret mode on CPU (TPU is the
 compile target; see tests/test_kernels.py shape/dtype sweeps).
 """
-from repro.kernels import ops, ref, rpca_admm
+from repro.kernels import ops, ref, rpca_admm, svt_subspace
 from repro.kernels.ops import local_attention, lora_matmul, soft_threshold, ssd_scan
 from repro.kernels.rpca_admm import admm_tail
+from repro.kernels.svt_subspace import subspace_apply
 
 __all__ = [
     "ops",
     "ref",
     "rpca_admm",
+    "svt_subspace",
     "admm_tail",
+    "subspace_apply",
     "local_attention",
     "lora_matmul",
     "soft_threshold",

@@ -36,6 +36,41 @@ def rpca_admm_tail_ref(
     return s, y_new, rsq
 
 
+def svt_subspace_apply_ref(
+    m: jnp.ndarray,  # (B, vec, clients)
+    s: jnp.ndarray,
+    y: jnp.ndarray,
+    p: jnp.ndarray,  # (B, clients, clients) shrink projector
+    rho: jnp.ndarray,  # (B,) per-module scalars
+    mu: jnp.ndarray,
+    thresh: jnp.ndarray,
+    mask=None,  # optional (clients,) validity mask
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused subspace-SVT sweep tail: reconstruction L = (M - S + rho Y) @ P,
+    shrink, dual ascent, per-module residual sumsq, and the next iterate's
+    Gram matrix (what the warm-start carry threads forward).
+
+    ``mask`` zeroes inactive client columns of S'/Y' and excludes them from
+    the residual sums; L is left unmasked (the bucket driver applies the
+    single final mask pass), and M's masked columns are zero on entry so
+    the Gram of the next iterate never sees masked slots.
+    """
+    rho_ = rho[:, None, None].astype(m.dtype)
+    mu_ = mu[:, None, None].astype(m.dtype)
+    th_ = thresh[:, None, None].astype(m.dtype)
+    msk = 1.0 if mask is None else jnp.asarray(mask, m.dtype)[None, None, :]
+    x = m - s + rho_ * y
+    low = jnp.einsum("bdc,bce->bde", x.astype(jnp.float32), p.astype(jnp.float32))
+    low = low.astype(m.dtype)
+    s_new = soft_threshold_ref(m - low + rho_ * y, th_) * msk
+    resid = (m - low - s_new) * msk
+    y_new = (y + mu_ * resid) * msk
+    rsq = jnp.sum(jnp.square(resid.astype(jnp.float32)), axis=(1, 2))
+    x_next = (m - s_new + rho_ * y_new).astype(jnp.float32)
+    g_next = jnp.einsum("bdc,bde->bce", x_next, x_next)
+    return low, s_new, y_new, rsq, g_next
+
+
 def lora_matmul_ref(
     x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, scale: float
 ) -> jnp.ndarray:

@@ -60,11 +60,11 @@ def make_fed_train_step(
     sizes, used when ``agg_cfg.weighting == "data_size"``.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
-    use_weights = agg_cfg.weighting == "data_size"
+    use_weights = agg_cfg.weighting in ("data_size", "data_size_rpca")
     if use_weights and client_weights is None:
         raise ValueError(
-            "weighting='data_size' requires client_weights; refusing to "
-            "silently fall back to uniform"
+            f"weighting={agg_cfg.weighting!r} requires client_weights; "
+            "refusing to silently fall back to uniform"
         )
     w_clients = None if client_weights is None else jnp.asarray(client_weights, jnp.float32)
 
@@ -130,15 +130,6 @@ def make_fed_train_step(
 
     def fed_train_step(base, lora_global, batch, agg_key=None):
         extras = {k: batch[k] for k in _EXTRA_KEYS if k in batch}
-
-        def client_fn(tokens, labels, *extra_vals):
-            b = {"tokens": tokens, "labels": labels}
-            b.update(dict(zip(extras.keys(), extra_vals)))
-            return client_update(base, lora_global, b)
-
-        deltas, losses = jax.vmap(client_fn)(
-            batch["tokens"], batch["labels"], *extras.values()
-        )
         m = batch["tokens"].shape[0]
         mask = None
         if clients_per_round > m:
@@ -151,6 +142,39 @@ def make_fed_train_step(
                 raise ValueError("clients_per_round > 0 requires an agg_key per round")
             perm = jax.random.permutation(jax.random.fold_in(agg_key, 0x5EED), m)
             mask = jnp.zeros((m,), jnp.float32).at[perm[:clients_per_round]].set(1.0)
+
+        def client_fn(tokens, labels, *extra_vals):
+            b = {"tokens": tokens, "labels": labels}
+            b.update(dict(zip(extras.keys(), extra_vals)))
+            return client_update(base, lora_global, b)
+
+        if mask is None:
+            deltas, losses = jax.vmap(client_fn)(
+                batch["tokens"], batch["labels"], *extras.values()
+            )
+        else:
+            # Masked-slot early exit, mirroring fed/server.py: unsampled
+            # clients return exact zero deltas / zero loss under lax.cond
+            # instead of running a local scan whose output is discarded.
+            # Under vmap/SPMD the cond lowers to a select (both branches
+            # lower), so the saving is semantic there; per-device dispatch
+            # with a scalar predicate skips the branch outright.
+            def gated_fn(active, tokens, labels, *extra_vals):
+                def run(_):
+                    delta, loss = client_fn(tokens, labels, *extra_vals)
+                    return delta, loss.astype(jnp.float32)
+
+                def skip(_):
+                    return (
+                        jax.tree_util.tree_map(jnp.zeros_like, lora_global),
+                        jnp.zeros((), jnp.float32),
+                    )
+
+                return jax.lax.cond(active > 0, run, skip, None)
+
+            deltas, losses = jax.vmap(gated_fn)(
+                mask, batch["tokens"], batch["labels"], *extras.values()
+            )
         weights = w_clients if use_weights else None
         # agg_key varies the stochastic aggregators (dare) across rounds;
         # None keeps the step a pure (base, lora, batch) function.

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import ENGINES, METHODS, WEIGHTINGS, AggregatorConfig
+from repro.core import ENGINES, METHODS, SVT_MODES, WEIGHTINGS, AggregatorConfig
 from repro.data import client_lm_datasets
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -67,9 +67,17 @@ def main(argv=None):
                     help="partial participation: sample this many clients per "
                          "round via a shape-static validity mask (0 = all)")
     ap.add_argument("--weighting", default="uniform", choices=list(WEIGHTINGS),
-                    help="client aggregation weights: uniform mean or "
-                         "data-size-weighted (true FedAvg)")
+                    help="client aggregation weights: uniform mean, "
+                         "data-size-weighted (true FedAvg), or data_size_rpca "
+                         "(weights column-scale M before the RPCA split)")
     ap.add_argument("--rpca-iters", type=int, default=30)
+    ap.add_argument("--svt-mode", default="gram", choices=list(SVT_MODES),
+                    help="RPCA SVT step: per-iteration eigh (gram) or "
+                         "warm-started subspace iteration (subspace)")
+    ap.add_argument("--svt-rank", type=int, default=8,
+                    help="subspace SVT: carried eigenbasis width cap")
+    ap.add_argument("--svt-sweeps", type=int, default=2,
+                    help="subspace SVT: power sweeps per ADMM iteration")
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -97,7 +105,8 @@ def main(argv=None):
         log.info("resumed from step %s", meta.get("step"))
 
     agg = AggregatorConfig(
-        method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting
+        method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting,
+        svt_mode=args.svt_mode, svt_rank=args.svt_rank, svt_sweeps=args.svt_sweeps,
     )
     # Synthetic client shards all hold n_seqs sequences; real pipelines pass
     # partition sizes here (fed.partition.data_size_weights).

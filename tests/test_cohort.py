@@ -27,15 +27,19 @@ from repro.core import rpca as rpca_lib
 from repro.core.engine import pack, unpack
 from repro.core.stacking import canonical_cohort_size, pad_cohort
 from repro.fed import (
+    SAMPLERS,
     FedRunConfig,
     LocalSpec,
     init_round_state,
+    make_local_fn,
     make_round_fn,
+    make_sampler,
     rounds_to_reach,
     run_simulation,
     synth,
 )
 from repro.optim import make_optimizer
+from repro.utils.pytree import tree_zeros_like
 
 PAD = 8  # canonical cohort bucket shared by the sampled sizes below
 
@@ -394,6 +398,158 @@ class TestShapeStaticRounds:
             cfg, eval_fn, client_weights=weights,
         )
         assert np.isfinite(hist).all()
+
+
+class TestSamplers:
+    def test_uniform_matches_legacy_stream(self):
+        """The uniform sampler must reproduce the pre-sampler permutation
+        prefix bit-for-bit (one compiled round, same cohorts)."""
+        key = jax.random.PRNGKey(4)
+        sample = make_sampler("uniform", 16, 8)
+        cohort, ok = sample(key, jnp.asarray(0, jnp.int32))
+        want = jax.random.permutation(key, 16)[:8]
+        np.testing.assert_array_equal(np.asarray(cohort), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(ok), 1.0)
+
+    def test_trace_respects_availability(self):
+        avail = np.concatenate([np.ones(6), np.zeros(10)])
+        sample = make_sampler("trace", 16, 8, availability=avail)
+        for seed in range(5):
+            cohort, ok = sample(jax.random.PRNGKey(seed), jnp.asarray(0, jnp.int32))
+            cohort, ok = np.asarray(cohort), np.asarray(ok)
+            # available clients fill the head; unavailable slots are marked
+            assert set(cohort[ok > 0]) <= set(range(6))
+            assert ok.sum() == 6  # only 6 available < 8 slots
+
+    def test_trace_cycles_rows_by_round(self):
+        avail = np.stack([np.r_[np.ones(8), np.zeros(8)], np.r_[np.zeros(8), np.ones(8)]])
+        sample = make_sampler("trace", 16, 4, availability=avail)
+        c0, _ = sample(jax.random.PRNGKey(0), jnp.asarray(0, jnp.int32))
+        c1, _ = sample(jax.random.PRNGKey(0), jnp.asarray(1, jnp.int32))
+        c2, _ = sample(jax.random.PRNGKey(0), jnp.asarray(2, jnp.int32))
+        assert set(np.asarray(c0)) <= set(range(8))
+        assert set(np.asarray(c1)) <= set(range(8, 16))
+        np.testing.assert_array_equal(np.asarray(c0), np.asarray(c2))  # cycle
+
+    def test_size_weighted_skews_sampling(self):
+        w = np.r_[np.full(8, 100.0), np.full(8, 0.01)]
+        sample = make_sampler("size_weighted", 16, 4, weights=w)
+        counts = np.zeros(16)
+        for seed in range(40):
+            cohort, _ = sample(jax.random.PRNGKey(seed), jnp.asarray(0, jnp.int32))
+            counts[np.asarray(cohort)] += 1
+        assert counts[:8].sum() > 0.95 * counts.sum()
+
+    def test_no_replacement(self):
+        for kind, kw in (
+            ("uniform", {}),
+            ("size_weighted", dict(weights=np.arange(1.0, 17.0))),
+            ("trace", dict(availability=np.ones(16))),
+        ):
+            sample = make_sampler(kind, 16, 8, **kw)
+            cohort, _ = sample(jax.random.PRNGKey(9), jnp.asarray(0, jnp.int32))
+            assert len(set(np.asarray(cohort).tolist())) == 8, kind
+
+    def test_unknown_and_missing_args_rejected(self):
+        with pytest.raises(ValueError, match="unknown sampler"):
+            make_sampler("roundrobin", 16, 8)
+        with pytest.raises(ValueError, match="availability"):
+            make_sampler("trace", 16, 8)
+        with pytest.raises(ValueError, match="weights"):
+            make_sampler("size_weighted", 16, 8)
+        with pytest.raises(ValueError, match="covers"):
+            make_sampler("trace", 16, 8, availability=np.ones(4))
+
+    def test_all_samplers_run_a_round(self, retrace_task):
+        task = retrace_task
+        avail = np.ones((2, 16))
+        for kind in SAMPLERS:
+            cfg = FedRunConfig(
+                aggregator=AggregatorConfig(method="fedavg"),
+                local=_local_spec(task),
+                rounds=1,
+                clients_per_round=8,
+                sampler=kind,
+            )
+            round_fn = make_round_fn(
+                task.base, task.client_x, task.client_y, cfg,
+                client_weights=np.linspace(1.0, 2.0, 16),
+                availability=avail if kind == "trace" else None,
+            )
+            state = init_round_state(synth.init_lora(task), 16, 0)
+            state, diags = round_fn(state)
+            assert np.isfinite(float(diags["mean_local_loss"]))
+            assert int(state.round_idx) == 1
+
+
+class TestLocalEarlyExit:
+    def test_masked_slot_returns_zeros(self, retrace_task):
+        task = retrace_task
+        spec = _local_spec(task)
+        fn = make_local_fn(spec)
+        lora0 = synth.init_lora(task)
+        zeros = tree_zeros_like(lora0)
+        args = (task.base, lora0, task.client_x[0], task.client_y[0],
+                jax.random.PRNGKey(0), zeros, zeros, lora0)
+        skip = fn(*args, jnp.asarray(0.0))
+        run = fn(*args, jnp.asarray(1.0))
+        legacy = fn(*args)  # no `active` -> unconditional legacy path
+        for leaf in jax.tree_util.tree_leaves(skip.delta):
+            np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+        assert float(skip.final_loss) == 0.0
+        # active slot matches the legacy unconditional run bit-for-bit
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            run.delta, legacy.delta,
+        )
+
+    def test_round_diags_unchanged_by_early_exit(self, retrace_task):
+        """Masked slots never reach the aggregate/loss reductions, so the
+        early-exit (zero deltas instead of garbage local runs) must leave
+        round outputs identical up to float noise."""
+        task = retrace_task
+        cfg = FedRunConfig(
+            aggregator=AggregatorConfig(method="fedrpca", rpca_iters=5),
+            local=_local_spec(task),
+            rounds=1,
+            clients_per_round=8,
+        )
+        round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+        state = init_round_state(synth.init_lora(task), 16, 0)
+        new_state, diags = round_fn(state, 5)
+        assert np.isfinite(float(diags["mean_local_loss"]))
+        assert np.isfinite(float(diags["beta_mean"]))
+
+
+class TestDataSizeRpcaRound:
+    def test_round_runs_and_differs_from_mean_weighting(self, retrace_task):
+        """The column-scale plumbing must actually reach the round: the
+        final lora under data_size_rpca differs from plain data_size."""
+        task = retrace_task
+        loras = {}
+        for weighting in ("data_size", "data_size_rpca"):
+            cfg = FedRunConfig(
+                aggregator=AggregatorConfig(
+                    method="fedrpca", rpca_iters=5, weighting=weighting
+                ),
+                local=_local_spec(task),
+                rounds=2,
+                clients_per_round=6,
+            )
+            eval_fn = lambda lora: synth.accuracy(
+                task.base, lora, task.test_x, task.test_y, task.lora_scale
+            )
+            lora, hist = run_simulation(
+                task.base, synth.init_lora(task), task.client_x, task.client_y,
+                cfg, eval_fn, client_weights=np.linspace(1.0, 3.0, 16),
+            )
+            assert np.isfinite(hist).all()
+            loras[weighting] = lora
+        diffs = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))),
+            loras["data_size"], loras["data_size_rpca"],
+        )
+        assert max(jax.tree_util.tree_leaves(diffs)) > 1e-6, diffs
 
 
 class TestRoundsToReachEdges:
