@@ -45,6 +45,17 @@ PyTree = Any
 #: (non-fedrpca methods treat it exactly like "data_size").
 WEIGHTINGS = ("uniform", "data_size", "data_size_rpca")
 
+#: Cross-round aggregation carry modes (DESIGN.md §7): "none" keeps the
+#: per-round stateless behavior bit-for-bit; "subspace" persists each
+#: bucket's subspace-SVT session (eigenbasis + the ADMM iterates it tracks)
+#: across rounds and requires ``svt_mode="subspace"``; "full" carries the
+#: ADMM iterates under either svt mode (in gram mode there is no eigh to
+#: skip, but tolerance-mode rounds re-converge in far fewer iterations).
+#: The carry threads through the packed engine's session API
+#: (``repro.core.engine.AggSession`` / ``aggregate_planned``); the
+#: reference engine ignores it.
+CARRY_MODES = ("none", "subspace", "full")
+
 
 @dataclasses.dataclass(frozen=True)
 class AggregatorConfig:
@@ -64,6 +75,10 @@ class AggregatorConfig:
     svt_rank: int = 8  # subspace mode: carried basis width cap
     svt_sweeps: int = 2  # subspace mode: power sweeps per ADMM iteration
     svt_fallback_tol: float = 1e-3  # subspace-residual bound before eigh fallback
+    carry_mode: str = "none"  # cross-round session carry (see CARRY_MODES)
+    carry_gate: float = 1.0  # warm-start gate: max initial residual vs cold (=1.0)
+    retier_every: int = 0  # AggSession: re-split tiers every K rounds (0 = off)
+    retier_margin: int = 1  # live-rank headroom kept by the low tier's rank cap
     ties_keep: float = 0.1  # TIES trim: fraction of entries kept per client
     ties_scale: float = 1.0  # TIES final scaling (lambda in the paper)
     dare_drop: float = 0.9  # DARE drop rate
@@ -462,11 +477,22 @@ def rpca_diag_summary(diag) -> dict:
     arrays); both engines therefore report the same keys from
     ``fed/server.py`` round diagnostics."""
     if hasattr(diag, "arrays"):  # EngineDiagnostics (duck-typed, no import)
-        return {
+        out = {
             "beta_mean": diag.mean("beta"),
             "energy_mean": diag.mean("energy"),
             "rpca_residual_max": diag.max("residual"),
         }
+        # Cross-round session health (present only when a carry threads
+        # through aggregate_planned): exact-eigh fallbacks this round,
+        # mean live rank of the carried subspaces, and the fraction of
+        # bucket tiers that warm-started.  Carry regressions show up here
+        # in training logs long before they show up in wall time.
+        if "live_rank" in diag.arrays:
+            out["live_rank_mean"] = diag.mean("live_rank")
+        for k in ("fallback_count", "carry_hit_rate"):
+            if k in diag.scalars:
+                out[k] = diag.scalars[k]
+        return out
     return {
         "beta_mean": jnp.mean(diag["beta"]),
         "energy_mean": jnp.mean(diag["energy"]),
@@ -531,6 +557,10 @@ def aggregate(
     cfg = cfg or AggregatorConfig()
     if cfg.weighting not in WEIGHTINGS:
         raise ValueError(f"unknown weighting: {cfg.weighting!r} (expected one of {WEIGHTINGS})")
+    if cfg.carry_mode not in CARRY_MODES:
+        raise ValueError(
+            f"unknown carry_mode: {cfg.carry_mode!r} (expected one of {CARRY_MODES})"
+        )
     if cfg.svt_mode not in rpca_lib.SVT_MODES:
         raise ValueError(
             f"unknown svt_mode: {cfg.svt_mode!r} (expected one of {rpca_lib.SVT_MODES})"

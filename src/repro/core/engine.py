@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import rpca as rpca_lib
 from repro.core import stacking
 from repro.core.aggregators import (
+    CARRY_MODES,
     AggregatorConfig,
     _client_weights,
     _dare_keep,
@@ -288,11 +289,14 @@ class EngineDiagnostics:
 
     Each field maps bucket key -> (total_modules,) array; ``spec`` maps rows
     back to tree paths.  Replaces the reference path's ad-hoc
-    ``leaf{i}/beta_mean`` scalar dict.
+    ``leaf{i}/beta_mean`` scalar dict.  ``scalars`` holds whole-round
+    scalar health signals (cross-round sessions add ``fallback_count`` and
+    ``carry_hit_rate`` here; stateless calls leave it empty).
     """
 
     spec: PackSpec
     arrays: Mapping[str, Mapping[BucketKey, jnp.ndarray]]
+    scalars: Mapping[str, jnp.ndarray] = dataclasses.field(default_factory=dict)
 
     def flat(self, name: str) -> jnp.ndarray:
         """All modules' values for one diagnostic, bucket order."""
@@ -317,8 +321,10 @@ class EngineDiagnostics:
 # data) so jitted callers can return diagnostics directly.
 jax.tree_util.register_pytree_node(
     EngineDiagnostics,
-    lambda d: ((d.arrays,), d.spec),
-    lambda spec, children: EngineDiagnostics(spec=spec, arrays=children[0]),
+    lambda d: ((d.arrays, d.scalars), d.spec),
+    lambda spec, children: EngineDiagnostics(
+        spec=spec, arrays=children[0], scalars=children[1]
+    ),
 )
 
 
@@ -379,9 +385,9 @@ def _ties_bucket(
 
 
 def _fedrpca_bucket(
-    bucket: Bucket, cfg, shrink_fn: Callable
-) -> tuple[jnp.ndarray, dict]:
-    """One-dispatch FedRPCA over a bucket: returns ((B, vec) update, diag).
+    bucket: Bucket, cfg, shrink_fn: Callable, carry=None, svt_rank: int | None = None
+) -> tuple[jnp.ndarray, dict, Any]:
+    """One-dispatch FedRPCA over a bucket: ((B, vec) update, diag, carry').
 
     The bucket's client mask rides into ``robust_pca_bucket`` (n_eff ADMM
     constants, masked tail) and the column means become weighted sums over
@@ -389,7 +395,13 @@ def _fedrpca_bucket(
     bucket by n_eff-normalized weights *before* the split (importance-
     weighted RPCA — weights shape the subspace) and reverts to uniform
     means over active clients afterwards, mirroring the reference path's
-    ``col_scale`` branch exactly."""
+    ``col_scale`` branch exactly.
+
+    ``carry`` is this bucket's cross-round ``BucketCarry`` (or None for the
+    stateless call, in which case the returned carry is None too);
+    ``svt_rank`` overrides the config's basis-width cap — the two-tier
+    re-pack runs converged tiers at a tighter cap.
+    """
     m = bucket.data.astype(jnp.float32)
     col_scaled = cfg.weighting == "data_size_rpca" and bucket.weights is not None
     if bucket.client_mask is None:
@@ -409,10 +421,16 @@ def _fedrpca_bucket(
         fused_tail=cfg.rpca_fused_tail,
         client_mask=bucket.client_mask,
         svt_mode=cfg.svt_mode,
-        svt_rank=cfg.svt_rank,
+        svt_rank=cfg.svt_rank if svt_rank is None else svt_rank,
         svt_sweeps=cfg.svt_sweeps,
         svt_fallback_tol=cfg.svt_fallback_tol,
+        carry=carry,
+        return_carry=carry is not None,
+        carry_gate=cfg.carry_gate,
     )
+    new_carry = None
+    if carry is not None:
+        res, new_carry = res
     w_post = w_uniform if col_scaled else bucket.weights
     if w_post is None:
         low_mean = jnp.mean(res.low_rank, axis=-1)
@@ -428,7 +446,7 @@ def _fedrpca_bucket(
     else:
         beta = jnp.full(energy.shape, cfg.beta, jnp.float32)
     update = low_mean + beta[:, None] * sparse_mean
-    return update, {"beta": beta, "energy": energy, "residual": res.residual}
+    return update, {"beta": beta, "energy": energy, "residual": res.residual}, new_carry
 
 
 def _dare_rescale(stacked: PyTree, drop_rate: float, key, mask=None) -> PyTree:
@@ -520,7 +538,7 @@ def aggregate_packed(
     elif method == "fedrpca":
         betas, energies, residuals = {}, {}, {}
         for bkey, bucket in buckets.items():
-            updates[bkey], d = _fedrpca_bucket(bucket, cfg, shrink_fn)
+            updates[bkey], d, _ = _fedrpca_bucket(bucket, cfg, shrink_fn)
             betas[bkey], energies[bkey], residuals[bkey] = (
                 d["beta"],
                 d["energy"],
@@ -538,3 +556,432 @@ def aggregate_packed(
             return out, {}
         return out, EngineDiagnostics(spec=spec, arrays=diag_arrays)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Stateful cross-round aggregation sessions (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# The stateless ``aggregate_packed`` re-derives everything per call and
+# throws all RPCA state away, so every federated round cold-starts the ADMM
+# loop and pays the exact-eigh burn-in that svt_mode="subspace" was built to
+# avoid — even though client deltas correlate strongly across rounds (the
+# paper's core observation).  The session API splits aggregation into a
+# trace-time *plan* (``AggPlan``: PackSpec + two-tier bucket layout, built
+# once per tree structure) and a runtime *step* (``aggregate_planned``) that
+# takes and returns an ``AggCarry`` pytree of per-bucket-tier
+# ``rpca.BucketCarry`` states, so warm rounds enter the ADMM loop at the
+# previous round's fixed point.  The carry is an ordinary pytree of fixed
+# shapes: threading it through a jitted round adds zero extra compiles.
+
+#: AggCarry: {(bucket_key, tier_name): rpca.BucketCarry}.  An empty dict is
+#: the carry of a plan with no session state (carry_mode="none" or a
+#: non-fedrpca method) — structurally stable either way.
+AggCarry = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Static two-tier split of one bucket's module rows.
+
+    ``full_idx`` modules run at the config's ``svt_rank`` cap (the burn-in
+    tier); ``low_idx`` modules have converged to a small live rank and run
+    at the tighter ``low_cap`` (smaller carried basis, cheaper sweeps and
+    r x r Ritz solves).  Either side may be empty; membership is static
+    Python data, so tier changes re-trace — ``plan_retier`` therefore runs
+    on a K-round cadence, never per round.
+    """
+
+    low_idx: tuple = ()
+    full_idx: tuple = ()
+    low_cap: int = 0
+
+    def tiers(self):
+        """Non-empty (name, module_idx, rank_cap_or_None) tiers."""
+        out = []
+        if self.full_idx:
+            out.append(("full", self.full_idx, None))
+        if self.low_idx:
+            out.append(("low", self.low_idx, self.low_cap))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AggPlan:
+    """Trace-time half of an aggregation session: everything static.
+
+    Built once per delta-tree structure by ``plan_aggregation`` and reused
+    every round: the invertible ``PackSpec``, the packing granularity, the
+    per-bucket two-tier layout, and whether a carry threads at all.  The
+    plan is the compilation key — rounds that share a plan share one trace.
+    """
+
+    cfg: AggregatorConfig
+    spec: PackSpec
+    granularity: str
+    joint_ab: bool
+    carry: bool  # whether step() threads an AggCarry
+    tiers: Mapping[BucketKey, TierSpec]
+
+
+def _plan_carry(cfg) -> bool:
+    if cfg.carry_mode not in CARRY_MODES:
+        raise ValueError(
+            f"unknown carry_mode: {cfg.carry_mode!r} (expected one of {CARRY_MODES})"
+        )
+    if cfg.carry_mode == "none" or cfg.method != "fedrpca":
+        return False
+    if cfg.carry_mode == "subspace" and cfg.svt_mode != "subspace":
+        raise ValueError(
+            'carry_mode="subspace" persists the subspace-SVT eigenbasis and '
+            'requires svt_mode="subspace"; use carry_mode="full" to carry '
+            "bare ADMM iterates under gram mode"
+        )
+    return True
+
+
+def plan_aggregation(stacked: PyTree, cfg=None, *, cohort_size: int | None = None) -> AggPlan:
+    """Build the trace-time plan for aggregating trees shaped like ``stacked``.
+
+    ``stacked`` may be concrete arrays or tracers — only its structure,
+    shapes and dtypes matter.  The initial plan puts every bucket's modules
+    in the burn-in tier; ``plan_retier`` moves converged modules to the
+    low-rank tier between rounds.
+    """
+    cfg = cfg or AggregatorConfig()
+    granularity = "leaf" if cfg.method == "ties" else "module"
+    joint = cfg.method == "fedrpca" and cfg.joint_ab
+    _, spec = pack(
+        stacked, granularity=granularity, joint_ab=joint, cohort_size=cohort_size
+    )
+    tiers = {
+        key: TierSpec(low_idx=(), full_idx=tuple(range(dims[0])), low_cap=0)
+        for key, dims in spec.bucket_dims.items()
+    }
+    return AggPlan(
+        cfg=cfg,
+        spec=spec,
+        granularity=granularity,
+        joint_ab=joint,
+        carry=_plan_carry(cfg),
+        tiers=tiers,
+    )
+
+
+def init_agg_carry(plan: AggPlan) -> AggCarry:
+    """Empty (invalid) carry matching the plan's bucket/tier layout."""
+    if not plan.carry:
+        return {}
+    out = {}
+    for bkey, tier in plan.tiers.items():
+        padded_vec, d2 = bkey[0], bkey[1]
+        for name, idx, cap in tier.tiers():
+            rank = plan.cfg.svt_rank if cap is None else cap
+            out[(bkey, name)] = rpca_lib.init_bucket_carry(
+                len(idx), padded_vec, d2, rank
+            )
+    return out
+
+
+def _sub_bucket(bucket: Bucket, idx: tuple) -> Bucket:
+    """Static module-row subset of a bucket (a tier's view)."""
+    ia = jnp.asarray(idx, jnp.int32)
+    return Bucket(
+        data=bucket.data[ia],
+        true_dims=bucket.true_dims[ia],
+        dims=tuple(bucket.dims[i] for i in idx),
+        client_mask=bucket.client_mask,
+        weights=bucket.weights,
+    )
+
+
+def aggregate_planned(
+    plan: AggPlan,
+    stacked: PyTree,
+    carry: AggCarry | None = None,
+    *,
+    shrink_fn: Callable = rpca_lib.soft_threshold,
+    key=None,
+    mask=None,
+    weights=None,
+    with_diagnostics: bool = False,
+):
+    """Runtime step of an aggregation session: one round under a fixed plan.
+
+    Packs ``stacked`` into the plan's buckets (the packing walk happens at
+    trace time; compiled rounds re-run only the device ops), dispatches each
+    bucket *tier* as one batched call with its own rank cap and its own
+    slot of the carry, and returns ``(update, new_carry)`` — plus an
+    ``EngineDiagnostics`` when ``with_diagnostics`` (fedrpca adds
+    per-module ``live_rank`` and the ``fallback_count`` /
+    ``carry_hit_rate`` scalars when a carry threads).
+
+    ``carry=None`` (or ``{}``) with a carrying plan cold-starts every
+    bucket; ``carry_mode="none"`` plans pass the empty carry through
+    unchanged and produce bit-for-bit the stateless result.
+    """
+    cfg = plan.cfg
+    method = cfg.method
+    if method != "fedrpca":
+        # Only fedrpca has session state; every other method (dare's drop/
+        # rescale included) delegates wholesale to the stateless dispatch
+        # and passes the (empty) carry through.
+        out = aggregate_packed(
+            stacked, cfg, shrink_fn=shrink_fn, key=key, mask=mask,
+            weights=weights, with_diagnostics=with_diagnostics,
+        )
+        new_carry = {} if carry is None else carry
+        if with_diagnostics:
+            return out[0], new_carry, out[1]
+        return out, new_carry
+
+    mask32 = None if mask is None else jnp.asarray(mask, jnp.float32)
+    w = _client_weights(mask32, weights)
+    buckets, spec = pack(
+        stacked, granularity=plan.granularity, joint_ab=plan.joint_ab,
+        client_mask=mask32, weights=w,
+    )
+    if dict(spec.bucket_dims) != dict(plan.spec.bucket_dims):
+        raise ValueError(
+            "stacked tree does not match the session plan "
+            f"({dict(spec.bucket_dims)} vs {dict(plan.spec.bucket_dims)}); "
+            "re-plan with plan_aggregation for a new tree structure"
+        )
+    if plan.carry and not carry:
+        carry = init_agg_carry(plan)
+
+    updates: dict[BucketKey, jnp.ndarray] = {}
+    arrays: dict[str, dict] = {
+        k: {} for k in ("beta", "energy", "residual") + (("live_rank",) if plan.carry else ())
+    }
+    new_carry: AggCarry = {}
+    falls, hits = [], []
+    for bkey, bucket in buckets.items():
+        tier = plan.tiers[bkey]
+        b_total, padded_vec = plan.spec.bucket_dims[bkey]
+        tiers = tier.tiers()
+        if len(tiers) == 1 and tiers[0][1] == tuple(range(b_total)):
+            # Single whole-bucket tier: skip the gather/scatter round-trip.
+            name, _, cap = tiers[0]
+            ck = (bkey, name)
+            upd, d, c2 = _fedrpca_bucket(
+                bucket, cfg, shrink_fn,
+                carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
+            )
+            updates[bkey] = upd
+            per_mod = dict(d)
+            if plan.carry:
+                new_carry[ck] = c2
+                per_mod["live_rank"] = c2.n_live.astype(jnp.float32)
+                falls.append(c2.fall_count)
+                hits.append(c2.hit)
+        else:
+            upd = jnp.zeros((b_total, padded_vec), jnp.float32)
+            per_mod = {
+                k: jnp.zeros((b_total,), jnp.float32) for k in arrays
+            }
+            for name, idx, cap in tiers:
+                ck = (bkey, name)
+                sub = _sub_bucket(bucket, idx)
+                u_t, d_t, c2 = _fedrpca_bucket(
+                    sub, cfg, shrink_fn,
+                    carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
+                )
+                ia = jnp.asarray(idx, jnp.int32)
+                upd = upd.at[ia].set(u_t.astype(jnp.float32))
+                for k in ("beta", "energy", "residual"):
+                    per_mod[k] = per_mod[k].at[ia].set(d_t[k])
+                if plan.carry:
+                    new_carry[ck] = c2
+                    per_mod["live_rank"] = per_mod["live_rank"].at[ia].set(
+                        c2.n_live.astype(jnp.float32)
+                    )
+                    falls.append(c2.fall_count)
+                    hits.append(c2.hit)
+            updates[bkey] = upd
+        for k in arrays:
+            arrays[k][bkey] = per_mod[k]
+
+    out = unpack(spec, updates)
+    if not with_diagnostics:
+        return out, new_carry
+    scalars = {}
+    if plan.carry:
+        scalars = {
+            "fallback_count": sum(falls, jnp.zeros((), jnp.int32)),
+            "carry_hit_rate": jnp.mean(jnp.stack(hits)),
+        }
+    diag = EngineDiagnostics(spec=spec, arrays=arrays, scalars=scalars)
+    return out, new_carry, diag
+
+
+def plan_retier(plan: AggPlan, carry: AggCarry, *, margin: int | None = None) -> AggPlan:
+    """Two-tier re-pack: move converged modules to a tighter-rank tier.
+
+    Host-side (reads the carry's live ranks): a module whose carried live
+    rank sits at least ``margin + 1`` below the full cap joins the low
+    tier, whose cap is the max live rank among its members plus ``margin``
+    headroom.  Buckets with an invalid carry (or nothing worth splitting)
+    keep a single burn-in tier.  Returns a NEW plan — membership is static,
+    so stepping the new plan re-traces once; call on a K-round cadence
+    (``AggregatorConfig.retier_every``), not per round.
+    """
+    cfg = plan.cfg
+    if not plan.carry:
+        return plan
+    margin = cfg.retier_margin if margin is None else margin
+    new_tiers = {}
+    for bkey, tier in plan.tiers.items():
+        b_total = plan.spec.bucket_dims[bkey][0]
+        d2 = bkey[1]
+        r_full = rpca_lib.subspace_rank(d2, cfg.svt_rank)
+        single = TierSpec(low_idx=(), full_idx=tuple(range(b_total)), low_cap=0)
+        n_live = [0] * b_total
+        ok = True
+        for name, idx, _cap in tier.tiers():
+            c = carry.get((bkey, name))
+            if c is None or not bool(c.valid):
+                ok = False
+                break
+            for i, mod in enumerate(idx):
+                n_live[mod] = int(c.n_live[i])
+        if not ok:
+            new_tiers[bkey] = single
+            continue
+        lows = tuple(i for i in range(b_total) if 0 < n_live[i] + margin < r_full)
+        low_cap = max((n_live[i] for i in lows), default=0) + margin
+        if not lows or low_cap >= r_full:
+            new_tiers[bkey] = single
+            continue
+        fulls = tuple(i for i in range(b_total) if i not in set(lows))
+        new_tiers[bkey] = TierSpec(low_idx=lows, full_idx=fulls, low_cap=low_cap)
+    return dataclasses.replace(plan, tiers=new_tiers)
+
+
+def migrate_carry(old_plan: AggPlan, old_carry: AggCarry, new_plan: AggPlan) -> AggCarry:
+    """Re-key a carry onto a re-tiered plan (same PackSpec, new membership).
+
+    Module rows (warm L/S/Y iterates, live ranks) move with their modules;
+    each module's basis is column-sliced to the destination tier's width
+    (eigh orders ascending, so the trailing columns are the top directions)
+    or front-padded with identity columns when the width grows.  The
+    validity scalars transfer, so migrated buckets warm-start immediately;
+    any basis mismatch the slice introduces is caught by the subspace
+    fallback gate, never silently wrong.
+    """
+    if not new_plan.carry:
+        return {}
+    if not old_carry:
+        return init_agg_carry(new_plan)
+    out = init_agg_carry(new_plan)
+    for bkey, new_tier in new_plan.tiers.items():
+        # Gather old per-module state for this bucket.
+        by_mod = {}
+        meta = None
+        for name, idx, _cap in old_plan.tiers[bkey].tiers():
+            c = old_carry.get((bkey, name))
+            if c is None:
+                continue
+            meta = c
+            for i, mod in enumerate(idx):
+                by_mod[mod] = (c.l[i], c.s[i], c.y[i], c.v[i], c.n_live[i])
+        if meta is None:
+            continue
+        for name, idx, cap in new_tier.tiers():
+            ck = (bkey, name)
+            tgt = out[ck]
+            if any(mod not in by_mod for mod in idx):
+                continue  # keep the invalid zero-carry for this tier
+            r_new = tgt.v.shape[-1]
+
+            def fit_basis(v):
+                r_old = v.shape[-1]
+                if r_old >= r_new:
+                    return v[:, r_old - r_new:]
+                d2 = v.shape[0]
+                pad = jnp.eye(d2, r_new - r_old, dtype=v.dtype)
+                return jnp.concatenate([pad, v], axis=-1)
+
+            stack = lambda j: jnp.stack([by_mod[mod][j] for mod in idx])
+            out[ck] = rpca_lib.BucketCarry(
+                l=stack(0),
+                s=stack(1),
+                y=stack(2),
+                v=jnp.stack([fit_basis(by_mod[mod][3]) for mod in idx]),
+                n_live=jnp.minimum(stack(4), r_new).astype(jnp.int32),
+                n_eff=meta.n_eff,
+                valid=meta.valid,
+                fall_count=jnp.zeros((), jnp.int32),
+                hit=jnp.zeros((), jnp.float32),
+            )
+    return out
+
+
+class AggSession:
+    """Stateful cross-round aggregation: plan once, step every round.
+
+    The session owns the plan, the carry, and one jitted step per plan.
+    ``step`` lazily plans on the first call (from that call's tree
+    structure), re-tiers every ``cfg.retier_every`` rounds (0 = never), and
+    threads the carry automatically:
+
+        session = AggSession(AggregatorConfig(
+            method="fedrpca", svt_mode="subspace", carry_mode="subspace"))
+        for round_tree in rounds:
+            update, diag = session.step(round_tree)
+
+    ``fed.server.make_round_fn`` inlines the same plan/step pair inside its
+    jitted round (the carry rides on ``RoundState.agg_carry``); this class
+    is the standalone driver for benchmarks, notebooks, and the async
+    pipeline work the ROADMAP points at.
+    """
+
+    def __init__(self, cfg=None, *, shrink_fn: Callable = rpca_lib.soft_threshold):
+        self.cfg = cfg or AggregatorConfig()
+        self.shrink_fn = shrink_fn
+        self.plan: AggPlan | None = None
+        self.carry: AggCarry = {}
+        self.round_idx = 0
+        self._step = None
+
+    def _compile(self):
+        plan, shrink_fn = self.plan, self.shrink_fn
+
+        @jax.jit
+        def step(stacked, carry, key, mask, weights):
+            return aggregate_planned(
+                plan, stacked, carry, shrink_fn=shrink_fn, key=key,
+                mask=mask, weights=weights, with_diagnostics=True,
+            )
+
+        self._step = step
+
+    def reset(self):
+        """Drop all cross-round state (the next step cold-starts)."""
+        if self.plan is not None:
+            self.carry = init_agg_carry(self.plan)
+        self.round_idx = 0
+
+    def retier(self):
+        """Re-evaluate the two-tier split now and migrate the carry."""
+        new_plan = plan_retier(self.plan, jax.device_get(self.carry))
+        if new_plan.tiers != self.plan.tiers:
+            self.carry = migrate_carry(self.plan, self.carry, new_plan)
+            self.plan = new_plan
+            self._compile()
+
+    def step(self, stacked, *, key=None, mask=None, weights=None):
+        """Aggregate one round's stacked deltas; returns (update, diag)."""
+        if self.plan is None:
+            self.plan = plan_aggregation(stacked, self.cfg)
+            self.carry = init_agg_carry(self.plan)
+            self._compile()
+        elif (
+            self.cfg.retier_every
+            and self.round_idx
+            and self.round_idx % self.cfg.retier_every == 0
+        ):
+            self.retier()
+        out, self.carry, diag = self._step(stacked, self.carry, key, mask, weights)
+        self.round_idx += 1
+        return out, diag

@@ -152,7 +152,12 @@ def _exact_projector(g, t, r, shrink_fn):
     s_shrunk = shrink_fn(s, t[:, None])
     coef = jnp.where(s > _EPS, s_shrunk / jnp.maximum(s, _EPS), 0.0)
     p = jnp.einsum("bnk,bk,bmk->bnm", v_full, coef, v_full)
-    v_top = jnp.flip(v_full[:, :, -r:], axis=-1)  # descending eigenvalue order
+    # Top-r eigenbasis in eigh's ascending order (top directions LAST) —
+    # the same column convention the Ritz path stores, so consumers that
+    # truncate a carried basis (engine.migrate_carry) can slice trailing
+    # columns regardless of which path produced it.  The warm path itself
+    # only uses the span, so ordering is otherwise free.
+    v_top = v_full[:, :, -r:]
     n_live = jnp.sum((s_shrunk > 0.0).astype(jnp.int32), axis=-1)
     rel = jnp.zeros(t.shape, jnp.float32)  # basis is exact at this iterate
     return p, v_top, n_live, rel
@@ -335,6 +340,56 @@ class RPCAResult(NamedTuple):
     residual: jnp.ndarray  # ||M - L - S||_F / ||M||_F at exit
 
 
+class BucketCarry(NamedTuple):
+    """Cross-round warm-start state of one bucket's RPCA (DESIGN.md §7).
+
+    Client LoRA deltas correlate strongly across federated rounds (the
+    paper's shared-common-knowledge observation), so the ADMM fixed point of
+    round t is an excellent initial iterate for round t+1.  The carry holds
+    the full session state: the converged iterates ``l``/``s``/dual ``y``
+    (f32, bucket layout ``(B, padded_vec, d2)``), the subspace-SVT
+    eigenbasis ``v`` ``(B, d2, r)`` with its live-rank tracker ``n_live``,
+    and the validity/health scalars.  A warm start is accepted only when
+    ``valid`` is set, the cohort fingerprint ``n_eff`` matches (carry is
+    keyed to canonical buckets, not cohort identity — a same-size resampled
+    cohort may warm-start, a resized one may not), and the initial relative
+    residual ``||M - l - s||_F / ||M||_F`` does not exceed ``carry_gate``
+    (cold start scores exactly 1.0, so the default gate accepts any init
+    that is no worse than cold).  ``fall_count`` / ``hit`` are diagnostics
+    of the call that *produced* the carry: whole-bucket exact-eigh SVT
+    steps taken, and whether that call itself warm-started.
+    """
+
+    l: jnp.ndarray
+    s: jnp.ndarray
+    y: jnp.ndarray
+    v: jnp.ndarray
+    n_live: jnp.ndarray
+    n_eff: jnp.ndarray  # () f32 cohort fingerprint at save time
+    valid: jnp.ndarray  # () bool — the carry holds real state
+    fall_count: jnp.ndarray  # () i32 exact-eigh steps in the producing call
+    hit: jnp.ndarray  # () f32 — 1.0 iff the producing call warm-started
+
+
+def init_bucket_carry(
+    n_modules: int, padded_vec: int, d2: int, svt_rank: int
+) -> BucketCarry:
+    """Empty (invalid) carry with the static shapes of one bucket."""
+    r = subspace_rank(d2, svt_rank)
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return BucketCarry(
+        l=z(n_modules, padded_vec, d2),
+        s=z(n_modules, padded_vec, d2),
+        y=z(n_modules, padded_vec, d2),
+        v=z(n_modules, d2, r),
+        n_live=jnp.zeros((n_modules,), jnp.int32),
+        n_eff=jnp.zeros((), jnp.float32),
+        valid=jnp.zeros((), bool),
+        fall_count=jnp.zeros((), jnp.int32),
+        hit=jnp.zeros((), jnp.float32),
+    )
+
+
 def robust_pca(
     m: jnp.ndarray,
     *,
@@ -348,6 +403,9 @@ def robust_pca(
     svt_rank: int = 8,
     svt_sweeps: int = 2,
     svt_fallback_tol: float = 1e-3,
+    carry: BucketCarry | None = None,
+    return_carry: bool = False,
+    carry_gate: float = 1.0,
 ) -> RPCAResult:
     """Decompose ``m`` into low-rank + sparse, per the paper's Algorithm 2.
 
@@ -362,23 +420,35 @@ def robust_pca(
         routes through the B=1 bucket loop so the eigenbasis carry threads
         the ADMM iterations).
       svt_rank / svt_sweeps / svt_fallback_tol: subspace-mode knobs.
+      carry / return_carry / carry_gate: cross-round session state
+        (DESIGN.md §7) — a B=1 ``BucketCarry`` (``init_bucket_carry(1,
+        ...)``); any carry routes through the bucket loop, gram mode
+        included.
 
     Returns:
-      RPCAResult(low_rank=L, sparse=S, n_iter, residual).
+      RPCAResult(low_rank=L, sparse=S, n_iter, residual)
+      [, BucketCarry when return_carry].
     """
     if m.ndim != 2:
         raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
-    if svt_mode != "gram":
+    if svt_mode != "gram" or carry is not None or return_carry:
         if svt_fn is not svt_gram:
             raise ValueError(
-                "custom svt_fn is only honored with svt_mode='gram'; the "
-                "subspace path owns its SVT (basis carry + fallback)"
+                "custom svt_fn is only honored on the carry-less "
+                "svt_mode='gram' path; the bucket loop owns its SVT"
             )
         res = robust_pca_bucket(
             m[None], n_iter=max_iter, tol=tol, mu=mu, lam=lam,
             shrink_fn=shrink_fn, svt_mode=svt_mode, svt_rank=svt_rank,
             svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
+            carry=carry, return_carry=return_carry, carry_gate=carry_gate,
         )
+        if return_carry:
+            res, new_carry = res
+            return (
+                RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0]),
+                new_carry,
+            )
         return RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0])
     orig_dtype = m.dtype
     m = m.astype(jnp.float32)
@@ -424,6 +494,9 @@ def robust_pca_fixed_iters(
     svt_rank: int = 8,
     svt_sweeps: int = 2,
     svt_fallback_tol: float = 1e-3,
+    carry: BucketCarry | None = None,
+    return_carry: bool = False,
+    carry_gate: float = 1.0,
 ) -> RPCAResult:
     """Fixed-iteration RPCA (fori_loop) — deterministic cost for the mesh path.
 
@@ -433,21 +506,30 @@ def robust_pca_fixed_iters(
     ``svt_mode="subspace"`` threads the warm-started eigenbasis through the
     loop via the B=1 bucket path (note: the whole-bucket eigh fallback
     ``lax.cond`` lowers to a select under ``jax.vmap``, so vmapped callers
-    pay both branches — batch via ``robust_pca_bucket`` instead).
+    pay both branches — batch via ``robust_pca_bucket`` instead).  A
+    ``carry`` (B=1 ``BucketCarry``, DESIGN.md §7) likewise routes through
+    the bucket loop under either svt mode.
     """
     if m.ndim != 2:
         raise ValueError(f"robust_pca expects a 2-D matrix, got shape {m.shape}")
-    if svt_mode != "gram":
+    if svt_mode != "gram" or carry is not None or return_carry:
         if svt_fn is not svt_gram:
             raise ValueError(
-                "custom svt_fn is only honored with svt_mode='gram'; the "
-                "subspace path owns its SVT (basis carry + fallback)"
+                "custom svt_fn is only honored on the carry-less "
+                "svt_mode='gram' path; the bucket loop owns its SVT"
             )
         res = robust_pca_bucket(
             m[None], n_iter=n_iter, tol=None, mu=mu, lam=lam,
             shrink_fn=shrink_fn, svt_mode=svt_mode, svt_rank=svt_rank,
             svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
+            carry=carry, return_carry=return_carry, carry_gate=carry_gate,
         )
+        if return_carry:
+            res, new_carry = res
+            return (
+                RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0]),
+                new_carry,
+            )
         return RPCAResult(res.low_rank[0], res.sparse[0], res.n_iter[0], res.residual[0])
     orig_dtype = m.dtype
     m = m.astype(jnp.float32)
@@ -523,6 +605,9 @@ def robust_pca_bucket(
     svt_rank: int = 8,
     svt_sweeps: int = 2,
     svt_fallback_tol: float = 1e-3,
+    carry: BucketCarry | None = None,
+    return_carry: bool = False,
+    carry_gate: float = 1.0,
 ) -> RPCAResult:
     """RPCA over a whole shape bucket in ONE dispatch (no per-leaf Python).
 
@@ -561,6 +646,16 @@ def robust_pca_bucket(
     ``L = X @ P``, shrink, dual ascent, residual partial sums, and the
     next iteration's Gram accumulation) runs as one Pallas VMEM pass
     (``repro.kernels.svt_subspace.subspace_apply``).
+
+    ``carry`` threads cross-round session state (DESIGN.md §7): a valid
+    carry whose cohort fingerprint matches and whose initial relative
+    residual passes ``carry_gate`` warm-starts ``L``/``S``/``Y`` and (in
+    subspace mode) the eigenbasis, so a warm round enters the ADMM loop at
+    the previous round's fixed point and skips the exact-eigh burn-in
+    entirely.  Any gate failure selects the ordinary cold start — the
+    result is then identical to a carry-less call.  ``return_carry=True``
+    additionally returns the exit-state ``BucketCarry`` (f32 iterates,
+    basis, live ranks, fallback/hit diagnostics) for the next round.
     """
     if m.ndim != 3:
         raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
@@ -594,9 +689,41 @@ def robust_pca_bucket(
     rho = 1.0 / mu_v
     thresh = rho * lam_v
     m_norm = jnp.maximum(jnp.sqrt(jnp.sum(m * m, axis=(1, 2))), _EPS)
+    n_eff_s = jnp.asarray(n_eff, jnp.float32)
 
     use_subspace = svt_mode == "subspace"
     use_sub_kernel = use_subspace and fused_tail
+
+    # Cross-round warm start (DESIGN.md §7): accept the carried iterates only
+    # when the carry is valid, the cohort fingerprint matches, and starting
+    # from them is no worse than the cold start (whose initial relative
+    # residual is exactly 1.0).  The gate is a whole-bucket scalar so the
+    # subspace loop's cold/warm routing stays a single cheap cond.
+    zeros = jnp.zeros_like(m)
+    if carry is not None:
+        if carry.l.shape != m.shape:
+            raise ValueError(
+                f"carry shape {carry.l.shape} does not match bucket {m.shape}"
+            )
+        cl, cs, cy = carry.l, carry.s, carry.y
+        if cmask is not None:
+            # A carry saved under a different active set may hold nonzeros in
+            # currently-masked columns; re-mask on load so padded slots stay
+            # inert (the gate below then scores the masked iterates).
+            cl, cs, cy = cl * cmask, cs * cmask, cy * cmask
+        init_res = m - cl - cs
+        init_err = jnp.sqrt(jnp.sum(init_res * init_res, axis=(1, 2))) / m_norm
+        warm = jnp.logical_and(
+            jnp.asarray(carry.valid),
+            jnp.logical_and(
+                carry.n_eff == n_eff_s, jnp.all(init_err <= carry_gate)
+            ),
+        )
+        wsel = lambda a: jnp.where(warm, a, 0.0)
+        l0, s0, y0 = wsel(cl), wsel(cs), wsel(cy)
+    else:
+        warm = jnp.asarray(False)
+        l0 = s0 = y0 = zeros
 
     if fused_tail:
         from repro.kernels.ops import _interpret_default
@@ -638,8 +765,12 @@ def robust_pca_bucket(
             from repro.kernels import svt_subspace as _sub_kernel
 
         def step_sub(l, s, y, sub, it):
-            p, sub, _fell = svt_subspace_step(
-                rho, sub, cold=(it == 0), sweeps=svt_sweeps,
+            # A warm-started session is never cold at iteration 0: the
+            # carried basis tracks the carried iterates, so the Ritz attempt
+            # runs immediately (the post-guard still protects exactness).
+            p, sub, fell = svt_subspace_step(
+                rho, sub, cold=jnp.logical_and(it == 0, jnp.logical_not(warm)),
+                sweeps=svt_sweeps,
                 fallback_tol=svt_fallback_tol, shrink_fn=shrink_fn,
             )
             if use_sub_kernel:
@@ -653,7 +784,7 @@ def robust_pca_bucket(
                 s2, y2, rnorm = tail(l, y)
                 x2 = m - s2 + rho[:, None, None] * y2
                 g2 = jnp.einsum("bdc,bde->bce", x2, x2)
-            return l, s2, y2, rnorm / m_norm, sub._replace(g=g2)
+            return l, s2, y2, rnorm / m_norm, sub._replace(g=g2), fell
 
     else:
 
@@ -662,19 +793,51 @@ def robust_pca_bucket(
             s, y, rnorm = tail(l, y)
             return l, s, y, rnorm / m_norm
 
-    zeros = jnp.zeros_like(m)
     err0 = jnp.full((b,), jnp.inf, jnp.float32)
+    falls0 = jnp.zeros((), jnp.int32)
+    r = subspace_rank(d2, svt_rank)
 
+    if use_subspace:
+        # Gram of the *initial* iterate X0 = M - S0 + rho Y0 (cold start:
+        # S0 = Y0 = 0 reduces this to subspace_init's Gram of M).  A warm
+        # start seeds the basis/live-rank/rel trackers from the carry so the
+        # first SVT runs the matmul-only Ritz attempt with full sweeps.
+        x0 = m - s0 + rho[:, None, None] * y0
+        g0 = jnp.einsum("bdc,bde->bce", x0, x0)
+        eye = jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (b, d2, r))
+        if carry is not None:
+            if carry.v.shape != (b, d2, r):
+                raise ValueError(
+                    f"carry basis shape {carry.v.shape} != {(b, d2, r)}; "
+                    "was the carry built with a different svt_rank?"
+                )
+            v0 = jnp.where(warm, carry.v, eye)
+            nl0 = jnp.where(warm, carry.n_live, jnp.full((b,), r, jnp.int32))
+            rel0 = jnp.where(
+                warm,
+                jnp.full((b,), 0.5 * svt_fallback_tol, jnp.float32),
+                jnp.full((b,), jnp.inf, jnp.float32),
+            )
+        else:
+            v0 = eye
+            nl0 = jnp.full((b,), r, jnp.int32)
+            rel0 = jnp.full((b,), jnp.inf, jnp.float32)
+        sub0 = SubspaceState(v=v0, g=g0, n_live=nl0, rel=rel0)
+    else:
+        sub0 = None
+
+    sub_f = sub0
+    falls = falls0
     if tol is None:
         if use_subspace:
-            sub0 = subspace_init(m, svt_rank)
 
             def body_sub(it, state):
-                l, s, y, _err, sub = state
-                return step_sub(l, s, y, sub, it)
+                l, s, y, _err, sub, fc = state
+                l2, s2, y2, err2, sub2, fell = step_sub(l, s, y, sub, it)
+                return (l2, s2, y2, err2, sub2, fc + fell.astype(jnp.int32))
 
-            l, s, _, err, _ = jax.lax.fori_loop(
-                0, n_iter, body_sub, (zeros, zeros, zeros, err0, sub0)
+            l, s, y, err, sub_f, falls = jax.lax.fori_loop(
+                0, n_iter, body_sub, (l0, s0, y0, err0, sub0, falls0)
             )
         else:
 
@@ -682,18 +845,17 @@ def robust_pca_bucket(
                 l, s, y, _err = state
                 return step(l, s, y)
 
-            l, s, _, err = jax.lax.fori_loop(0, n_iter, body, (zeros, zeros, zeros, err0))
+            l, s, y, err = jax.lax.fori_loop(0, n_iter, body, (l0, s0, y0, err0))
         n_done = jnp.full((b,), n_iter, jnp.int32)
     elif use_subspace:
-        sub0 = subspace_init(m, svt_rank)
 
         def cond_sub(state):
-            _, _, _, err, i, _, _ = state
+            _, _, _, err, i, _, _, _ = state
             return jnp.logical_and(i < n_iter, jnp.any(err > tol))
 
         def body_sub(state):
-            l, s, y, err, i, niter, sub = state
-            l2, s2, y2, err2, sub2 = step_sub(l, s, y, sub, i)
+            l, s, y, err, i, niter, sub, fc = state
+            l2, s2, y2, err2, sub2, fell = step_sub(l, s, y, sub, i)
             active = err > tol  # matches vmap(while_loop) select semantics
             sel = lambda new, old: jnp.where(active[:, None, None], new, old)
             selv = lambda new, old: jnp.where(active, new, old)
@@ -713,13 +875,16 @@ def robust_pca_bucket(
                 i + 1,
                 jnp.where(active, i + 1, niter),
                 sub_sel,
+                fc + fell.astype(jnp.int32),
             )
 
         init = (
-            zeros, zeros, zeros, err0,
-            jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32), sub0,
+            l0, s0, y0, err0,
+            jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32), sub0, falls0,
         )
-        l, s, _, err, _, n_done, _ = jax.lax.while_loop(cond_sub, body_sub, init)
+        l, s, y, err, _, n_done, sub_f, falls = jax.lax.while_loop(
+            cond_sub, body_sub, init
+        )
     else:
 
         def cond(state):
@@ -740,11 +905,33 @@ def robust_pca_bucket(
                 jnp.where(active, i + 1, niter),
             )
 
-        init = (zeros, zeros, zeros, err0, jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32))
-        l, s, _, err, _, n_done = jax.lax.while_loop(cond, body, init)
+        init = (l0, s0, y0, err0, jnp.asarray(0, jnp.int32), jnp.zeros((b,), jnp.int32))
+        l, s, y, err, _, n_done = jax.lax.while_loop(cond, body, init)
 
     if cmask is not None:
         # S/Y are masked inside the tail; the final L gets one mask pass so
         # eigh round-off cannot leave residue in inactive columns.
         l = l * cmask
-    return RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)
+    result = RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)
+    if not return_carry:
+        return result
+    if use_subspace:
+        v_out, nl_out = sub_f.v, sub_f.n_live
+    elif carry is not None:
+        # Gram mode has no basis to track; keep the slots shape-stable.
+        v_out, nl_out = carry.v, carry.n_live
+    else:
+        v_out = jnp.zeros((b, d2, r), jnp.float32)
+        nl_out = jnp.zeros((b,), jnp.int32)
+    new_carry = BucketCarry(
+        l=l,
+        s=s,
+        y=y,
+        v=v_out,
+        n_live=nl_out,
+        n_eff=n_eff_s,
+        valid=jnp.ones((), bool),
+        fall_count=falls,
+        hit=warm.astype(jnp.float32),
+    )
+    return result, new_carry

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AggregatorConfig, aggregate
-from repro.core.aggregators import WEIGHTINGS, rpca_diag_summary
+from repro.core import engine as engine_lib
+from repro.core.aggregators import CARRY_MODES, WEIGHTINGS, rpca_diag_summary
 from repro.core import stacking
 from repro.fed.client import LocalSpec, make_local_fn
 from repro.utils.pytree import tree_add, tree_zeros_like
@@ -42,6 +43,12 @@ class RoundState(NamedTuple):
     # Plain-int default: no device array (or backend init) at import time;
     # init_round_state sets the concrete int32 counter.
     round_idx: Any = 0
+    # Cross-round aggregation carry (engine AggCarry: per-bucket subspace /
+    # ADMM warm-start state, DESIGN.md §7).  Empty tuple when
+    # carry_mode="none"; make_round_fn's wrapper initializes it from the
+    # session plan before the first jitted call so the carried pytree
+    # structure — and therefore the compiled round — is stable from round 0.
+    agg_carry: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,9 +159,9 @@ def make_sampler(
 
 def make_round_fn(
     base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None,
-    availability=None,
+    availability=None, lora_template: PyTree | None = None,
 ) -> Callable:
-    """Returns jitted fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
+    """Returns fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
 
     ``client_weights`` are per-client data sizes (or any nonnegative
     weights, e.g. ``fed.partition.data_size_weights``); they feed the
@@ -164,11 +171,20 @@ def make_round_fn(
     ``cfg.sampler == "trace"`` (see ``make_sampler``).
 
     With partial participation, ``n_active`` overrides the cohort size at
-    call time (clamped to the canonical padded size): every value shares the
-    single compiled round, only the validity mask changes.  ``None`` uses
-    ``cfg.clients_per_round``.  Masked cohort slots early-exit their local
-    phase (``make_local_fn``'s ``active`` argument) and return exact zero
-    deltas.
+    call time: every in-range value shares the single compiled round, only
+    the validity mask changes.  ``None`` uses ``cfg.clients_per_round``; a
+    concrete out-of-range value raises eagerly at call time (the jitted
+    path keeps a traced clip for tracer arguments).  Masked cohort slots
+    early-exit their local phase (``make_local_fn``'s ``active`` argument)
+    and return exact zero deltas.
+
+    ``cfg.aggregator.carry_mode != "none"`` (packed engine, fedrpca) makes
+    the round a cross-round aggregation session: ``lora_template`` (one
+    client's LoRA structure, e.g. the ``lora_init`` passed to
+    ``init_round_state``) is required to build the trace-time ``AggPlan``,
+    and the per-bucket warm-start carry rides on ``RoundState.agg_carry``
+    through the jitted round — same pytree structure every round, so the
+    carry adds zero extra compiles.
     """
     local_fn = make_local_fn(cfg.local)
     n_clients = data_x.shape[0]
@@ -211,6 +227,33 @@ def make_round_fn(
         else None
     )
 
+    if cfg.aggregator.carry_mode not in CARRY_MODES:
+        raise ValueError(
+            f"unknown carry_mode: {cfg.aggregator.carry_mode!r} "
+            f"(expected one of {CARRY_MODES})"
+        )
+    # Cross-round carry: packed-engine fedrpca only (the reference engine
+    # is the stateless parity oracle and ignores carry_mode).
+    carry_on = (
+        cfg.aggregator.carry_mode != "none"
+        and cfg.engine == "packed"
+        and cfg.aggregator.method == "fedrpca"
+    )
+    plan = None
+    if carry_on:
+        if lora_template is None:
+            raise ValueError(
+                f"carry_mode={cfg.aggregator.carry_mode!r} needs the LoRA "
+                "structure to plan the session: pass lora_template= (e.g. "
+                "the lora_init given to init_round_state)"
+            )
+        slots = cohort_pad if partial else n_clients
+        example = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((slots,) + jnp.shape(x), jnp.asarray(x).dtype),
+            lora_template,
+        )
+        plan = engine_lib.plan_aggregation(example, cfg.aggregator)
+
     @jax.jit
     def run_round(state: RoundState, n_active=None):
         rng, sub, pick, agg_key = jax.random.split(state.rng, 4)
@@ -250,7 +293,14 @@ def make_round_fn(
         stacked_deltas = results.delta  # leaves: (cohort_pad, ...)
         weights = w_all[cohort] if use_weights else None
         agg_kw = dict(engine=cfg.engine, key=agg_key, mask=mask, weights=weights)
-        if cfg.aggregator.method == "fedrpca":
+        new_carry = state.agg_carry
+        if plan is not None:
+            update, new_carry, ediag = engine_lib.aggregate_planned(
+                plan, stacked_deltas, state.agg_carry, key=agg_key, mask=mask,
+                weights=weights, with_diagnostics=True,
+            )
+            rpca_diags = rpca_diag_summary(ediag)
+        elif cfg.aggregator.method == "fedrpca":
             update, ediag = aggregate(
                 stacked_deltas, cfg.aggregator, with_diagnostics=True, **agg_kw
             )
@@ -298,11 +348,37 @@ def make_round_fn(
             prev_local=new_prev,
             rng=rng,
             round_idx=state.round_idx + 1,
+            agg_carry=new_carry,
         )
         diags = {"mean_local_loss": loss_mean, **rpca_diags}
         return new_state, diags
 
-    return run_round
+    def round_fn(state: RoundState, n_active=None):
+        # Eager guard: a concrete out-of-range n_active is a caller bug —
+        # fail loudly instead of silently clipping into the valid range
+        # (tracer arguments keep the traced jnp.clip inside run_round).
+        if isinstance(n_active, (int, np.integer)):
+            na = int(n_active)
+            if not partial:
+                raise ValueError(
+                    f"n_active={na} passed to a full-participation round "
+                    "(set clients_per_round to enable partial participation)"
+                )
+            if not 1 <= na <= cohort_pad:
+                raise ValueError(
+                    f"n_active={na} out of range for the canonical cohort of "
+                    f"{cohort_pad} slots (expected 1 <= n_active <= {cohort_pad})"
+                )
+        if plan is not None and isinstance(state.agg_carry, tuple) and not state.agg_carry:
+            # First call of a carry session: materialize the empty carry so
+            # every round shares one pytree structure (and one compile).
+            state = state._replace(agg_carry=engine_lib.init_agg_carry(plan))
+        return run_round(state, n_active)
+
+    round_fn._cache_size = run_round._cache_size
+    round_fn.cohort_pad = cohort_pad
+    round_fn.agg_plan = plan
+    return round_fn
 
 
 def run_simulation(
@@ -317,17 +393,32 @@ def run_simulation(
     log_fn: Optional[Callable[[int, dict], None]] = None,
     client_weights=None,
     availability=None,
+    n_active: Optional[int] = None,
 ):
-    """Runs ``cfg.rounds`` rounds; returns (final lora, accuracy history)."""
+    """Runs ``cfg.rounds`` rounds; returns (final lora, accuracy history).
+
+    ``n_active`` overrides the per-round cohort size (partial participation
+    only); it is validated eagerly against the canonical cohort here — an
+    out-of-range value is a configuration bug, not something to clip.  With
+    ``cfg.aggregator.carry_mode != "none"`` the rounds form one aggregation
+    session: the warm-start carry rides on the round state, and the carry
+    health diagnostics (``fallback_count``, ``live_rank_mean``,
+    ``carry_hit_rate``) flow to ``log_fn`` beside the accuracy.
+    """
     n_clients = data_x.shape[0]
     state = init_round_state(lora_init, n_clients, cfg.seed)
     round_fn = make_round_fn(
         base, data_x, data_y, cfg, client_weights=client_weights,
-        availability=availability,
+        availability=availability, lora_template=lora_init,
     )
+    if n_active is not None and not 1 <= int(n_active) <= round_fn.cohort_pad:
+        raise ValueError(
+            f"n_active={n_active} out of range for the canonical cohort of "
+            f"{round_fn.cohort_pad} slots"
+        )
     history = []
     for r in range(cfg.rounds):
-        state, diags = round_fn(state)
+        state, diags = round_fn(state) if n_active is None else round_fn(state, n_active)
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
             acc = float(eval_fn(state.lora_global))
             history.append(acc)

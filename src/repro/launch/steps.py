@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import AggregatorConfig, aggregate
+from repro.core import engine as engine_lib
+from repro.core.aggregators import CARRY_MODES, rpca_diag_summary
 from repro.models import model as model_lib
 from repro.utils.pytree import tree_add, tree_scale
 
@@ -58,8 +60,26 @@ def make_fed_train_step(
     in that case) and the aggregation excludes masked clients — the compiled
     program stays shape-static.  ``client_weights`` are per-client data
     sizes, used when ``agg_cfg.weighting == "data_size"``.
+
+    ``agg_cfg.carry_mode != "none"`` (packed engine, fedrpca) turns the
+    step into a cross-round aggregation session: it gains a trailing
+    ``agg_carry`` argument and return value (the engine ``AggCarry``
+    pytree — build the initial one with
+    ``engine.init_agg_carry(engine.plan_aggregation(example, agg_cfg))``
+    over a zeros delta tree, as ``launch/train.py`` does) and its metrics
+    grow the carry health scalars.  With carry off the signature and
+    return arity are unchanged.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
+    if agg_cfg.carry_mode not in CARRY_MODES:
+        raise ValueError(
+            f"unknown carry_mode: {agg_cfg.carry_mode!r} (expected one of {CARRY_MODES})"
+        )
+    carry_on = (
+        agg_cfg.carry_mode != "none"
+        and engine == "packed"
+        and agg_cfg.method == "fedrpca"
+    )
     use_weights = agg_cfg.weighting in ("data_size", "data_size_rpca")
     if use_weights and client_weights is None:
         raise ValueError(
@@ -128,7 +148,7 @@ def make_fed_train_step(
         delta = jax.tree_util.tree_map(lambda a, b: a - b, lora, lora_global)
         return delta, losses[-1]
 
-    def fed_train_step(base, lora_global, batch, agg_key=None):
+    def fed_train_step(base, lora_global, batch, agg_key=None, agg_carry=None):
         extras = {k: batch[k] for k in _EXTRA_KEYS if k in batch}
         m = batch["tokens"].shape[0]
         mask = None
@@ -176,17 +196,27 @@ def make_fed_train_step(
                 mask, batch["tokens"], batch["labels"], *extras.values()
             )
         weights = w_clients if use_weights else None
-        # agg_key varies the stochastic aggregators (dare) across rounds;
-        # None keeps the step a pure (base, lora, batch) function.
-        update = aggregate(
-            deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights
-        )
-        new_lora = tree_add(lora_global, update)
         if mask is None:
             loss = jnp.mean(losses)
         else:
             loss = jnp.sum(mask * losses) / jnp.maximum(jnp.sum(mask), 1.0)
-        return new_lora, {"loss": loss}
+        # agg_key varies the stochastic aggregators (dare) across rounds;
+        # None keeps the step a pure (base, lora, batch) function.
+        if carry_on:
+            # Plan at trace time from the deltas' own structure (static),
+            # thread the cross-round carry, and surface the session health
+            # in the metrics so training logs show carry regressions.
+            plan = engine_lib.plan_aggregation(deltas, agg_cfg)
+            update, new_carry, ediag = engine_lib.aggregate_planned(
+                plan, deltas, agg_carry, key=agg_key, mask=mask,
+                weights=weights, with_diagnostics=True,
+            )
+            metrics = {"loss": loss, **rpca_diag_summary(ediag)}
+            return tree_add(lora_global, update), metrics, new_carry
+        update = aggregate(
+            deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights
+        )
+        return tree_add(lora_global, update), {"loss": loss}
 
     return fed_train_step
 

@@ -22,7 +22,10 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.core import ENGINES, METHODS, SVT_MODES, WEIGHTINGS, AggregatorConfig
+from repro.core import (
+    CARRY_MODES, ENGINES, METHODS, SVT_MODES, WEIGHTINGS, AggregatorConfig,
+)
+from repro.core import engine as engine_lib
 from repro.data import client_lm_datasets
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -78,6 +81,11 @@ def main(argv=None):
                     help="subspace SVT: carried eigenbasis width cap")
     ap.add_argument("--svt-sweeps", type=int, default=2,
                     help="subspace SVT: power sweeps per ADMM iteration")
+    ap.add_argument("--carry-mode", default="none", choices=list(CARRY_MODES),
+                    help="cross-round aggregation session carry: persist "
+                         "per-bucket subspace/ADMM warm-start state so warm "
+                         "rounds skip the RPCA cold start (packed engine, "
+                         "fedrpca; subspace carry needs --svt-mode subspace)")
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -107,6 +115,7 @@ def main(argv=None):
     agg = AggregatorConfig(
         method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting,
         svt_mode=args.svt_mode, svt_rank=args.svt_rank, svt_sweeps=args.svt_sweeps,
+        carry_mode=args.carry_mode,
     )
     # Synthetic client shards all hold n_seqs sequences; real pipelines pass
     # partition sizes here (fed.partition.data_size_weights).
@@ -120,13 +129,35 @@ def main(argv=None):
         )
     )
 
+    # Cross-round aggregation session: the carry pytree is initialized once
+    # from the plan (zeros deltas with the round's client axis) so every
+    # round shares one compiled step, then threads through the jitted step.
+    carry = None
+    carry_on = (
+        args.carry_mode != "none" and args.engine == "packed"
+        and args.aggregator == "fedrpca"
+    )
+    if carry_on:
+        example = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((args.clients,) + x.shape, x.dtype), lora
+        )
+        carry = engine_lib.init_agg_carry(engine_lib.plan_aggregation(example, agg))
+
     log.info("initial eval loss %.4f", evaluate(base, lora, cfg, test.tokens))
     for r in range(args.rounds):
         batch = build_batches(client_tokens, args.per_client_batch, args.seq, rng)
         t0 = time.time()
-        lora, metrics = step(base, lora, batch, jax.random.fold_in(key, 1000 + r))
+        round_key = jax.random.fold_in(key, 1000 + r)
+        if carry_on:
+            lora, metrics, carry = step(base, lora, batch, round_key, carry)
+        else:
+            lora, metrics = step(base, lora, batch, round_key)
         train_loss = float(metrics["loss"])
-        log.info("round %03d  local_loss=%.4f  (%.2fs)", r, train_loss, time.time() - t0)
+        extra = "".join(
+            f"  {k}={float(v):.3g}" for k, v in metrics.items() if k != "loss"
+        )
+        log.info("round %03d  local_loss=%.4f%s  (%.2fs)", r, train_loss, extra,
+                 time.time() - t0)
         if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:
             save_checkpoint(lora, args.ckpt_dir, r + 1, metadata={"arch": cfg.name})
     log.info("final eval loss %.4f", evaluate(base, lora, cfg, test.tokens))

@@ -1,0 +1,425 @@
+"""Stateful cross-round aggregation sessions (DESIGN.md §7): warm-vs-cold
+fixed-point parity, carry invalidation on cohort change, masked-round carry,
+two-tier re-packing, retrace-count regression, and the session diagnostics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregatorConfig,
+    AggSession,
+    aggregate,
+    aggregate_planned,
+    init_agg_carry,
+    migrate_carry,
+    plan_aggregation,
+    plan_retier,
+)
+from repro.core import rpca as rpca_lib
+from repro.fed import FedRunConfig, LocalSpec, init_round_state, make_round_fn, synth
+from repro.optim import make_optimizer
+
+
+def round_sequence(rng, nc, rounds, shapes=None, drift=0.02, rank=2):
+    """Federated-style multi-round deltas: one shared low-rank core that
+    drifts slowly, plus *persistent* per-client sparse spikes (the paper's
+    client-specific knowledge) — strongly correlated across rounds."""
+    shapes = shapes or {"A": (4, 6, 8), "B": (4, 8, 6), "head": (12, 4), "odd": (5, 10)}
+    cores, spikes = {}, {}
+    for k, s in shapes.items():
+        d = int(np.prod(s))
+        cores[k] = (rng.normal(size=(d, rank)), rng.normal(size=(rank, nc)))
+        supp = rng.random((d, nc)) < 0.05
+        spikes[k] = np.where(supp, 5.0 * rng.normal(size=(d, nc)), 0.0)
+    out = []
+    for _t in range(rounds):
+        leaves = {}
+        for k, s in shapes.items():
+            u, w = cores[k]
+            w_t = w + drift * rng.normal(size=w.shape)
+            sp_t = spikes[k] * (1.0 + 0.05 * rng.normal(size=spikes[k].shape))
+            leaves[k] = jnp.asarray((u @ w_t + sp_t).T.reshape(nc, *s), jnp.float32)
+        out.append(
+            {
+                "blocks": {"attn": {"A": leaves["A"], "B": leaves["B"]}},
+                "head": leaves["head"],
+                "odd": leaves["odd"],
+            }
+        )
+    return out
+
+
+def session_cfg(**kw):
+    base = dict(
+        method="fedrpca", rpca_iters=60, rpca_fixed_iters=False, rpca_tol=1e-5,
+        svt_mode="subspace", carry_mode="subspace",
+    )
+    base.update(kw)
+    return AggregatorConfig(**base)
+
+
+def max_tree_err(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+class TestBucketCarry:
+    """robust_pca_bucket-level carry semantics."""
+
+    def _rounds(self, rng, d=64, nc=16, rounds=4):
+        u = rng.normal(size=(d, 2))
+        w = rng.normal(size=(2, nc))
+        supp = rng.random((d, nc)) < 0.05
+        sp = np.where(supp, 5.0 * rng.normal(size=(d, nc)), 0.0)
+        return [
+            jnp.asarray(
+                (u @ (w + 0.02 * t * rng.normal(size=w.shape)) + sp)[None],
+                jnp.float32,
+            )
+            for t in range(rounds)
+        ]
+
+    def test_warm_rounds_hit_and_stop_falling_back(self, rng):
+        ms = self._rounds(rng)
+        carry = rpca_lib.init_bucket_carry(1, 64, 16, 8)
+        stats = []
+        for m in ms:
+            res, carry = rpca_lib.robust_pca_bucket(
+                m, n_iter=100, tol=1e-5, svt_mode="subspace",
+                carry=carry, return_carry=True,
+            )
+            stats.append((int(res.n_iter[0]), int(carry.fall_count), float(carry.hit)))
+        assert stats[0][2] == 0.0  # round 0 is cold
+        for n_it, falls, hit in stats[1:]:
+            assert hit == 1.0
+            assert falls == 0, f"warm round fell back: {stats}"
+            assert n_it < stats[0][0], f"warm round did not converge faster: {stats}"
+
+    def test_warm_matches_cold_fixed_point(self, rng):
+        ms = self._rounds(rng)
+        carry = rpca_lib.init_bucket_carry(1, 64, 16, 8)
+        for m in ms:
+            warm, carry = rpca_lib.robust_pca_bucket(
+                m, n_iter=200, tol=1e-7, svt_mode="subspace",
+                carry=carry, return_carry=True,
+            )
+        cold = rpca_lib.robust_pca_bucket(ms[-1], n_iter=200, tol=1e-7, svt_mode="subspace")
+        np.testing.assert_allclose(warm.low_rank, cold.low_rank, atol=2e-4)
+        np.testing.assert_allclose(warm.sparse, cold.sparse, atol=2e-4)
+
+    def test_invalid_carry_is_bitwise_cold(self, rng):
+        """A gate rejection must select the exact cold-start program."""
+        m = self._rounds(rng, rounds=1)[0]
+        empty = rpca_lib.init_bucket_carry(1, 64, 16, 8)  # valid=False
+        with_c, _ = rpca_lib.robust_pca_bucket(
+            m, n_iter=40, svt_mode="subspace", carry=empty, return_carry=True
+        )
+        without = rpca_lib.robust_pca_bucket(m, n_iter=40, svt_mode="subspace")
+        np.testing.assert_array_equal(
+            np.asarray(with_c.low_rank), np.asarray(without.low_rank)
+        )
+        np.testing.assert_array_equal(np.asarray(with_c.sparse), np.asarray(without.sparse))
+
+    def test_cohort_change_invalidates(self, rng):
+        """n_eff is the cohort fingerprint: a resized cohort cold-starts."""
+        ms = self._rounds(rng, nc=8, rounds=2)
+        mask5 = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+        mask6 = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], jnp.float32)
+        carry = rpca_lib.init_bucket_carry(1, 64, 8, 8)
+        _, carry = rpca_lib.robust_pca_bucket(
+            ms[0], client_mask=mask5, n_iter=50, tol=1e-5, svt_mode="subspace",
+            carry=carry, return_carry=True,
+        )
+        assert float(carry.n_eff) == 5.0
+        res, carry2 = rpca_lib.robust_pca_bucket(
+            ms[1], client_mask=mask6, n_iter=50, tol=1e-5, svt_mode="subspace",
+            carry=carry, return_carry=True,
+        )
+        assert float(carry2.hit) == 0.0  # fingerprint mismatch -> cold
+        cold = rpca_lib.robust_pca_bucket(
+            ms[1], client_mask=mask6, n_iter=50, tol=1e-5, svt_mode="subspace"
+        )
+        np.testing.assert_array_equal(np.asarray(res.low_rank), np.asarray(cold.low_rank))
+
+    def test_masked_carry_keeps_padding_inert(self, rng):
+        """Warm masked rounds: same-size resampled cohorts may warm-start,
+        and inactive columns stay exactly zero through the carried rounds."""
+        ms = self._rounds(rng, nc=8, rounds=3)
+        mask = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
+        carry = rpca_lib.init_bucket_carry(1, 64, 8, 8)
+        for m in ms:
+            res, carry = rpca_lib.robust_pca_bucket(
+                m, client_mask=mask, n_iter=100, tol=1e-5, svt_mode="subspace",
+                carry=carry, return_carry=True,
+            )
+            assert float(jnp.abs(res.low_rank[..., 5:]).max()) == 0.0
+            assert float(jnp.abs(res.sparse[..., 5:]).max()) == 0.0
+        assert float(carry.hit) == 1.0
+        want = rpca_lib.robust_pca_bucket(
+            ms[-1], client_mask=mask, n_iter=100, tol=1e-5, svt_mode="subspace"
+        )
+        np.testing.assert_allclose(res.low_rank, want.low_rank, atol=2e-2)
+
+    def test_full_mode_carries_gram_iterates(self, rng):
+        """carry_mode='full' semantics: warm L/S/Y under gram-mode SVT cut
+        the while-loop trip count without touching the fixed point."""
+        ms = self._rounds(rng)
+        carry = rpca_lib.init_bucket_carry(1, 64, 16, 8)
+        iters = []
+        for m in ms:
+            res, carry = rpca_lib.robust_pca_bucket(
+                m, n_iter=100, tol=1e-5, svt_mode="gram",
+                carry=carry, return_carry=True,
+            )
+            iters.append(int(res.n_iter[0]))
+        assert min(iters[1:]) < iters[0]
+        cold = rpca_lib.robust_pca_bucket(ms[-1], n_iter=100, tol=1e-5, svt_mode="gram")
+        np.testing.assert_allclose(res.low_rank, cold.low_rank, atol=1e-3)
+
+    def test_single_matrix_wrappers_carry(self, rng):
+        """robust_pca / robust_pca_fixed_iters thread a B=1 carry through
+        the bucket loop (gram mode included)."""
+        ms = [m[0] for m in self._rounds(rng, rounds=2)]
+        for mode in ("subspace", "gram"):
+            carry = rpca_lib.init_bucket_carry(1, 64, 16, 8)
+            _, carry = rpca_lib.robust_pca(
+                ms[0], max_iter=60, tol=1e-5, svt_mode=mode,
+                carry=carry, return_carry=True,
+            )
+            res, carry = rpca_lib.robust_pca(
+                ms[1], max_iter=60, tol=1e-5, svt_mode=mode,
+                carry=carry, return_carry=True,
+            )
+            assert res.low_rank.shape == ms[1].shape
+            assert float(carry.hit) == 1.0, mode
+            fres, _ = rpca_lib.robust_pca_fixed_iters(
+                ms[1], n_iter=20, svt_mode=mode,
+                carry=rpca_lib.init_bucket_carry(1, 64, 16, 8), return_carry=True,
+            )
+            assert fres.low_rank.shape == ms[1].shape
+
+    def test_carry_shape_mismatch_rejected(self, rng):
+        m = self._rounds(rng, rounds=1)[0]
+        bad = rpca_lib.init_bucket_carry(1, 32, 16, 8)
+        with pytest.raises(ValueError, match="carry shape"):
+            rpca_lib.robust_pca_bucket(
+                m, svt_mode="subspace", carry=bad, return_carry=True
+            )
+
+
+class TestSessionAPI:
+    def test_warm_vs_cold_fixed_point_parity(self, rng):
+        """Session output on the last of several correlated rounds matches
+        the stateless aggregation of that round within tolerance."""
+        cfg = session_cfg()
+        sess = AggSession(cfg)
+        rounds = round_sequence(rng, 16, 4)
+        for tree in rounds:
+            out, diag = sess.step(tree)
+        stateless = aggregate(rounds[-1], cfg.replace(carry_mode="none"), engine="packed")
+        assert max_tree_err(out, stateless) < 5e-2
+        assert float(diag.scalars["carry_hit_rate"]) == 1.0
+
+    def test_warm_rounds_zero_fallbacks(self, rng):
+        """The acceptance criterion: on planted correlated rounds, rounds
+        >= 2 trigger zero exact-eigh fallbacks under carry_mode=subspace."""
+        sess = AggSession(session_cfg())
+        for i, tree in enumerate(round_sequence(rng, 32, 4)):
+            _, diag = sess.step(tree)
+            if i >= 1:
+                assert int(diag.scalars["fallback_count"]) == 0, f"round {i}"
+                assert float(diag.scalars["carry_hit_rate"]) == 1.0
+
+    def test_carry_mode_none_bitwise_stateless(self, rng):
+        cfg = session_cfg(carry_mode="none")
+        sess = AggSession(cfg)
+        tree = round_sequence(rng, 8, 1)[0]
+        out, diag = sess.step(tree)
+        ref = aggregate(tree, cfg, engine="packed")
+        assert max_tree_err(out, ref) == 0.0
+        assert sess.carry == {}
+        assert "fallback_count" not in diag.scalars
+
+    def test_non_fedrpca_session_bitwise_stateless(self, rng):
+        """Non-fedrpca methods delegate wholesale: one dare drop/rescale
+        (not two — the double-rescale regression), bit-identical output."""
+        tree = round_sequence(rng, 8, 1)[0]
+        key = jax.random.PRNGKey(5)
+        for method in ("dare", "ties", "fedavg"):
+            cfg = AggregatorConfig(method=method, dare_drop=0.5)
+            sess = AggSession(cfg)
+            out, _ = sess.step(tree, key=key)
+            ref = aggregate(tree, cfg, engine="packed", key=key)
+            assert max_tree_err(out, ref) == 0.0, method
+
+    def test_masked_session_parity(self, rng):
+        """Masked rounds carry correctly: the warm masked result equals the
+        stateless masked result within tolerance."""
+        cfg = session_cfg()
+        sess = AggSession(cfg)
+        mask = (jnp.arange(8) < 6).astype(jnp.float32)
+        rounds = round_sequence(rng, 8, 3)
+        for tree in rounds:
+            out, _ = sess.step(tree, mask=mask)
+        want = aggregate(
+            rounds[-1], cfg.replace(carry_mode="none"), engine="packed", mask=mask
+        )
+        assert max_tree_err(out, want) < 5e-2
+
+    def test_retrace_count_zero_extra_compiles(self, rng):
+        """The carry threads through ONE compiled step across rounds."""
+        sess = AggSession(session_cfg())
+        for tree in round_sequence(rng, 8, 4):
+            sess.step(tree)
+        assert sess._step._cache_size() == 1
+
+    def test_structure_change_rejected(self, rng):
+        sess = AggSession(session_cfg())
+        sess.step(round_sequence(rng, 8, 1)[0])
+        with pytest.raises(ValueError, match="plan"):
+            bigger = round_sequence(rng, 16, 1)[0]
+            aggregate_planned(sess.plan, bigger, sess.carry)
+
+    def test_subspace_carry_requires_subspace_svt(self):
+        with pytest.raises(ValueError, match="svt_mode"):
+            plan_aggregation(
+                {"w": jnp.zeros((4, 3, 3))},
+                AggregatorConfig(method="fedrpca", carry_mode="subspace", svt_mode="gram"),
+            )
+
+    def test_unknown_carry_mode_rejected(self, rng):
+        with pytest.raises(ValueError, match="carry_mode"):
+            aggregate(
+                round_sequence(rng, 4, 1)[0],
+                AggregatorConfig(method="fedrpca", carry_mode="warp"),
+            )
+
+
+class TestTwoTierRepack:
+    def test_retier_moves_converged_modules(self, rng):
+        cfg = session_cfg(svt_rank=8)
+        plan = plan_aggregation(round_sequence(rng, 32, 1)[0], cfg)
+        carry = init_agg_carry(plan)
+        tree = round_sequence(rng, 32, 2)[-1]
+        _, carry, _ = aggregate_planned(plan, tree, carry, with_diagnostics=True)
+        new_plan = plan_retier(plan, jax.device_get(carry))
+        # planted rank 2 << cap 8: every bucket's modules converge low
+        assert any(t.low_idx for t in new_plan.tiers.values())
+        for bkey, t in new_plan.tiers.items():
+            n_mod = plan.spec.bucket_dims[bkey][0]
+            assert sorted(t.low_idx + t.full_idx) == list(range(n_mod))
+            if t.low_idx:
+                assert 0 < t.low_cap < rpca_lib.subspace_rank(bkey[1], cfg.svt_rank) + 1
+
+    def test_tiered_step_matches_untiered(self, rng):
+        cfg = session_cfg()
+        rounds = round_sequence(rng, 16, 3)
+        plan = plan_aggregation(rounds[0], cfg)
+        carry = init_agg_carry(plan)
+        _, carry, _ = aggregate_planned(plan, rounds[0], carry, with_diagnostics=True)
+        tiered = plan_retier(plan, jax.device_get(carry))
+        t_carry = migrate_carry(plan, carry, tiered)
+        got, t_carry, diag = aggregate_planned(tiered, rounds[1], t_carry, with_diagnostics=True)
+        want, _, _ = aggregate_planned(plan, rounds[1], carry, with_diagnostics=True)
+        assert max_tree_err(got, want) < 5e-2
+        # diagnostics still cover every module (scattered back per bucket)
+        n_total = sum(d[0] for d in plan.spec.bucket_dims.values())
+        assert diag.flat("beta").shape == (n_total,)
+        assert diag.flat("live_rank").shape == (n_total,)
+        # round 3: the migrated tiered carry warm-starts
+        _, t_carry, diag3 = aggregate_planned(tiered, rounds[2], t_carry, with_diagnostics=True)
+        assert float(diag3.scalars["carry_hit_rate"]) == 1.0
+
+    def test_session_auto_retier(self, rng):
+        cfg = session_cfg(retier_every=2)
+        sess = AggSession(cfg)
+        rounds = round_sequence(rng, 16, 5)
+        for tree in rounds:
+            out, _ = sess.step(tree)
+        assert any(t.low_idx for t in sess.plan.tiers.values())
+        want = aggregate(rounds[-1], cfg.replace(carry_mode="none"), engine="packed")
+        assert max_tree_err(out, want) < 5e-2
+
+
+class TestServerCarryRounds:
+    @pytest.fixture(scope="class")
+    def task(self):
+        return synth.make_synth_task(n_clients=16, n_per_client=24, alpha=0.4, seed=9)
+
+    def _cfg(self, task, **kw):
+        loss = lambda base, lora, batch: synth.loss_fn(base, lora, batch, task.lora_scale)
+        local = LocalSpec(
+            loss_fn=loss, optimizer=make_optimizer("adam", 1e-2),
+            local_steps=2, batch_size=8, lr=1e-2,
+        )
+        agg = AggregatorConfig(
+            method="fedrpca", rpca_iters=6, svt_mode="subspace",
+            carry_mode="subspace",
+        )
+        defaults = dict(aggregator=agg, local=local, rounds=1)
+        defaults.update(kw)
+        return FedRunConfig(**defaults)
+
+    def test_carry_round_single_compile(self, task):
+        """The carry on RoundState adds zero extra compiles across rounds
+        and cohort sizes."""
+        cfg = self._cfg(task, clients_per_round=8)
+        lora0 = synth.init_lora(task)
+        round_fn = make_round_fn(
+            task.base, task.client_x, task.client_y, cfg, lora_template=lora0
+        )
+        state = init_round_state(lora0, 16, 0)
+        for n_active in (5, 7, 8, 8):
+            state, diags = round_fn(state, n_active)
+            assert np.isfinite(float(diags["mean_local_loss"]))
+        assert round_fn._cache_size() == 1
+        assert {"fallback_count", "live_rank_mean", "carry_hit_rate"} <= set(diags)
+
+    def test_carry_state_threads(self, task):
+        """agg_carry on the round state becomes valid after one round."""
+        cfg = self._cfg(task)
+        lora0 = synth.init_lora(task)
+        round_fn = make_round_fn(
+            task.base, task.client_x, task.client_y, cfg, lora_template=lora0
+        )
+        state = init_round_state(lora0, 16, 0)
+        assert state.agg_carry == ()
+        state, _ = round_fn(state)
+        assert isinstance(state.agg_carry, dict) and state.agg_carry
+        assert all(bool(c.valid) for c in state.agg_carry.values())
+
+    def test_missing_template_rejected(self, task):
+        with pytest.raises(ValueError, match="lora_template"):
+            make_round_fn(task.base, task.client_x, task.client_y, self._cfg(task))
+
+    def test_n_active_eager_guard(self, task):
+        cfg = self._cfg(task, clients_per_round=8)
+        lora0 = synth.init_lora(task)
+        round_fn = make_round_fn(
+            task.base, task.client_x, task.client_y, cfg, lora_template=lora0
+        )
+        state = init_round_state(lora0, 16, 0)
+        with pytest.raises(ValueError, match="out of range"):
+            round_fn(state, 9)
+        with pytest.raises(ValueError, match="out of range"):
+            round_fn(state, 0)
+        full = make_round_fn(
+            task.base, task.client_x, task.client_y, self._cfg(task),
+            lora_template=lora0,
+        )
+        with pytest.raises(ValueError, match="full-participation"):
+            full(init_round_state(lora0, 16, 0), 4)
+
+    def test_reference_engine_ignores_carry(self, task):
+        """The reference engine is the stateless parity oracle: carry_mode
+        is inert there (no plan, no template requirement, same diag keys)."""
+        cfg = self._cfg(task, engine="reference")
+        round_fn = make_round_fn(task.base, task.client_x, task.client_y, cfg)
+        state = init_round_state(synth.init_lora(task), 16, 0)
+        state, diags = round_fn(state)
+        assert round_fn.agg_plan is None
+        assert state.agg_carry == ()
+        assert "fallback_count" not in diags
