@@ -22,17 +22,27 @@ observation implies) and reports cold-round vs warm-round wall time plus
 the per-round eigh-fallback counts, against the stateless carry_mode="none"
 baseline (the PR 3 cold-start path).
 
+Pipeline mode (``--rounds N`` rides along) additionally drives the REAL
+federated phases (``fed.make_round_phases`` + ``fed.pipeline.run_rounds``)
+over N rounds on the synthetic FedRPCA task at 8 and 32 clients, timing
+the synchronous schedule (staleness=0) against the async double-buffered
+pipeline (staleness=1) — the wall-clock overlap win of hiding each round's
+client local phase inside the previous round's still-running RPCA split
+(DESIGN.md §8).  The cells use a server-bound regime (the paper's: RPCA
+dominates the round), where the win is the point of the pipeline.
+
 Output contract:
   * CSV rows (stdout): name,us_per_call,derived — derived carries the
     packed speedup vs reference and, for svt_mode=subspace, the speedup vs
     the gram-mode cell.
   * ``BENCH_agg.json`` (path overridable via BENCH_AGG_JSON): machine-
-    readable, schema-versioned: {"schema_version": 2, "records": [...]}
+    readable, schema-versioned: {"schema_version": 3, "records": [...]}
     with single-call records {method, engine, svt_mode, n_modules,
-    n_clients, masked, us_per_call, compile_s} and multi-round records
+    n_clients, masked, us_per_call, compile_s}, multi-round records
     {mode: "multi_round", carry_mode, round_type: cold|warm, rounds,
-    fallbacks, ...} — uploaded as a CI artifact so the perf trajectory is
-    tracked across PRs.
+    fallbacks, ...}, and pipeline records {mode: "pipeline", staleness,
+    n_clients, rounds, us_per_round, speedup_vs_sync} — uploaded as a CI
+    artifact so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -53,8 +63,9 @@ from benchmarks import common  # noqa: E402
 from repro.core import AggregatorConfig, AggSession, aggregate  # noqa: E402
 
 #: BENCH_agg.json schema version: 2 added the top-level envelope and the
-#: multi-round (cross-round carry) records.
-SCHEMA_VERSION = 2
+#: multi-round (cross-round carry) records; 3 added the async round
+#: pipeline records (mode="pipeline": staleness 0 vs 1 wall clock).
+SCHEMA_VERSION = 3
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
@@ -249,6 +260,91 @@ def bench_multi_round(rounds: int, carry_mode: str, n_modules: int = 32,
     )
 
 
+#: Pipeline cells: client counts of the paper's server-bound sweet spot.
+PIPELINE_CLIENTS = (8, 32)
+
+
+def bench_pipeline(rounds: int, n_clients: int, local_steps: int | None = None) -> None:
+    """Synchronous vs async double-buffered federated rounds, end to end.
+
+    Drives the real split phases on the synthetic non-IID task: the local
+    phase is the vmapped per-client adam scan, the aggregation phase the
+    packed fedrpca step.  The regime is balanced (rpca_iters=40 gram SVT,
+    8 local adam steps): the RPCA split and the cohort's local work cost
+    the same order of wall clock, so at staleness=1 each local phase
+    should hide inside the previous round's in-flight aggregation (the
+    ``AggWorker`` thread makes that real on XLA CPU's synchronous
+    dispatch).  Reported ``speedup_vs_sync`` is the whole-run wall-clock
+    ratio at matched round counts; staleness=0 is bitwise the synchronous
+    driver, so its cell doubles as the baseline.
+    """
+    if rounds < 2:
+        raise ValueError(f"pipeline mode needs --rounds >= 2, got {rounds}")
+    if local_steps is None:
+        local_steps = 8
+    from repro.fed import (
+        FedRunConfig, LocalSpec, init_round_state, make_round_phases,
+        run_rounds, synth,
+    )
+    from repro.optim import make_optimizer
+
+    task = synth.make_synth_task(
+        n_clients=n_clients, n_per_client=64, d_in=128, d_feat=128,
+        lora_rank=8, alpha=0.3, seed=0,
+    )
+    local = LocalSpec(
+        loss_fn=lambda base, lora, b: synth.loss_fn(base, lora, b, task.lora_scale),
+        optimizer=make_optimizer("adam", 1e-2),
+        local_steps=local_steps, batch_size=32, lr=1e-2,
+    )
+    cfg = FedRunConfig(
+        aggregator=AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS),
+        local=local, rounds=rounds, seed=0,
+    )
+    phases = make_round_phases(
+        task.base, task.client_x, task.client_y, cfg,
+        lora_template=synth.init_lora(task),
+    )
+    lora0 = synth.init_lora(task)
+
+    def one(staleness: int, n_rounds: int) -> float:
+        state = init_round_state(lora0, n_clients, 0)
+        t0 = time.perf_counter()
+        end = run_rounds(phases, state, n_rounds, staleness=staleness, timers=False)
+        jax.block_until_ready(end.lora_global)
+        return (time.perf_counter() - t0) / n_rounds
+
+    t0 = time.perf_counter()
+    one(0, 2)
+    sync_comp = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    one(1, 2)
+    pipe_comp = time.perf_counter() - t0
+    # Interleaved min-of-N: on shared CPUs the wall-clock noise dwarfs the
+    # effect size; the minimum is the standard noise-robust estimator, and
+    # alternating the modes keeps a slow machine phase from biasing one.
+    sync_trials, pipe_trials = [], []
+    for _ in range(5):
+        sync_trials.append(one(0, rounds))
+        pipe_trials.append(one(1, rounds))
+    sync_s, pipe_s = min(sync_trials), min(pipe_trials)
+    tag = f"c{n_clients}"
+    record(
+        f"fed_round_sync_{tag}", sync_s * 1e6, f"compile={sync_comp:.2f}s",
+        mode="pipeline", staleness=0, n_clients=n_clients, rounds=rounds,
+        local_steps=local_steps, us_per_round=round(sync_s * 1e6, 1),
+        speedup_vs_sync=1.0, compile_s=round(sync_comp, 2),
+    )
+    record(
+        f"fed_round_pipelined_{tag}", pipe_s * 1e6,
+        f"overlap_speedup={sync_s / pipe_s:.2f}x",
+        mode="pipeline", staleness=1, n_clients=n_clients, rounds=rounds,
+        local_steps=local_steps, us_per_round=round(pipe_s * 1e6, 1),
+        speedup_vs_sync=round(sync_s / pipe_s, 3),
+        compile_s=round(pipe_comp, 2),
+    )
+
+
 def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace") -> None:
     quick = common.QUICK if quick is None else quick
     module_counts = (32,) if quick else MODULE_COUNTS
@@ -261,6 +357,9 @@ def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace
         # warm-vs-PR3 comparison at matched settings.
         for mode in dict.fromkeys(("none", carry_mode)):
             bench_multi_round(rounds, mode)
+        # Async round pipeline: sync vs staleness-1 overlap, end to end.
+        for n_clients in PIPELINE_CLIENTS:
+            bench_pipeline(rounds, n_clients)
     out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")
     with open(out_path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION, "records": RECORDS}, f, indent=1)

@@ -27,13 +27,17 @@ METHODS = {
 }
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--alpha", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=1)
-    args = ap.parse_args()
+    ap.add_argument("--rpca-iters", type=int, default=40,
+                    help="ADMM iterations for the fedrpca rows (smoke tests "
+                         "pass a small value)")
+    ap.add_argument("--local-steps", type=int, default=8)
+    args = ap.parse_args(argv)
 
     task = synth.make_synth_task(
         n_clients=args.clients, alpha=args.alpha, seed=args.seed,
@@ -48,10 +52,14 @@ def main():
     print(f"{'method':<12} {'final':>7} {'R@90':>5}  trajectory")
     rows = []
     for name, (agg_kw, local_kw) in METHODS.items():
+        agg_kw = dict(agg_kw)
+        if agg_kw.get("method") == "fedrpca":
+            agg_kw["rpca_iters"] = args.rpca_iters
         local = LocalSpec(
             loss_fn=lambda base, lora, b: synth.loss_fn(base, lora, b, task.lora_scale),
             optimizer=make_optimizer("adam", 1e-2),
-            local_steps=8, batch_size=32, lr=1e-2, feature_fn=feats, **local_kw,
+            local_steps=args.local_steps, batch_size=32, lr=1e-2,
+            feature_fn=feats, **local_kw,
         )
         cfg = FedRunConfig(aggregator=AggregatorConfig(**agg_kw), local=local,
                            rounds=args.rounds, seed=0)

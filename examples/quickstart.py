@@ -18,28 +18,36 @@ from repro.fed import FedRunConfig, LocalSpec, run_simulation, synth  # noqa: E4
 from repro.optim import make_optimizer  # noqa: E402
 
 
-def main():
-    task = synth.make_synth_task(n_clients=16, alpha=0.3, seed=0)
+def main(rounds: int = 20, n_clients: int = 16, rpca_iters: int = 40,
+         local_steps: int = 8):
+    """Run the comparison; the defaults are the 30-second demo scale.
+
+    The keyword arguments exist so the smoke test in
+    ``tests/test_examples.py`` can drive a reduced-scale run of the same
+    code path.
+    """
+    task = synth.make_synth_task(n_clients=n_clients, alpha=0.3, seed=0)
     eval_fn = lambda lora: synth.accuracy(
         task.base, lora, task.test_x, task.test_y, task.lora_scale
     )
     local = LocalSpec(
         loss_fn=lambda base, lora, b: synth.loss_fn(base, lora, b, task.lora_scale),
         optimizer=make_optimizer("adam", 1e-2),
-        local_steps=8,
+        local_steps=local_steps,
         batch_size=32,
         lr=1e-2,
     )
     print(f"zero-shot accuracy: {float(eval_fn(synth.init_lora(task))):.3f}")
     for method in ("fedavg", "fedrpca"):
         cfg = FedRunConfig(
-            aggregator=AggregatorConfig(method=method, rpca_iters=40),
-            local=local, rounds=20, seed=0,
+            aggregator=AggregatorConfig(method=method, rpca_iters=rpca_iters),
+            local=local, rounds=rounds, seed=0,
         )
         _, hist = run_simulation(
             task.base, synth.init_lora(task), task.client_x, task.client_y, cfg, eval_fn
         )
-        print(f"{method:8s} final={hist[-1]:.3f}  trajectory={np.round(hist[::4], 3)}")
+        stride = max(rounds // 5, 1)
+        print(f"{method:8s} final={hist[-1]:.3f}  trajectory={np.round(hist[::stride], 3)}")
 
 
 if __name__ == "__main__":

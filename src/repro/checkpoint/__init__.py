@@ -1,3 +1,15 @@
-from repro.checkpoint.io import load_pytree, restore_checkpoint, save_checkpoint, save_pytree
+from repro.checkpoint.io import (
+    checkpoint_metadata,
+    load_pytree,
+    restore_checkpoint,
+    save_checkpoint,
+    save_pytree,
+)
 
-__all__ = ["load_pytree", "restore_checkpoint", "save_checkpoint", "save_pytree"]
+__all__ = [
+    "checkpoint_metadata",
+    "load_pytree",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "save_pytree",
+]

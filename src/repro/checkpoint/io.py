@@ -98,6 +98,25 @@ def restore_checkpoint(ckpt_dir: str, like: PyTree, step: Optional[int] = None):
     return load_pytree(os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack"), like)
 
 
+def checkpoint_metadata(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Read a checkpoint's metadata without restoring its arrays.
+
+    Lets a resuming driver decide which template to restore into — e.g.
+    whether the checkpoint is a plain LoRA tree or a ``format="session"``
+    bundle that also carries the aggregation session state — before
+    committing to a tree structure.  (msgpack decodes the whole payload;
+    the array leaves stay raw bytes, which is cheap at LoRA scale.)
+    """
+    steps = _list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    chosen = step if step is not None else steps[-1]
+    path = os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return payload.get("metadata", {})
+
+
 def _list_steps(ckpt_dir: str):
     if not os.path.isdir(ckpt_dir):
         return []

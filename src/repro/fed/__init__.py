@@ -8,14 +8,18 @@ from repro.fed.partition import (
 from repro.fed.server import (
     SAMPLERS,
     FedRunConfig,
+    LocalBundle,
+    RoundPhases,
     RoundState,
     init_round_state,
     make_round_fn,
+    make_round_phases,
     make_sampler,
     rounds_to_reach,
     run_simulation,
 )
-from repro.fed import synth
+from repro.fed import pipeline, synth
+from repro.fed.pipeline import AggWorker, InFlightQueue, run_rounds, stale_scale
 
 __all__ = [
     "LocalSpec",
@@ -26,11 +30,19 @@ __all__ = [
     "label_distribution",
     "SAMPLERS",
     "FedRunConfig",
+    "LocalBundle",
+    "RoundPhases",
     "RoundState",
     "init_round_state",
     "make_round_fn",
+    "make_round_phases",
     "make_sampler",
     "rounds_to_reach",
     "run_simulation",
+    "AggWorker",
+    "InFlightQueue",
+    "run_rounds",
+    "stale_scale",
+    "pipeline",
     "synth",
 ]

@@ -1,0 +1,267 @@
+"""Async double-buffered round pipeline (DESIGN.md §8).
+
+The server's RPCA split dominates round wall time, and since PR 4 it is a
+re-entrant session step: the ``AggPlan`` is fixed at trace time and the
+``AggCarry`` threads in/out of every call.  That makes the aggregation
+*independently dispatchable* — round *r*'s local phase does not read round
+*r-1*'s update until it lands — so this module overlaps the two:
+
+    dispatch local_r            (reads the global missing the last s updates)
+    land    agg_{r-s}           (fold the oldest in-flight update + carry)
+    dispatch agg_r              (chained on the just-landed global/carry)
+
+``staleness`` bounds the number of in-flight aggregation dispatches.  With
+``staleness=0`` every update lands before the next local phase is
+dispatched — the synchronous schedule, bit-for-bit (the same compiled
+phases run in the same order with the same ``scale=1.0``).  With
+``staleness=s>0`` the global a local phase reads is at most *s* updates
+behind, and each landed update is damped by the FedAsync-style
+``stale_scale`` to absorb the delayed-gradient bias (LoRA-FAIR-style
+aggregation-side correction).
+
+The round state is double-buffered: the driver's ``state`` buffer advances
+through local phases (RNG, variates, round counter) while the in-flight
+queue holds the other buffer — the pending ``(lora_global, agg_carry)``
+futures each aggregation dispatch will land.  The aggregation dispatches
+run on a dedicated ``AggWorker`` thread: XLA CPU's dispatch executes
+synchronously on the calling thread, so without the worker the "overlap"
+would silently serialize — with it, the client matmuls genuinely hide
+inside the eigh-bound RPCA loop (~1.4-1.7x per-round wall clock on the
+2-core CPU container, ``benchmarks/agg_engine_bench.py`` pipeline cells);
+on asynchronous backends (TPU streams) the worker is a cheap pass-through
+and the devices do the overlap.
+
+``InFlightQueue`` and ``AggWorker`` are the bare scheduling primitives;
+``run_rounds`` is the simulation driver over ``fed.server.RoundPhases``;
+``launch/train.py`` reuses both for the mesh step pair.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+PyTree = Any
+
+
+def stale_scale(staleness: int) -> float:
+    """FedAsync-style polynomial staleness weight: 1 / (1 + tau).
+
+    An update aggregated from deltas computed against a global ``tau``
+    updates old is damped toward the current iterate; ``tau = 0`` returns
+    exactly 1.0, so the synchronous path is bit-for-bit unscaled (IEEE
+    multiplication by 1.0 is exact).
+    """
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    return 1.0 / (1.0 + staleness)
+
+
+class InFlightQueue:
+    """Bounded FIFO of in-flight dispatches — the staleness bound.
+
+    The landing order matters: a new dispatch chains on the state the
+    oldest in-flight entry produces, so the caller pops *before*
+    dispatching (``pop_ready``) and enqueues *after* (``push``).
+    ``depth=0`` degenerates to the synchronous schedule: ``pop_ready`` is
+    always None, ``push`` hands the item straight back to be landed, and
+    nothing ever stays in flight.  ``drain()`` yields the stragglers at end
+    of training.
+    """
+
+    def __init__(self, depth: int):
+        if depth < 0:
+            raise ValueError(f"queue depth must be >= 0, got {depth}")
+        self.depth = depth
+        self._q: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def pop_ready(self):
+        """Oldest entry when the queue sits at its bound (land it before
+        chaining the next dispatch on its outputs), else None."""
+        if self.depth and len(self._q) >= self.depth:
+            return self._q.popleft()
+        return None
+
+    def push(self, item):
+        """Enqueue a fresh dispatch.  Returns the item itself at depth 0
+        (land immediately — the synchronous schedule), else None."""
+        if self.depth == 0:
+            return item
+        if len(self._q) >= self.depth:
+            raise RuntimeError(
+                "InFlightQueue full: pop_ready() and land the oldest entry "
+                "before dispatching a new one"
+            )
+        self._q.append(item)
+        return None
+
+    def drain(self):
+        while self._q:
+            yield self._q.popleft()
+
+
+class AggWorker:
+    """One worker thread that runs the aggregation dispatches in order.
+
+    On backends whose dispatch executes synchronously on the calling
+    thread (XLA CPU — ``jitted_fn(x)`` returns only after the computation
+    ran), issuing the aggregation from the driver thread would serialize
+    it against the next round's local phase no matter how the schedule is
+    arranged.  The worker is what makes the overlap real there: the main
+    thread runs local phases while this thread runs the RPCA split, and
+    the single-worker FIFO preserves the carry chain ordering.  On
+    genuinely asynchronous backends (TPU streams) the worker is a cheap
+    pass-through.  ``submit`` returns a ``concurrent.futures.Future``;
+    worker exceptions surface at ``result()`` (i.e. when the round lands).
+    """
+
+    def __init__(self):
+        self._ex = ThreadPoolExecutor(max_workers=1, thread_name_prefix="agg-phase")
+
+    def submit(self, fn, *args) -> Future:
+        return self._ex.submit(fn, *args)
+
+    def close(self):
+        self._ex.shutdown(wait=True)
+
+
+class _InFlight(NamedTuple):
+    """One dispatched aggregation awaiting landing."""
+
+    round_idx: int
+    loss_mean: Any  # the round's local-loss scalar (future)
+    out: Any  # (lora_global', agg_carry', diags) — or a Future of it
+    t_local: float  # local phase dispatch -> ready, seconds
+    t_dispatch: float  # perf_counter timestamp of the agg dispatch
+
+
+def run_rounds(
+    phases,
+    state,
+    rounds: int,
+    *,
+    staleness: int = 0,
+    n_active: Optional[int] = None,
+    scale: Optional[float] = None,
+    on_round: Optional[Callable[[int, Any, dict], None]] = None,
+    timers: bool = True,
+):
+    """Drive ``rounds`` server rounds over split phases with a staleness bound.
+
+    ``phases`` is a ``fed.server.RoundPhases`` (or anything with the same
+    ``local`` / ``agg`` / ``prep_state`` surface); ``state`` the initial
+    ``RoundState``.  ``staleness=0`` lands every aggregation before the next
+    local phase dispatches — the synchronous schedule, bitwise identical to
+    ``make_round_fn``'s composition.  ``staleness=1`` keeps one aggregation
+    in flight — the double buffer.  Depths beyond 1 are rejected: the agg
+    phase applies its update to the global it was dispatched from, so two
+    aggregations computed from the same base would overwrite rather than
+    compose (a deeper queue needs an update-at-land apply; see the ROADMAP
+    follow-up).
+
+    Each round's landed update is scaled by ``stale_scale(tau)`` where
+    ``tau`` is that round's *actual* staleness — how many updates were in
+    flight when its local phase dispatched.  Round 0 of a pipelined run has
+    ``tau = 0`` (nothing was in flight) and lands undamped.  Passing
+    ``scale`` overrides the per-round damping with a constant.
+
+    ``on_round(r, state, diags)`` fires once per round *in round order*, at
+    the moment round ``r``'s update has landed in ``state.lora_global`` —
+    under the pipeline that is one iteration (per unit of staleness) after
+    its local phase ran, and the final rounds land in the drain.  ``diags``
+    carries the round's aggregation diagnostics plus, when ``timers`` is
+    on, the per-phase wall clocks:
+
+      * ``t_local_s`` — local phase dispatch -> outputs ready;
+      * ``t_agg_s`` — host time *blocked* on the aggregation when landing
+        it (the synchronous path blocks for the full RPCA; a healthy
+        pipeline shows ~0 here);
+      * ``t_overlap_s`` — aggregation in-flight time hidden behind
+        subsequent local work (dispatch-to-ready latency minus the blocked
+        wait; 0 by construction when synchronous);
+      * ``t_round_s`` — ``t_local_s + t_agg_s``, the round's host-visible
+        cost.
+    """
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if staleness > 1:
+        raise ValueError(
+            f"staleness={staleness} is not supported: the aggregation phase "
+            "applies its update to the global it was dispatched from, so "
+            "aggregations deeper than the double buffer (staleness=1) would "
+            "overwrite each other's updates instead of composing them"
+        )
+    queue = InFlightQueue(staleness)
+    # The worker thread is what overlaps the phases on synchronous-dispatch
+    # backends (see AggWorker); the synchronous schedule stays inline on
+    # the driver thread — zero threading, bitwise the composed round.
+    worker = AggWorker() if staleness else None
+
+    def land(entry: _InFlight, state):
+        t0 = time.perf_counter()
+        out = entry.out.result() if isinstance(entry.out, Future) else entry.out
+        new_lora, new_carry, rpca_diags = out
+        if timers:
+            jax.block_until_ready(new_lora)
+        now = time.perf_counter()
+        t_agg = now - t0
+        state = state._replace(lora_global=new_lora, agg_carry=new_carry)
+        if on_round is not None:
+            diags = {"mean_local_loss": entry.loss_mean, **rpca_diags}
+            if timers:
+                diags["t_local_s"] = entry.t_local
+                diags["t_agg_s"] = t_agg
+                diags["t_overlap_s"] = max(0.0, (now - entry.t_dispatch) - t_agg)
+                diags["t_round_s"] = entry.t_local + t_agg
+            on_round(entry.round_idx, state, diags)
+        return state
+
+    def dispatch(state, bundle, round_scale):
+        if worker is None:
+            return phases.agg(state.lora_global, state.agg_carry, bundle, round_scale)
+
+        def work(lora, carry):
+            out = phases.agg(lora, carry, bundle, round_scale)
+            jax.block_until_ready(out[0])  # materialize on the worker
+            return out
+
+        return worker.submit(work, state.lora_global, state.agg_carry)
+
+    state = phases.prep_state(state)
+    try:
+        for r in range(rounds):
+            # This round's actual staleness: how many updates its local
+            # phase's global is missing right now.  Round 0 has tau=0 even
+            # in a pipelined run, so its update lands undamped.
+            tau = len(queue)
+            round_scale = stale_scale(tau) if scale is None else scale
+            t0 = time.perf_counter()
+            # The local phase reads the CURRENT buffer: with aggregations in
+            # flight, its lora_global is up to `staleness` updates behind.
+            state, bundle = phases.local(state, n_active)
+            if timers:
+                jax.block_until_ready(bundle.loss_mean)
+            t_local = time.perf_counter() - t0
+            # Land the oldest in-flight aggregation BEFORE dispatching this
+            # round's: the new dispatch chains on the landed global and carry.
+            oldest = queue.pop_ready()
+            if oldest is not None:
+                state = land(oldest, state)
+            out = dispatch(state, bundle, round_scale)
+            landed = queue.push(
+                _InFlight(r, bundle.loss_mean, out, t_local, time.perf_counter())
+            )
+            if landed is not None:
+                state = land(landed, state)
+        for entry in queue.drain():
+            state = land(entry, state)
+    finally:
+        if worker is not None:
+            worker.close()
+    return state

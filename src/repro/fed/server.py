@@ -1,9 +1,16 @@
 """Server round loop: broadcast -> vmapped local runs -> aggregate -> update.
 
-The per-round computation is a single jitted function: clients execute in
-parallel under ``jax.vmap`` (CPU simulation) — the mesh execution path in
-``repro.launch.train`` replaces the vmap with client-axis sharding, but the
-aggregation code (``repro.core.aggregate``) is byte-identical in both.
+The per-round computation is a pair of independently dispatchable jitted
+phases (``make_round_phases``): a *local phase* — broadcast + vmapped client
+runs, emitting stacked deltas — and an *aggregation phase* — the planned
+aggregation step consuming/producing the cross-round ``AggCarry`` and
+applying the update.  ``make_round_fn`` composes the two back-to-back (the
+synchronous driver, numerically the legacy single-jit round); the async
+double-buffered driver in ``repro.fed.pipeline`` dispatches round *r*'s
+local phase while round *r-1*'s RPCA split is still in flight (DESIGN.md
+§8).  The mesh execution path in ``repro.launch.train`` replaces the vmap
+with client-axis sharding, but the aggregation code (``repro.core``) is
+byte-identical in both.
 
 Partial participation is *shape-static*: instead of gathering the sampled
 cohort to a ``|S|``-sized stack (which re-traces the whole jitted round for
@@ -29,7 +36,7 @@ from repro.core import engine as engine_lib
 from repro.core.aggregators import CARRY_MODES, WEIGHTINGS, rpca_diag_summary
 from repro.core import stacking
 from repro.fed.client import LocalSpec, make_local_fn
-from repro.utils.pytree import tree_add, tree_zeros_like
+from repro.utils.pytree import tree_zeros_like
 
 PyTree = Any
 
@@ -51,6 +58,57 @@ class RoundState(NamedTuple):
     agg_carry: Any = ()
 
 
+class LocalBundle(NamedTuple):
+    """One local phase's hand-off to the aggregation phase.
+
+    ``deltas`` are the stacked per-slot client deltas; ``mask``/``weights``
+    are the cohort validity mask and per-client aggregation weights (None on
+    the dense/unweighted paths — static per round function, so both phases
+    compile one program each); ``agg_key`` is the round's aggregation PRNG
+    key, split from the same stream as the legacy monolithic round so the
+    pipelined and synchronous drivers consume identical randomness;
+    ``loss_mean`` is the masked mean of the clients' final local losses.
+    """
+
+    deltas: PyTree
+    mask: Any
+    weights: Any
+    agg_key: jnp.ndarray
+    loss_mean: jnp.ndarray
+
+
+class RoundPhases:
+    """The split server round: two independently dispatchable jitted phases.
+
+    ``local(state, n_active=None) -> (state', LocalBundle)`` runs the
+    broadcast + vmapped client optimization plus every piece of round
+    bookkeeping that does NOT depend on the aggregation result (SCAFFOLD
+    variate scatter, MOON prev-model scatter, RNG advance, round counter);
+    ``state'`` keeps the *input* ``lora_global`` and ``agg_carry``
+    untouched, so a pipelined driver may dispatch the next local phase
+    before the previous aggregation lands.
+
+    ``agg(lora_global, agg_carry, bundle, scale) -> (lora', carry', diags)``
+    consumes a bundle (possibly one round stale) and applies
+    ``lora + scale * update``.  ``scale=1.0`` reproduces the legacy unscaled
+    apply bit-for-bit (IEEE multiplication by 1.0 is exact); the pipelined
+    driver passes the staleness-corrected ``pipeline.stale_scale``.
+
+    The synchronous driver (``make_round_fn``) composes the two back to
+    back; ``repro.fed.pipeline.run_rounds`` overlaps them.  Both consume
+    the *same* compiled phases, which is what makes the staleness=0
+    pipeline bitwise identical to the synchronous path.
+    """
+
+    def __init__(self, local, agg, *, cohort_pad, plan, prep_state, cache_size):
+        self.local = local
+        self.agg = agg
+        self.cohort_pad = cohort_pad
+        self.plan = plan
+        self.prep_state = prep_state
+        self.cache_size = cache_size
+
+
 @dataclasses.dataclass(frozen=True)
 class FedRunConfig:
     aggregator: AggregatorConfig
@@ -60,6 +118,13 @@ class FedRunConfig:
     clients_per_round: int = 0  # 0 = full participation (the paper's setting)
     engine: str = "packed"  # "packed" (bucketed batched engine) | "reference"
     sampler: str = "uniform"  # client sampler (see SAMPLERS)
+    # Async double-buffered round pipeline (repro.fed.pipeline): overlap each
+    # round's local phase with the previous round's still-running RPCA.
+    # ``pipeline=False`` is the classic synchronous loop; ``staleness`` bounds
+    # the in-flight aggregation dispatches when the pipeline is on (0 = the
+    # synchronous schedule, bit-for-bit — same phases, same order).
+    pipeline: bool = False
+    staleness: int = 1
 
 
 def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
@@ -157,34 +222,18 @@ def make_sampler(
     raise ValueError(f"unknown sampler: {kind!r} (expected one of {SAMPLERS})")
 
 
-def make_round_fn(
+def make_round_phases(
     base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None,
     availability=None, lora_template: PyTree | None = None,
-) -> Callable:
-    """Returns fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
+) -> RoundPhases:
+    """Build the split server round: independently dispatchable phases.
 
-    ``client_weights`` are per-client data sizes (or any nonnegative
-    weights, e.g. ``fed.partition.data_size_weights``); they feed the
-    aggregation when ``cfg.aggregator.weighting`` is "data_size" /
-    "data_size_rpca", and the sampler when ``cfg.sampler ==
-    "size_weighted"``.  ``availability`` is the 0/1 trace for
-    ``cfg.sampler == "trace"`` (see ``make_sampler``).
-
-    With partial participation, ``n_active`` overrides the cohort size at
-    call time: every in-range value shares the single compiled round, only
-    the validity mask changes.  ``None`` uses ``cfg.clients_per_round``; a
-    concrete out-of-range value raises eagerly at call time (the jitted
-    path keeps a traced clip for tracer arguments).  Masked cohort slots
-    early-exit their local phase (``make_local_fn``'s ``active`` argument)
-    and return exact zero deltas.
-
-    ``cfg.aggregator.carry_mode != "none"`` (packed engine, fedrpca) makes
-    the round a cross-round aggregation session: ``lora_template`` (one
-    client's LoRA structure, e.g. the ``lora_init`` passed to
-    ``init_round_state``) is required to build the trace-time ``AggPlan``,
-    and the per-bucket warm-start carry rides on ``RoundState.agg_carry``
-    through the jitted round — same pytree structure every round, so the
-    carry adds zero extra compiles.
+    Same arguments and validation as ``make_round_fn`` (which composes the
+    returned phases into the synchronous round); see its docstring for the
+    weighting / sampler / carry semantics.  The returned ``RoundPhases``
+    carries two jitted functions plus the session plan, the canonical
+    cohort size, the carry-initializing ``prep_state``, and a combined
+    ``cache_size`` retrace counter.
     """
     local_fn = make_local_fn(cfg.local)
     n_clients = data_x.shape[0]
@@ -255,7 +304,7 @@ def make_round_fn(
         plan = engine_lib.plan_aggregation(example, cfg.aggregator)
 
     @jax.jit
-    def run_round(state: RoundState, n_active=None):
+    def local_phase(state: RoundState, n_active=None):
         rng, sub, pick, agg_key = jax.random.split(state.rng, 4)
         if partial:
             # Shape-static partial participation: the sampler fills the
@@ -292,23 +341,6 @@ def make_round_fn(
             )(*local_args)
         stacked_deltas = results.delta  # leaves: (cohort_pad, ...)
         weights = w_all[cohort] if use_weights else None
-        agg_kw = dict(engine=cfg.engine, key=agg_key, mask=mask, weights=weights)
-        new_carry = state.agg_carry
-        if plan is not None:
-            update, new_carry, ediag = engine_lib.aggregate_planned(
-                plan, stacked_deltas, state.agg_carry, key=agg_key, mask=mask,
-                weights=weights, with_diagnostics=True,
-            )
-            rpca_diags = rpca_diag_summary(ediag)
-        elif cfg.aggregator.method == "fedrpca":
-            update, ediag = aggregate(
-                stacked_deltas, cfg.aggregator, with_diagnostics=True, **agg_kw
-            )
-            rpca_diags = rpca_diag_summary(ediag)
-        else:
-            update = aggregate(stacked_deltas, cfg.aggregator, **agg_kw)
-            rpca_diags = {}
-        lora_global = tree_add(state.lora_global, update)
 
         if mask is None:
             n_eff = float(n_clients)
@@ -341,22 +373,54 @@ def make_round_fn(
             new_c = jax.tree_util.tree_map(
                 lambda c, d: c + frac * d, state.scaffold_c, delta_ci
             )
+        # lora_global and agg_carry pass through UNCHANGED: the aggregation
+        # phase owns both, so a pipelined driver can dispatch the next local
+        # phase before the previous aggregation lands.
         new_state = RoundState(
-            lora_global=lora_global,
+            lora_global=state.lora_global,
             scaffold_c=new_c,
             scaffold_ci=new_ci,
             prev_local=new_prev,
             rng=rng,
             round_idx=state.round_idx + 1,
-            agg_carry=new_carry,
+            agg_carry=state.agg_carry,
         )
-        diags = {"mean_local_loss": loss_mean, **rpca_diags}
-        return new_state, diags
+        bundle = LocalBundle(
+            deltas=stacked_deltas, mask=mask, weights=weights,
+            agg_key=agg_key, loss_mean=loss_mean,
+        )
+        return new_state, bundle
 
-    def round_fn(state: RoundState, n_active=None):
+    @jax.jit
+    def agg_phase(lora_global, agg_carry, bundle: LocalBundle, scale):
+        agg_kw = dict(
+            engine=cfg.engine, key=bundle.agg_key, mask=bundle.mask,
+            weights=bundle.weights,
+        )
+        new_carry = agg_carry
+        if plan is not None:
+            update, new_carry, ediag = engine_lib.aggregate_planned(
+                plan, bundle.deltas, agg_carry, key=bundle.agg_key,
+                mask=bundle.mask, weights=bundle.weights, with_diagnostics=True,
+            )
+            rpca_diags = rpca_diag_summary(ediag)
+        elif cfg.aggregator.method == "fedrpca":
+            update, ediag = aggregate(
+                bundle.deltas, cfg.aggregator, with_diagnostics=True, **agg_kw
+            )
+            rpca_diags = rpca_diag_summary(ediag)
+        else:
+            update = aggregate(bundle.deltas, cfg.aggregator, **agg_kw)
+            rpca_diags = {}
+        new_lora = jax.tree_util.tree_map(
+            lambda g, u: g + scale * u, lora_global, update
+        )
+        return new_lora, new_carry, rpca_diags
+
+    def guard_n_active(n_active):
         # Eager guard: a concrete out-of-range n_active is a caller bug —
         # fail loudly instead of silently clipping into the valid range
-        # (tracer arguments keep the traced jnp.clip inside run_round).
+        # (tracer arguments keep the traced jnp.clip inside local_phase).
         if isinstance(n_active, (int, np.integer)):
             na = int(n_active)
             if not partial:
@@ -369,15 +433,78 @@ def make_round_fn(
                     f"n_active={na} out of range for the canonical cohort of "
                     f"{cohort_pad} slots (expected 1 <= n_active <= {cohort_pad})"
                 )
+
+    def prep_state(state: RoundState) -> RoundState:
         if plan is not None and isinstance(state.agg_carry, tuple) and not state.agg_carry:
             # First call of a carry session: materialize the empty carry so
             # every round shares one pytree structure (and one compile).
             state = state._replace(agg_carry=engine_lib.init_agg_carry(plan))
-        return run_round(state, n_active)
+        return state
 
-    round_fn._cache_size = run_round._cache_size
-    round_fn.cohort_pad = cohort_pad
-    round_fn.agg_plan = plan
+    def local(state: RoundState, n_active=None):
+        guard_n_active(n_active)
+        return local_phase(prep_state(state), n_active)
+
+    return RoundPhases(
+        local,
+        agg_phase,
+        cohort_pad=cohort_pad,
+        plan=plan,
+        prep_state=prep_state,
+        cache_size=lambda: max(local_phase._cache_size(), agg_phase._cache_size()),
+    )
+
+
+def make_round_fn(
+    base: PyTree, data_x, data_y, cfg: FedRunConfig, client_weights=None,
+    availability=None, lora_template: PyTree | None = None,
+) -> Callable:
+    """Returns fn: (RoundState, n_active=None) -> (RoundState, diagnostics).
+
+    The synchronous round driver: composes ``make_round_phases``'s local
+    and aggregation phases back to back with ``scale=1.0`` (the async
+    driver in ``repro.fed.pipeline`` overlaps the same phases instead).
+
+    ``client_weights`` are per-client data sizes (or any nonnegative
+    weights, e.g. ``fed.partition.data_size_weights``); they feed the
+    aggregation when ``cfg.aggregator.weighting`` is "data_size" /
+    "data_size_rpca", and the sampler when ``cfg.sampler ==
+    "size_weighted"``.  ``availability`` is the 0/1 trace for
+    ``cfg.sampler == "trace"`` (see ``make_sampler``).
+
+    With partial participation, ``n_active`` overrides the cohort size at
+    call time: every in-range value shares the single compiled round, only
+    the validity mask changes.  ``None`` uses ``cfg.clients_per_round``; a
+    concrete out-of-range value raises eagerly at call time (the jitted
+    path keeps a traced clip for tracer arguments).  Masked cohort slots
+    early-exit their local phase (``make_local_fn``'s ``active`` argument)
+    and return exact zero deltas.
+
+    ``cfg.aggregator.carry_mode != "none"`` (packed engine, fedrpca) makes
+    the round a cross-round aggregation session: ``lora_template`` (one
+    client's LoRA structure, e.g. the ``lora_init`` passed to
+    ``init_round_state``) is required to build the trace-time ``AggPlan``,
+    and the per-bucket warm-start carry rides on ``RoundState.agg_carry``
+    through the jitted round — same pytree structure every round, so the
+    carry adds zero extra compiles.
+    """
+    phases = make_round_phases(
+        base, data_x, data_y, cfg, client_weights=client_weights,
+        availability=availability, lora_template=lora_template,
+    )
+
+    def round_fn(state: RoundState, n_active=None):
+        state, bundle = phases.local(state, n_active)
+        new_lora, new_carry, rpca_diags = phases.agg(
+            state.lora_global, state.agg_carry, bundle, 1.0
+        )
+        state = state._replace(lora_global=new_lora, agg_carry=new_carry)
+        return state, {"mean_local_loss": bundle.loss_mean, **rpca_diags}
+
+    round_fn._cache_size = phases.cache_size
+    round_fn.cohort_pad = phases.cohort_pad
+    round_fn.agg_plan = phases.plan
+    round_fn.phases = phases
     return round_fn
 
 
@@ -404,26 +531,42 @@ def run_simulation(
     session: the warm-start carry rides on the round state, and the carry
     health diagnostics (``fallback_count``, ``live_rank_mean``,
     ``carry_hit_rate``) flow to ``log_fn`` beside the accuracy.
+
+    Every run drives ``pipeline.run_rounds`` over the split phases:
+    ``cfg.pipeline=False`` runs the staleness-0 (synchronous) schedule;
+    ``cfg.pipeline=True`` overlaps each round's local phase with the
+    previous round's in-flight aggregation, bounded by ``cfg.staleness``.
+    Per-round phase timers (``t_local_s`` / ``t_agg_s`` / ``t_overlap_s`` /
+    ``t_round_s``) ride to ``log_fn`` beside the accuracy either way, so
+    the pipeline win is visible straight from the logs.
     """
+    from repro.fed import pipeline as pipeline_lib
+
     n_clients = data_x.shape[0]
     state = init_round_state(lora_init, n_clients, cfg.seed)
-    round_fn = make_round_fn(
+    phases = make_round_phases(
         base, data_x, data_y, cfg, client_weights=client_weights,
         availability=availability, lora_template=lora_init,
     )
-    if n_active is not None and not 1 <= int(n_active) <= round_fn.cohort_pad:
+    if n_active is not None and not 1 <= int(n_active) <= phases.cohort_pad:
         raise ValueError(
             f"n_active={n_active} out of range for the canonical cohort of "
-            f"{round_fn.cohort_pad} slots"
+            f"{phases.cohort_pad} slots"
         )
+    staleness = cfg.staleness if cfg.pipeline else 0
     history = []
-    for r in range(cfg.rounds):
-        state, diags = round_fn(state) if n_active is None else round_fn(state, n_active)
+
+    def on_round(r, round_state, diags):
         if (r + 1) % eval_every == 0 or r == cfg.rounds - 1:
-            acc = float(eval_fn(state.lora_global))
+            acc = float(eval_fn(round_state.lora_global))
             history.append(acc)
             if log_fn:
                 log_fn(r, {"acc": acc, **{k: float(v) for k, v in diags.items()}})
+
+    state = pipeline_lib.run_rounds(
+        phases, state, cfg.rounds, staleness=staleness, n_active=n_active,
+        on_round=on_round,
+    )
     return state.lora_global, np.asarray(history)
 
 

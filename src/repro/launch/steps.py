@@ -6,6 +6,14 @@ by the server aggregation (FedRPCA or a baseline) computed redundantly on
 every device from the all-gathered client deltas — deltas are LoRA-sized
 (r*(d_in+d_out) per module), so the gather is tiny next to the base model.
 
+The step is built from two independently dispatchable halves —
+``make_local_step`` (client local phase, emitting deltas) and
+``make_agg_step`` (server aggregation + apply, threading the cross-round
+``AggCarry``) — which ``make_fed_train_step`` composes into the classic
+monolith for the dry-run/mesh path, and ``launch/train.py`` drives
+separately so the async round pipeline (DESIGN.md §8) can overlap round
+*r*'s local phase with round *r-1*'s still-running RPCA.
+
 ``prefill_step`` / ``serve_step`` are the serving pair: full-sequence prefill
 emitting decode caches, and single-token decode against those caches.
 """
@@ -27,66 +35,30 @@ PyTree = Any
 _EXTRA_KEYS = ("vision_embeds", "encoder_frames", "positions")
 
 
-def make_fed_train_step(
+def make_local_step(
     cfg,
-    agg_cfg: Optional[AggregatorConfig] = None,
     *,
     local_lr: float = 1e-4,
     local_steps: int = 1,
     local_optimizer: str = "sgd",
     remat: bool = True,
     microbatch: int = 1,
-    engine: str = "packed",
     clients_per_round: int = 0,
-    client_weights=None,
 ) -> Callable:
-    """(base, lora_global, batch) -> (new_lora_global, metrics).
+    """Client half of the federated step, independently dispatchable.
 
-    ``batch`` leaves carry a leading client axis: tokens/labels
-    (M, per_client, S); frontend stubs likewise.
+    ``(base, lora_global, batch, agg_key=None) -> (deltas, loss, mask)``:
+    the vmapped per-client local LoRA optimization, the cohort validity
+    mask (None under full participation — sampled from ``agg_key`` when
+    ``clients_per_round`` > 0, with masked slots early-exiting), and the
+    masked mean of the client losses.  It never reads aggregation output,
+    so the async pipeline can dispatch it against a global that is still
+    missing the in-flight round's update.
 
     ``microbatch`` > 1 splits each client's batch into that many slices and
     accumulates LoRA grads over a scan — activation residency drops by the
     same factor (the llama4 §Perf fit fix) at no extra FLOPs.
-
-    ``engine`` selects the server aggregation engine: "packed" lowers one
-    batched call per shape bucket (the production path — the compiled
-    program holds one RPCA loop per bucket instead of one per LoRA leaf);
-    "reference" keeps the per-leaf path for parity runs.
-
-    ``clients_per_round`` > 0 enables mask-based partial participation: the
-    client axis is mesh-sharded, so instead of gathering a sub-cohort the
-    step samples a validity mask over the M slots from ``agg_key`` (required
-    in that case) and the aggregation excludes masked clients — the compiled
-    program stays shape-static.  ``client_weights`` are per-client data
-    sizes, used when ``agg_cfg.weighting == "data_size"``.
-
-    ``agg_cfg.carry_mode != "none"`` (packed engine, fedrpca) turns the
-    step into a cross-round aggregation session: it gains a trailing
-    ``agg_carry`` argument and return value (the engine ``AggCarry``
-    pytree — build the initial one with
-    ``engine.init_agg_carry(engine.plan_aggregation(example, agg_cfg))``
-    over a zeros delta tree, as ``launch/train.py`` does) and its metrics
-    grow the carry health scalars.  With carry off the signature and
-    return arity are unchanged.
     """
-    agg_cfg = agg_cfg or AggregatorConfig()
-    if agg_cfg.carry_mode not in CARRY_MODES:
-        raise ValueError(
-            f"unknown carry_mode: {agg_cfg.carry_mode!r} (expected one of {CARRY_MODES})"
-        )
-    carry_on = (
-        agg_cfg.carry_mode != "none"
-        and engine == "packed"
-        and agg_cfg.method == "fedrpca"
-    )
-    use_weights = agg_cfg.weighting in ("data_size", "data_size_rpca")
-    if use_weights and client_weights is None:
-        raise ValueError(
-            f"weighting={agg_cfg.weighting!r} requires client_weights; "
-            "refusing to silently fall back to uniform"
-        )
-    w_clients = None if client_weights is None else jnp.asarray(client_weights, jnp.float32)
 
     def client_update(base, lora_global, client_batch):
         def full_loss(l, b):
@@ -148,7 +120,7 @@ def make_fed_train_step(
         delta = jax.tree_util.tree_map(lambda a, b: a - b, lora, lora_global)
         return delta, losses[-1]
 
-    def fed_train_step(base, lora_global, batch, agg_key=None, agg_carry=None):
+    def local_step(base, lora_global, batch, agg_key=None):
         extras = {k: batch[k] for k in _EXTRA_KEYS if k in batch}
         m = batch["tokens"].shape[0]
         mask = None
@@ -195,13 +167,65 @@ def make_fed_train_step(
             deltas, losses = jax.vmap(gated_fn)(
                 mask, batch["tokens"], batch["labels"], *extras.values()
             )
-        weights = w_clients if use_weights else None
         if mask is None:
             loss = jnp.mean(losses)
         else:
             loss = jnp.sum(mask * losses) / jnp.maximum(jnp.sum(mask), 1.0)
+        return deltas, loss, mask
+
+    return local_step
+
+
+def make_agg_step(
+    agg_cfg: Optional[AggregatorConfig] = None,
+    *,
+    engine: str = "packed",
+    client_weights=None,
+) -> Callable:
+    """Server half of the federated step, independently dispatchable.
+
+    ``(lora_global, deltas, mask=None, agg_key=None[, agg_carry], scale=1.0)
+    -> (new_lora_global, metrics[, new_carry])``: aggregate the stacked
+    client deltas and apply ``lora + scale * update``.  ``scale=1.0`` is
+    bit-for-bit the legacy unscaled apply; the async pipeline passes the
+    staleness-corrected ``fed.pipeline.stale_scale`` for updates landing
+    one round behind.  ``client_weights`` are per-client data sizes, used
+    when ``agg_cfg.weighting`` is data-size based.
+
+    ``agg_cfg.carry_mode != "none"`` (packed engine, fedrpca) makes the
+    step a cross-round aggregation session: it threads the ``agg_carry``
+    argument/return (build the initial one with
+    ``engine.init_agg_carry(engine.plan_aggregation(example, agg_cfg))``
+    over a zeros delta tree, as ``launch/train.py`` does) and its metrics
+    grow the carry health scalars.  With carry off the return arity drops
+    the carry, matching the legacy contract.
+    """
+    agg_cfg = agg_cfg or AggregatorConfig()
+    if agg_cfg.carry_mode not in CARRY_MODES:
+        raise ValueError(
+            f"unknown carry_mode: {agg_cfg.carry_mode!r} (expected one of {CARRY_MODES})"
+        )
+    carry_on = (
+        agg_cfg.carry_mode != "none"
+        and engine == "packed"
+        and agg_cfg.method == "fedrpca"
+    )
+    use_weights = agg_cfg.weighting in ("data_size", "data_size_rpca")
+    if use_weights and client_weights is None:
+        raise ValueError(
+            f"weighting={agg_cfg.weighting!r} requires client_weights; "
+            "refusing to silently fall back to uniform"
+        )
+    w_clients = None if client_weights is None else jnp.asarray(client_weights, jnp.float32)
+
+    def apply(lora_global, update, scale):
+        return jax.tree_util.tree_map(lambda g, u: g + scale * u, lora_global, update)
+
+    def agg_step(lora_global, deltas, mask=None, agg_key=None, agg_carry=None,
+                 scale=1.0):
+        weights = w_clients if use_weights else None
         # agg_key varies the stochastic aggregators (dare) across rounds;
-        # None keeps the step a pure (base, lora, batch) function.
+        # None keeps the step a pure (lora, deltas) function.
         if carry_on:
             # Plan at trace time from the deltas' own structure (static),
             # thread the cross-round carry, and surface the session health
@@ -211,12 +235,74 @@ def make_fed_train_step(
                 plan, deltas, agg_carry, key=agg_key, mask=mask,
                 weights=weights, with_diagnostics=True,
             )
-            metrics = {"loss": loss, **rpca_diag_summary(ediag)}
-            return tree_add(lora_global, update), metrics, new_carry
+            return apply(lora_global, update, scale), rpca_diag_summary(ediag), new_carry
         update = aggregate(
             deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights
         )
-        return tree_add(lora_global, update), {"loss": loss}
+        return apply(lora_global, update, scale), {}
+
+    agg_step.carry_on = carry_on
+    return agg_step
+
+
+def make_fed_train_step(
+    cfg,
+    agg_cfg: Optional[AggregatorConfig] = None,
+    *,
+    local_lr: float = 1e-4,
+    local_steps: int = 1,
+    local_optimizer: str = "sgd",
+    remat: bool = True,
+    microbatch: int = 1,
+    engine: str = "packed",
+    clients_per_round: int = 0,
+    client_weights=None,
+) -> Callable:
+    """(base, lora_global, batch) -> (new_lora_global, metrics).
+
+    The classic monolithic federated step — ``make_local_step`` composed
+    with ``make_agg_step`` in one traceable function, which the dry-run
+    lowers and the mesh executes.  ``launch/train.py --pipeline`` drives
+    the two halves separately instead so the aggregation can run one round
+    behind (DESIGN.md §8).
+
+    ``batch`` leaves carry a leading client axis: tokens/labels
+    (M, per_client, S); frontend stubs likewise.
+
+    ``engine`` selects the server aggregation engine: "packed" lowers one
+    batched call per shape bucket (the production path — the compiled
+    program holds one RPCA loop per bucket instead of one per LoRA leaf);
+    "reference" keeps the per-leaf path for parity runs.
+
+    ``clients_per_round`` > 0 enables mask-based partial participation: the
+    client axis is mesh-sharded, so instead of gathering a sub-cohort the
+    step samples a validity mask over the M slots from ``agg_key`` (required
+    in that case) and the aggregation excludes masked clients — the compiled
+    program stays shape-static.  ``client_weights`` are per-client data
+    sizes, used when ``agg_cfg.weighting == "data_size"``.
+
+    ``agg_cfg.carry_mode != "none"`` (packed engine, fedrpca) turns the
+    step into a cross-round aggregation session: it gains a trailing
+    ``agg_carry`` argument and return value and its metrics grow the carry
+    health scalars (see ``make_agg_step``).  With carry off the signature
+    and return arity are unchanged.
+    """
+    local_step = make_local_step(
+        cfg, local_lr=local_lr, local_steps=local_steps,
+        local_optimizer=local_optimizer, remat=remat, microbatch=microbatch,
+        clients_per_round=clients_per_round,
+    )
+    agg_step = make_agg_step(agg_cfg, engine=engine, client_weights=client_weights)
+
+    def fed_train_step(base, lora_global, batch, agg_key=None, agg_carry=None):
+        deltas, loss, mask = local_step(base, lora_global, batch, agg_key)
+        if agg_step.carry_on:
+            new_lora, metrics, new_carry = agg_step(
+                lora_global, deltas, mask, agg_key, agg_carry
+            )
+            return new_lora, {"loss": loss, **metrics}, new_carry
+        new_lora, metrics = agg_step(lora_global, deltas, mask, agg_key)
+        return new_lora, {"loss": loss, **metrics}
 
     return fed_train_step
 

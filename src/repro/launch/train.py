@@ -1,37 +1,66 @@
 """Federated LoRA fine-tuning driver.
 
-Executes the same ``fed_train_step`` the dry-run lowers — on this CPU
-container with reduced configs (``--reduced``), on a TPU slice with the
-production mesh (``--mesh single|multi``).  Per round: every client takes
+Executes the same federated step the dry-run lowers — on this CPU container
+with reduced configs (``--reduced``), on a TPU slice with the production
+mesh (``--mesh single|multi``).  Per round: every client takes
 ``--local-steps`` LoRA steps on its own Markov-LM shard, deltas are
 aggregated with ``--aggregator`` (FedRPCA by default), checkpoints are
 written every ``--ckpt-every`` rounds.
 
+The step runs as its two halves (``steps.make_local_step`` +
+``steps.make_agg_step``), each jitted separately, so every round logs
+per-phase wall clocks — and ``--pipeline`` overlaps them: round *r*'s
+local phase dispatches while round *r-1*'s aggregation is still in flight
+(bounded by ``--staleness``; landed updates are damped by the FedAsync
+scale, DESIGN.md §8).  ``--staleness 0`` keeps the synchronous schedule.
+
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --reduced \
-      --rounds 10 --clients 4 --aggregator fedrpca
+      --rounds 10 --clients 4 --aggregator fedrpca --pipeline
 """
 from __future__ import annotations
 
 import argparse
-import time
+import types
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfglib
-from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.checkpoint import checkpoint_metadata, restore_checkpoint, save_checkpoint
 from repro.core import (
     CARRY_MODES, ENGINES, METHODS, SVT_MODES, WEIGHTINGS, AggregatorConfig,
 )
 from repro.core import engine as engine_lib
 from repro.data import client_lm_datasets
+from repro.fed.pipeline import run_rounds
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
 from repro.utils import get_logger
 
 log = get_logger("train")
+
+
+class _CliState(NamedTuple):
+    """The driver's buffer for ``fed.pipeline.run_rounds`` (same surface as
+    the simulation ``RoundState``: the scheduler only touches
+    ``lora_global`` / ``agg_carry`` via ``_replace``)."""
+
+    lora_global: Any
+    agg_carry: Any
+    round_idx: int
+
+
+class _CliBundle(NamedTuple):
+    """Local-phase hand-off of the CLI driver (needs only ``loss_mean`` for
+    the scheduler's timers; the rest feeds the agg step)."""
+
+    deltas: Any
+    mask: Any
+    round_key: Any
+    loss_mean: Any
 
 
 def build_batches(client_tokens: np.ndarray, per_client: int, seq: int, rng: np.random.Generator):
@@ -86,6 +115,14 @@ def main(argv=None):
                          "per-bucket subspace/ADMM warm-start state so warm "
                          "rounds skip the RPCA cold start (packed engine, "
                          "fedrpca; subspace carry needs --svt-mode subspace)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="async double-buffered round pipeline: dispatch each "
+                         "round's local phase while the previous round's "
+                         "aggregation is still in flight (DESIGN.md §8)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="pipeline depth bound: how many aggregation "
+                         "dispatches may stay in flight (0 = synchronous "
+                         "schedule; landed updates are scaled by 1/(1+s))")
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -93,13 +130,36 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args(argv)
 
+    carry_on = (
+        args.carry_mode != "none" and args.engine == "packed"
+        and args.aggregator == "fedrpca"
+    )
+    if args.carry_mode != "none" and not carry_on:
+        # The cross-round carry exists only on the packed fedrpca path; a
+        # silently inert flag would report cold-start numbers as if they
+        # were warm — refuse instead.
+        ap.error(
+            f"--carry-mode {args.carry_mode} has no effect with "
+            f"--engine {args.engine} / --aggregator {args.aggregator}: the "
+            "cross-round aggregation session exists only for --engine packed "
+            "--aggregator fedrpca; drop --carry-mode (or set it to none)"
+        )
+    if args.staleness < 0:
+        ap.error(f"--staleness must be >= 0, got {args.staleness}")
+    if args.pipeline and args.staleness > 1:
+        ap.error(
+            f"--staleness {args.staleness} exceeds the double buffer: the "
+            "aggregation applies its update to the global it was dispatched "
+            "from, so depths beyond 1 would overwrite in-flight updates "
+            "(deeper queues need an update-at-land apply; see ROADMAP)"
+        )
+
     cfg = cfglib.get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     log.info("arch=%s layers=%d d_model=%d vocab=%d", cfg.name, cfg.n_layers, cfg.d_model,
              cfg.vocab_size)
 
-    rng = np.random.default_rng(args.seed)
     client_tokens, test = client_lm_datasets(
         args.clients, vocab_size=min(cfg.vocab_size, 512), n_seqs=32,
         seq_len=args.seq, heterogeneity=args.heterogeneity, seed=args.seed,
@@ -108,58 +168,137 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     base = init_params(key, cfg)
     lora = init_lora_params(jax.random.fold_in(key, 1), cfg)
-    if args.resume and args.ckpt_dir:
-        lora, meta = restore_checkpoint(args.ckpt_dir, lora)
-        log.info("resumed from step %s", meta.get("step"))
 
     agg = AggregatorConfig(
         method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting,
         svt_mode=args.svt_mode, svt_rank=args.svt_rank, svt_sweeps=args.svt_sweeps,
         carry_mode=args.carry_mode,
     )
-    # Synthetic client shards all hold n_seqs sequences; real pipelines pass
-    # partition sizes here (fed.partition.data_size_weights).
-    client_sizes = np.full(args.clients, client_tokens.shape[1], np.float64)
-    step = jax.jit(
-        steps_lib.make_fed_train_step(
-            cfg, agg, local_lr=args.local_lr, local_steps=args.local_steps,
-            local_optimizer=args.local_optimizer, remat=False, engine=args.engine,
-            clients_per_round=args.clients_per_round,
-            client_weights=client_sizes / client_sizes.sum(),
-        )
-    )
-
     # Cross-round aggregation session: the carry pytree is initialized once
     # from the plan (zeros deltas with the round's client axis) so every
     # round shares one compiled step, then threads through the jitted step.
     carry = None
-    carry_on = (
-        args.carry_mode != "none" and args.engine == "packed"
-        and args.aggregator == "fedrpca"
-    )
     if carry_on:
         example = jax.tree_util.tree_map(
             lambda x: jnp.zeros((args.clients,) + x.shape, x.dtype), lora
         )
         carry = engine_lib.init_agg_carry(engine_lib.plan_aggregation(example, agg))
 
-    log.info("initial eval loss %.4f", evaluate(base, lora, cfg, test.tokens))
-    for r in range(args.rounds):
-        batch = build_batches(client_tokens, args.per_client_batch, args.seq, rng)
-        t0 = time.time()
-        round_key = jax.random.fold_in(key, 1000 + r)
-        if carry_on:
-            lora, metrics, carry = step(base, lora, batch, round_key, carry)
+    start_round = 0
+    if args.resume and args.ckpt_dir:
+        meta = checkpoint_metadata(args.ckpt_dir)
+        if meta.get("format") == "session":
+            # Session checkpoint: the aggregation carry (and round counter)
+            # resume alongside the LoRA tree, so a warm session stays warm.
+            if not carry_on:
+                raise ValueError(
+                    f"checkpoint under {args.ckpt_dir} is an aggregation-"
+                    "session checkpoint (it carries AggCarry state), but this "
+                    "run has the carry disabled; rerun with --carry-mode "
+                    f"{meta.get('carry_mode', 'subspace')} (packed fedrpca)"
+                )
+            restored, meta = restore_checkpoint(
+                args.ckpt_dir, {"lora": lora, "agg_carry": carry}
+            )
+            lora, carry = restored["lora"], restored["agg_carry"]
         else:
-            lora, metrics = step(base, lora, batch, round_key)
-        train_loss = float(metrics["loss"])
-        extra = "".join(
-            f"  {k}={float(v):.3g}" for k, v in metrics.items() if k != "loss"
+            if carry_on:
+                log.warning(
+                    "resuming a carry-mode run from a legacy LoRA-only "
+                    "checkpoint: the aggregation session cold-starts"
+                )
+            lora, meta = restore_checkpoint(args.ckpt_dir, lora)
+        start_round = int(meta.get("round", meta.get("step", 0)))
+        log.info("resumed from round %s", start_round)
+
+    # Synthetic client shards all hold n_seqs sequences; real pipelines pass
+    # partition sizes here (fed.partition.data_size_weights).
+    client_sizes = np.full(args.clients, client_tokens.shape[1], np.float64)
+    local_step = jax.jit(
+        steps_lib.make_local_step(
+            cfg, local_lr=args.local_lr, local_steps=args.local_steps,
+            local_optimizer=args.local_optimizer, remat=False,
+            clients_per_round=args.clients_per_round,
         )
-        log.info("round %03d  local_loss=%.4f%s  (%.2fs)", r, train_loss, extra,
-                 time.time() - t0)
-        if args.ckpt_dir and (r + 1) % args.ckpt_every == 0:
-            save_checkpoint(lora, args.ckpt_dir, r + 1, metadata={"arch": cfg.name})
+    )
+    agg_step = jax.jit(
+        steps_lib.make_agg_step(
+            agg, engine=args.engine,
+            client_weights=client_sizes / client_sizes.sum(),
+        )
+    )
+
+    depth = args.staleness if args.pipeline else 0
+
+    # The CLI driver reuses the fed.pipeline scheduler (InFlightQueue +
+    # AggWorker thread + per-tau stale scale live in ONE place) through the
+    # same duck-typed phase surface the simulation uses.  The local phase
+    # builds its round's batch from a per-round generator — seeded by
+    # (seed, round) rather than a shared stream, so a resumed run consumes
+    # exactly the batches an uninterrupted run would have seen.
+    def cli_local(state: _CliState, n_active=None):
+        del n_active
+        r = state.round_idx
+        batch = build_batches(
+            client_tokens, args.per_client_batch, args.seq,
+            np.random.default_rng((args.seed, 1000 + r)),
+        )
+        round_key = jax.random.fold_in(key, 1000 + r)
+        deltas, loss, mask = local_step(base, state.lora_global, batch, round_key)
+        bundle = _CliBundle(deltas=deltas, mask=mask, round_key=round_key,
+                            loss_mean=loss)
+        return state._replace(round_idx=r + 1), bundle
+
+    def cli_agg(lora_global, agg_carry, bundle: _CliBundle, scale):
+        if carry_on:
+            new_lora, metrics, new_carry = agg_step(
+                lora_global, bundle.deltas, bundle.mask, bundle.round_key,
+                agg_carry, scale,
+            )
+            return new_lora, new_carry, metrics
+        new_lora, metrics = agg_step(
+            lora_global, bundle.deltas, bundle.mask, bundle.round_key, scale=scale
+        )
+        return new_lora, agg_carry, metrics
+
+    phases = types.SimpleNamespace(
+        local=cli_local, agg=cli_agg, prep_state=lambda s: s
+    )
+
+    def on_round(r, state: _CliState, diags):
+        rg = start_round + r  # global round index (resume offset)
+        timers = {k: diags.get(k, 0.0) for k in ("t_local_s", "t_agg_s", "t_overlap_s")}
+        extra = "".join(
+            f"  {k}={float(v):.3g}" for k, v in diags.items()
+            if k != "mean_local_loss" and not k.startswith("t_")
+        )
+        log.info(
+            "round %03d  local_loss=%.4f%s  t_local=%.2fs t_agg=%.2fs "
+            "t_overlap=%.2fs", rg, float(diags["mean_local_loss"]), extra,
+            timers["t_local_s"], timers["t_agg_s"], timers["t_overlap_s"],
+        )
+        if args.ckpt_dir and (rg + 1) % args.ckpt_every == 0:
+            if carry_on:
+                save_checkpoint(
+                    {"lora": state.lora_global, "agg_carry": state.agg_carry},
+                    args.ckpt_dir, rg + 1,
+                    metadata={"arch": cfg.name, "round": rg + 1,
+                              "format": "session", "carry_mode": args.carry_mode},
+                )
+            else:
+                save_checkpoint(
+                    state.lora_global, args.ckpt_dir, rg + 1,
+                    metadata={"arch": cfg.name, "round": rg + 1},
+                )
+
+    log.info("initial eval loss %.4f", evaluate(base, lora, cfg, test.tokens))
+    if depth:
+        log.info("pipeline on: staleness bound %d", depth)
+    state = run_rounds(
+        phases, _CliState(lora, carry, start_round),
+        max(args.rounds - start_round, 0), staleness=depth, on_round=on_round,
+    )
+    lora = state.lora_global
     log.info("final eval loss %.4f", evaluate(base, lora, cfg, test.tokens))
 
 
