@@ -36,13 +36,15 @@ Output contract:
     packed speedup vs reference and, for svt_mode=subspace, the speedup vs
     the gram-mode cell.
   * ``BENCH_agg.json`` (path overridable via BENCH_AGG_JSON): machine-
-    readable, schema-versioned: {"schema_version": 3, "records": [...]}
+    readable, schema-versioned: {"schema_version": 4, "records": [...]}
     with single-call records {method, engine, svt_mode, n_modules,
     n_clients, masked, us_per_call, compile_s}, multi-round records
     {mode: "multi_round", carry_mode, round_type: cold|warm, rounds,
-    fallbacks, ...}, and pipeline records {mode: "pipeline", staleness,
-    n_clients, rounds, us_per_round, speedup_vs_sync} — uploaded as a CI
-    artifact so the perf trajectory is tracked across PRs.
+    fallbacks, ...}, pipeline records {mode: "pipeline", staleness,
+    n_clients, rounds, us_per_round, speedup_vs_sync}, and serving records
+    (``--serve``) {mode: "serve", path: gathered|per_request|merged,
+    n_adapters, batch, speedup_vs_per_request, predicted_speedup} — uploaded
+    as a CI artifact so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -64,8 +66,10 @@ from repro.core import AggregatorConfig, AggSession, aggregate  # noqa: E402
 
 #: BENCH_agg.json schema version: 2 added the top-level envelope and the
 #: multi-round (cross-round carry) records; 3 added the async round
-#: pipeline records (mode="pipeline": staleness 0 vs 1 wall clock).
-SCHEMA_VERSION = 3
+#: pipeline records (mode="pipeline": staleness 0 vs 1 wall clock); 4 added
+#: the multi-tenant serving records (mode="serve": gathered-pool vs
+#: per-request-gather vs merged adapter-count x batch throughput cells).
+SCHEMA_VERSION = 4
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
@@ -345,7 +349,89 @@ def bench_pipeline(rounds: int, n_clients: int, local_steps: int | None = None) 
     )
 
 
-def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace") -> None:
+#: Serve cells: adapter-count x request-count grid (quick keeps the
+#: acceptance-critical >=16 x >=16 corner plus one small cell).
+SERVE_ADAPTERS = (4, 16, 64)
+SERVE_BATCHES = (4, 16, 64)
+SERVE_DIMS = dict(d_in=512, d_out=512, rank=16, seq=4)
+
+
+def bench_serve(n_adapters: int, batch: int) -> None:
+    """Multi-tenant LoRA projection: gathered-pool vs per-request vs merged.
+
+    One LoRA-adapted projection (K=N=512, rank 16, 4 tokens/request — the
+    decode-ish regime) with ``batch`` requests spread round-robin over
+    ``n_adapters`` tenants.  ``gathered`` is the pool path
+    (``kernels.gathered_lora_matmul``: sorted/padded segment layout, tile-
+    level adapter gather); ``per_request`` materializes each row's (A, B)
+    from the pool first (the old ``serve.gather_adapters`` behavior);
+    ``merged`` averages the adapters (single-tenant baseline: a lower bound,
+    but it serves every tenant the same adapter).  The costmodel's
+    ``serve_gather_costs`` entry predicts each cell's crossover.
+    """
+    from repro.kernels import ops
+    from repro.launch.costmodel import serve_gather_costs
+
+    k, n, r, seq = (SERVE_DIMS[x] for x in ("d_in", "d_out", "rank", "seq"))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch, seq, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    a_pool = jnp.asarray(rng.normal(size=(n_adapters, k, r)), jnp.float32)
+    b_pool = jnp.asarray(rng.normal(size=(n_adapters, r, n)), jnp.float32)
+    req_slot = jnp.asarray(np.arange(batch) % n_adapters, jnp.int32)
+
+    gathered = jax.jit(
+        lambda x, w, ap, bp, s: ops.gathered_lora_matmul(x, w, ap, bp, s, 1.0, impl="xla")
+    )
+
+    @jax.jit
+    def per_request(x, w, ap, bp, s):
+        row_slot = jnp.repeat(s, seq)
+        x2 = x.reshape(-1, k)
+        ag = jnp.take(ap, row_slot, axis=0)
+        bg = jnp.take(bp, row_slot, axis=0)
+        xa = jnp.einsum("mk,mkr->mr", x2, ag)
+        out = jnp.dot(x2, w, preferred_element_type=jnp.float32)
+        return (out + jnp.einsum("mr,mrn->mn", xa, bg)).reshape(batch, seq, n)
+
+    @jax.jit
+    def merged(x, w, ap, bp):
+        am, bm = jnp.mean(ap, axis=0), jnp.mean(bp, axis=0)
+        x2 = x.reshape(-1, k)
+        out = jnp.dot(x2, w, preferred_element_type=jnp.float32) + (x2 @ am) @ bm
+        return out.reshape(batch, seq, n)
+
+    secs = {}
+    secs["per_request"], comp_pr = time_fn(per_request, x, w, a_pool, b_pool, req_slot,
+                                           repeats=10)
+    secs["gathered"], comp_g = time_fn(gathered, x, w, a_pool, b_pool, req_slot,
+                                       repeats=10)
+    secs["merged"], comp_m = time_fn(merged, x, w, a_pool, b_pool, repeats=10)
+    compile_s = {"per_request": comp_pr, "gathered": comp_g, "merged": comp_m}
+
+    predicted = serve_gather_costs(
+        n_requests=batch, seq_len=seq, n_adapters=n_adapters,
+        d_in=k, d_out=n, rank=r,
+    )["gathered_vs_per_request"]
+    tag = f"a{n_adapters}_b{batch}"
+    for path, s in secs.items():
+        speedup = secs["per_request"] / s
+        extra = (
+            f" speedup_vs_per_request={speedup:.2f}x predicted={predicted:.2f}x"
+            if path == "gathered" else ""
+        )
+        record(
+            f"serve_{path}_{tag}", s * 1e6, extra.strip(),
+            mode="serve", path=path, n_adapters=n_adapters, batch=batch,
+            seq=seq, rank=r,
+            speedup_vs_per_request=round(speedup, 3),
+            predicted_speedup=round(predicted, 3) if path == "gathered" else None,
+            compile_s=round(compile_s[path], 2),
+        )
+
+
+def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace",
+         serve: bool = False) -> None:
     quick = common.QUICK if quick is None else quick
     module_counts = (32,) if quick else MODULE_COUNTS
     client_counts = (8, 32) if quick else CLIENT_COUNTS
@@ -360,6 +446,13 @@ def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace
         # Async round pipeline: sync vs staleness-1 overlap, end to end.
         for n_clients in PIPELINE_CLIENTS:
             bench_pipeline(rounds, n_clients)
+    if serve:
+        cells = (
+            ((16, 4), (16, 16), (16, 64)) if quick
+            else tuple((a, b) for a in SERVE_ADAPTERS for b in SERVE_BATCHES)
+        )
+        for n_adapters, batch in cells:
+            bench_serve(n_adapters, batch)
     out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")
     with open(out_path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION, "records": RECORDS}, f, indent=1)
@@ -385,6 +478,11 @@ if __name__ == "__main__":
         help="carry mode for the multi-round cells (the stateless 'none' "
              "baseline always rides along)",
     )
+    parser.add_argument(
+        "--serve", action="store_true",
+        help="add multi-tenant serving cells: gathered-pool vs per-request "
+             "vs merged across adapter-count x batch",
+    )
     args = parser.parse_args()
     main(quick=True if args.quick else None, rounds=args.rounds,
-         carry_mode=args.carry_mode)
+         carry_mode=args.carry_mode, serve=args.serve)

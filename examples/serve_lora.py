@@ -1,11 +1,17 @@
-"""Serving example: batched multi-tenant LoRA inference (S-LoRA-style).
+"""Serving example: batched multi-tenant LoRA inference from an adapter pool.
 
     PYTHONPATH=src python examples/serve_lora.py
 
 Loads a reduced RecurrentGemma (hybrid RG-LRU + local attention — the
-long-context-friendly family), registers 3 LoRA adapter sets, prefills a
-mixed batch of prompts, and greedily decodes with per-request adapters by
-gathering each request's (A, B) before the LoRA contraction.
+long-context-friendly family), publishes 3 tenant adapters into an
+``AdapterPool``, and serves a mixed batch in ONE co-batched forward pass:
+each request's adapter is gathered leaf-wise from the pool by slot index
+(no per-request tree re-stacking, no vmap over requests).
+
+Then the fed→serve hot-swap: one synthetic aggregation round runs through
+``AggSession``, the update is published into tenant 0's slot, and the SAME
+jitted decode function (zero retraces) immediately serves the new adapter —
+tenant 0's continuation changes, the other tenants' don't.
 """
 import os
 import sys
@@ -18,6 +24,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro import configs as cfglib  # noqa: E402
+from repro.core import AggregatorConfig, AggSession  # noqa: E402
 from repro.models import (  # noqa: E402
     decode_step,
     extend_caches,
@@ -25,61 +32,129 @@ from repro.models import (  # noqa: E402
     init_lora_params,
     init_params,
 )
+from repro.serve import AdapterPool, adapter_view  # noqa: E402
 
 BATCH, PROMPT, GEN, N_ADAPTERS = 4, 12, 8, 3
 
 
-def gather_per_request(stacked_lora, request_adapter: jnp.ndarray):
-    """(n_adapters, ...) adapter stack -> per-request (B, ...) selection."""
-    return jax.tree_util.tree_map(
-        lambda leaf: jnp.take(leaf, request_adapter, axis=0), stacked_lora
-    )
-
-
-def main():
+def main(batch=BATCH, prompt=PROMPT, gen=GEN, n_adapters=N_ADAPTERS):
     cfg = cfglib.get_config("recurrentgemma-2b").reduced()
     key = jax.random.PRNGKey(0)
     base = init_params(key, cfg)
-    adapters = [init_lora_params(jax.random.fold_in(key, i), cfg) for i in range(N_ADAPTERS)]
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *adapters)
 
-    # Each request picks a tenant adapter; average per batch for the shared
-    # forward (tiny adapters => per-request exactness via vmap is also shown).
-    request_adapter = jnp.asarray([0, 1, 2, 0])
-    per_request = gather_per_request(stacked, request_adapter)
+    # Publish each tenant's adapter into the pool (slot-allocated, padded).
+    pool = AdapterPool(init_lora_params(key, cfg), n_slots=n_adapters)
+    tenant_trees = {}
+    for i in range(n_adapters):
+        tree = init_lora_params(jax.random.fold_in(key, i), cfg)
+        # Break the B=0 LoRA init so distinct tenants produce distinct logits.
+        tree = jax.tree_util.tree_map(
+            lambda l: l + 0.05 * jax.random.normal(jax.random.fold_in(key, 99), l.shape, l.dtype),
+            tree,
+        )
+        tenant_trees[i] = tree
+        pool.publish(i, tree)
+    print(f"pool: {len(pool)}/{pool.n_slots} slots resident, "
+          f"writer traces={pool.retrace_count}")
+
+    request_adapter = [i % n_adapters for i in range(batch)]
+    slots = pool.acquire(request_adapter)
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(BATCH, PROMPT)), jnp.int32)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch, prompt)), jnp.int32)
 
-    # vmap over requests: each request uses ITS adapter exactly.
-    def one_request(tokens, lora):
+    # ONE forward per mixed-tenant batch: the pool tree rides in as an
+    # argument and each request's adapter is gathered by slot inside the jit.
+    @jax.jit
+    def prefill(base, pooled, slots, tokens):
+        lora = adapter_view(pooled, slots)
         logits, caches, _ = forward(
-            base, lora, {"tokens": tokens[None]}, cfg, mode="prefill", remat=False
+            base, lora, {"tokens": tokens}, cfg, mode="prefill", remat=False
         )
-        return logits[0], caches
+        return logits, caches
 
-    t0 = time.time()
-    logits, caches = jax.vmap(one_request)(prompts, per_request)
-    caches = extend_caches(caches, GEN, cfg)
-    print(f"prefill {BATCH} prompts x {PROMPT} tokens: {time.time()-t0:.2f}s")
+    @jax.jit
+    def decode(base, pooled, slots, tok, caches, idx):
+        lora = adapter_view(pooled, slots)
+        return decode_step(base, lora, tok, caches, idx, cfg)
 
-    def one_decode(tok, lora, cache, idx):
-        lg, cc = decode_step(base, lora, tok[None], cache, idx, cfg)
-        return lg[0], cc
-
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    outs = [tok]
-    t0 = time.time()
-    for i in range(GEN - 1):
-        logits, caches = jax.vmap(one_decode, in_axes=(0, 0, 0, None))(
-            tok, per_request, caches, jnp.asarray(PROMPT + i)
-        )
+    def generate(caches, logits):
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        outs.append(tok)
-    gen = np.asarray(jnp.concatenate(outs, axis=1))
-    print(f"decoded {GEN} tokens/request in {time.time()-t0:.2f}s")
-    for i in range(BATCH):
-        print(f"request {i} (adapter {int(request_adapter[i])}): {gen[i].tolist()}")
+        outs = [tok]
+        for i in range(gen - 1):
+            logits, caches = decode(
+                base, pool.pooled, slots, tok, caches, jnp.asarray(prompt + i)
+            )
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            outs.append(tok)
+        return np.asarray(jnp.concatenate(outs, axis=1))
+
+    t0 = time.time()
+    logits, caches = prefill(base, pool.pooled, slots, prompts)
+    caches = extend_caches(caches, gen, cfg)
+    print(f"prefill {batch} prompts x {prompt} tokens (co-batched): {time.time()-t0:.2f}s")
+    prefill_caches = caches
+
+    t0 = time.time()
+    gen_tokens = generate(caches, logits)
+    print(f"decoded {gen} tokens/request in {time.time()-t0:.2f}s")
+    for i in range(batch):
+        print(f"request {i} (adapter {request_adapter[i]}): {gen_tokens[i].tolist()}")
+
+    # Sanity: per-tenant outputs differ from the merged-mean baseline.
+    merged = pool.merged()
+    @jax.jit
+    def prefill_merged(base, lora, tokens):
+        logits, caches, _ = forward(
+            base, lora, {"tokens": tokens}, cfg, mode="prefill", remat=False
+        )
+        return logits
+    merged_logits = prefill_merged(base, merged, prompts)
+    diff = float(jnp.max(jnp.abs(merged_logits - logits)))
+    assert diff > 1e-4, "per-tenant outputs should differ from the merged baseline"
+    print(f"merged-baseline check: max |per-tenant - merged| logit gap = {diff:.3f}")
+
+    # ---- fed → serve hot-swap -------------------------------------------
+    # One synthetic aggregation round: client deltas for tenant 0, RPCA
+    # aggregation, publish into the SAME pool slot, decode again without
+    # recompiling anything.
+    n_clients = 4
+    deltas = [
+        jax.tree_util.tree_map(
+            lambda l, k=c: 0.3 * jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(7), k), l.shape, l.dtype
+            ),
+            tenant_trees[0],
+        )
+        for c in range(n_clients)
+    ]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *deltas)
+    session = AggSession(AggregatorConfig(method="fedrpca", rpca_iters=5))
+    update, _ = session.step(stacked)
+
+    retraces_before = pool.retrace_count
+    decode_traces_before = decode._cache_size()
+    new_tree = pool.publish_round(0, tenant_trees[0], update, lr=1.0)
+    tenant_trees[0] = new_tree
+    assert pool.retrace_count == retraces_before, "publish must not retrace the writer"
+
+    gen_after = generate(prefill_caches, logits)
+    assert decode._cache_size() == decode_traces_before, (
+        "hot-swap must not retrace the decode fn"
+    )
+    changed = [i for i in range(batch)
+               if gen_after[i].tolist() != gen_tokens[i].tolist()]
+    print(f"hot-swap: published aggregated round into slot 0 "
+          f"(writer traces={pool.retrace_count}, decode traces={decode._cache_size()})")
+    print(f"requests with changed continuations: {changed} "
+          f"(tenant-0 requests: {[i for i in range(batch) if request_adapter[i] == 0]})")
+    for i in changed:
+        print(f"request {i} now: {gen_after[i].tolist()}")
+    assert changed, "tenant-0 continuations should change after the round lands"
+    assert all(request_adapter[i] == 0 for i in changed), (
+        "only tenant-0 requests should change"
+    )
+    return gen_tokens, gen_after
 
 
 if __name__ == "__main__":

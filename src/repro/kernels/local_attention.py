@@ -12,10 +12,13 @@ Grid: (batch*heads, S/block_q, S/block_k), KV innermost.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import backend
 
 NEG_INF = -1e30
 
@@ -83,7 +86,7 @@ def local_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     bh, s, d = q.shape
     bq, bk = min(block_q, s), min(block_k, s)
@@ -110,7 +113,7 @@ def local_attention(
             _vmem((bq, 1), jnp.float32),
             _vmem((bq, d), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=backend.resolve_interpret(interpret),
     )(qp, kp, vp)
     return out[:, :s]
 

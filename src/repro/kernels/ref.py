@@ -78,6 +78,29 @@ def lora_matmul_ref(
     return x @ w + scale * (x @ a) @ b
 
 
+def gathered_lora_matmul_ref(
+    x: jnp.ndarray,  # (M, K)
+    w: jnp.ndarray,  # (K, N)
+    a_pool: jnp.ndarray,  # (n_slots, K, R)
+    b_pool: jnp.ndarray,  # (n_slots, R, N)
+    row_slot: jnp.ndarray,  # (M,) int32; -1 = no adapter (base only)
+    scale: float = 1.0,
+) -> jnp.ndarray:
+    """Grouped-by-adapter oracle: every slot's full-batch LoRA product,
+    masked to the rows that own it.  O(n_slots) dense matmuls — slow, but
+    independent of the segment layout, and bitwise-comparable in fp32
+    because XLA's matmul rows are tiling-stable."""
+    m = x.shape[0]
+    n = w.shape[1]
+    lora = jnp.zeros((m, n), jnp.float32)
+    for s in range(a_pool.shape[0]):
+        sel = (row_slot == s)[:, None]
+        term = (x @ a_pool[s]) @ b_pool[s]
+        lora = lora + jnp.where(sel, term.astype(jnp.float32), 0.0)
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return (base + scale * lora).astype(x.dtype)
+
+
 def local_attention_ref(
     q: jnp.ndarray,  # (BH, S, D)
     k: jnp.ndarray,

@@ -90,9 +90,9 @@ def admm_tail(
       ``sum((M - L - S)^2)`` per module (active columns only when masked).
     """
     if interpret is None:
-        from repro.kernels.ops import _interpret_default
+        from repro.kernels import backend
 
-        interpret = _interpret_default()
+        interpret = backend.interpret_default()
     if m.ndim != 3:
         raise ValueError(f"expected (B, vec, clients) input, got {m.shape}")
     if m.shape != l.shape or m.shape != y.shape:

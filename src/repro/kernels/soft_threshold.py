@@ -9,10 +9,13 @@ SMEM as a (1, 1) scalar block.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import backend
 
 DEFAULT_BLOCK = (256, 256)
 
@@ -29,7 +32,7 @@ def soft_threshold(
     t,
     *,
     block: tuple = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """sign(x) * max(|x| - t, 0) over a 2-D array (pad-safe for any shape)."""
     if x.ndim != 2:
@@ -49,6 +52,6 @@ def soft_threshold(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(xp.shape, xp.dtype),
-        interpret=interpret,
+        interpret=backend.resolve_interpret(interpret),
     )(t_arr, xp)
     return out[:m, :n]

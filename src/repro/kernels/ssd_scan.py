@@ -12,10 +12,13 @@ glue): x (BH,S,P), da (BH,S) log-decays, b/c (BH,S,N).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import backend
 
 
 def _kernel(x_ref, da_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int):
@@ -58,7 +61,7 @@ def ssd_scan(
     c: jnp.ndarray,  # (BH, S, N)
     *,
     chunk: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     bh, s, p = x.shape
     n = b.shape[-1]
@@ -84,7 +87,7 @@ def ssd_scan(
         out_specs=pl.BlockSpec((1, q, p), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[_vmem((n, p), jnp.float32)],
-        interpret=interpret,
+        interpret=backend.resolve_interpret(interpret),
     )(x, da, b, c)
     return out[:, :s]
 

@@ -116,9 +116,9 @@ def subspace_apply(
       ``M - S' + rho Y'`` (what ``SubspaceState.g`` carries forward).
     """
     if interpret is None:
-        from repro.kernels.ops import _interpret_default
+        from repro.kernels import backend
 
-        interpret = _interpret_default()
+        interpret = backend.interpret_default()
     if m.ndim != 3:
         raise ValueError(f"expected (B, vec, clients) input, got {m.shape}")
     if m.shape != s.shape or m.shape != y.shape:

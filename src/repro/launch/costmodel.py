@@ -317,6 +317,98 @@ def step_costs(
     return CostBreakdown(flops=fl, hbm_bytes=hbm, collective_bytes=coll)
 
 
+def serve_gather_costs(
+    *,
+    n_requests: int,
+    seq_len: int,
+    n_adapters: int,
+    d_in: int,
+    d_out: int,
+    rank: int,
+    block_m: int = 16,
+    dtype_bytes: int = 4,
+) -> Dict[str, float]:
+    """Analytic cost of one multi-tenant LoRA projection, per serving path.
+
+    Models the three serve-bench paths (benchmarks ``mode:"serve"`` cells):
+
+      per_request — materialize each row's (A, B) from the pool:
+        gather bytes M * (K*R + R*N), LoRA compute as M rank-R GEMVs.
+      gathered — sorted/padded segment layout (``kernels.segment_layout``):
+        adapters gathered once per block_m row-tile, LoRA compute as
+        real-GEMM tiles over the padded row count
+        M_pad = M + n_seg * (block_m - 1) worst case, where
+        n_seg = min(n_adapters, n_requests) distinct adapters can appear.
+      merged — one averaged adapter: no gather, no padding (the baseline
+        that serves every tenant the same adapter).
+
+    The returned ``gathered_vs_per_request`` ratio (>1 = gathered wins)
+    weighs the factor-block_m gather-traffic saving against the padding
+    compute waste; the crossover it predicts — gathered wins once rows per
+    distinct adapter exceed ~block_m, i.e. batch >= adapters at seq 4 —
+    matches the measured CPU cells (win at >=16 adapters x batch >= 16).
+    """
+    m_rows = n_requests * seq_len
+    adapter_bytes = (d_in * rank + rank * d_out) * dtype_bytes
+    lora_flops_per_row = 2.0 * rank * (d_in + d_out)
+
+    n_seg = min(n_adapters, n_requests)
+    n_tiles = (m_rows + n_seg * (block_m - 1) + block_m - 1) // block_m
+    m_pad = n_tiles * block_m
+
+    # CPU-calibrated roofline constants (bytes/us, flops/us, us).  The
+    # per-request gather streams a strided (M, K, R) materialization
+    # (BW_STRIDED); the gathered path streams contiguous tiles and the
+    # sort/scatter/unsort layout passes (BW_STREAM ~3x faster), pays GEMM
+    # compute over the padded rows, and a fixed extra-dispatch overhead for
+    # the layout op chain.  Fit against the measured mode:"serve" cells at
+    # K=N=512, R=16, seq 4 (8/9 cells' win/lose direction reproduced; the
+    # ninth sits on the crossover).
+    bw_strided, bw_stream, flops_peak = 1.0e4, 3.0e4, 5.0e4
+    overhead_per_req, overhead_gathered = 50.0, 250.0
+
+    per_request = {
+        "gather_bytes": float(m_rows) * adapter_bytes,
+        "lora_flops": m_rows * lora_flops_per_row,
+    }
+    layout_bytes = 4.0 * m_rows * (d_in + d_out) * dtype_bytes
+    gathered = {
+        "gather_bytes": float(n_tiles) * adapter_bytes + layout_bytes,
+        "lora_flops": m_pad * lora_flops_per_row,
+    }
+    merged = {"gather_bytes": 0.0, "lora_flops": m_rows * lora_flops_per_row}
+
+    def us(path, bw, overhead):
+        return max(path["gather_bytes"] / bw, path["lora_flops"] / flops_peak) + overhead
+
+    per_request["us"] = us(per_request, bw_strided, overhead_per_req)
+    gathered["us"] = us(gathered, bw_stream, overhead_gathered)
+    merged["us"] = us(merged, bw_stream, 0.0)
+    return {
+        "per_request": per_request,
+        "gathered": gathered,
+        "merged": merged,
+        "m_pad": float(m_pad),
+        "gathered_vs_per_request": per_request["us"] / gathered["us"],
+        "gathered_wins": per_request["us"] > gathered["us"],
+    }
+
+
+def serve_crossover_batch(
+    *, n_adapters: int, seq_len: int = 4, d_in: int = 512, d_out: int = 512,
+    rank: int = 16, block_m: int = 16, max_batch: int = 1024,
+) -> int | None:
+    """Smallest request count where the gathered-pool path is predicted to
+    beat per-request materialization (None if it never does by max_batch)."""
+    for b in range(1, max_batch + 1):
+        if serve_gather_costs(
+            n_requests=b, seq_len=seq_len, n_adapters=n_adapters,
+            d_in=d_in, d_out=d_out, rank=rank, block_m=block_m,
+        )["gathered_wins"]:
+            return b
+    return None
+
+
 def _params_local_bytes(
     cfg: ModelConfig, m: int, dtype_bytes: int, *, policy: str = "tp", fsdp_size: int = 1
 ) -> float:

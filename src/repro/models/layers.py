@@ -69,6 +69,11 @@ def dense(x: jnp.ndarray, params, lora=None, lora_scale: float = 1.0) -> jnp.nda
     ``A B``) — rank is tiny so this adds 2*r*(d_in+d_out) FLOPs per token.
     On TPU the fused ``repro.kernels.lora_matmul`` kernel implements the same
     contraction in one VMEM pass.
+
+    Batched adapters (multi-tenant serving): when the LoRA leaves carry a
+    leading batch axis — ``A: (B, d_in, r)``, ``B: (B, r, d_out)`` against
+    ``x: (B, S, d_in)`` — each batch row applies its own adapter (the
+    per-request view of an ``repro.serve.AdapterPool``).
     """
     w = params["w"]
     y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
@@ -77,7 +82,13 @@ def dense(x: jnp.ndarray, params, lora=None, lora_scale: float = 1.0) -> jnp.nda
     if lora is not None:
         a = lora["A"].astype(x.dtype)
         b = lora["B"].astype(x.dtype)
-        y = y + lora_scale * jnp.einsum("...r,ro->...o", jnp.einsum("...i,ir->...r", x, a), b)
+        if a.ndim == 3:
+            xa = jnp.einsum("b...i,bir->b...r", x, a)
+            y = y + lora_scale * jnp.einsum("b...r,bro->b...o", xa, b)
+        else:
+            y = y + lora_scale * jnp.einsum(
+                "...r,ro->...o", jnp.einsum("...i,ir->...r", x, a), b
+            )
     return y
 
 

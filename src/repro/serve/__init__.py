@@ -1,0 +1,10 @@
+"""Multi-tenant LoRA serving: paged adapter pool + request scheduling.
+
+``AdapterPool`` holds every resident adapter in padded device pools (one
+leading slot axis per LoRA leaf) and hot-swaps freshly aggregated rounds in
+place without retracing the jitted prefill/decode functions.  See
+DESIGN.md §9 for the slot map, rank tiers, and the donation contract.
+"""
+from repro.serve.pool import AdapterPool, adapter_view, merged_view
+
+__all__ = ["AdapterPool", "adapter_view", "merged_view"]

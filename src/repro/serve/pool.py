@@ -1,0 +1,229 @@
+"""Paged adapter pool: slot-allocated LoRA trees with zero-retrace hot-swap.
+
+The pool is the serving-side half of the fed→serve bridge.  Every LoRA leaf
+of the model's adapter tree gains a leading ``n_slots`` axis (the same
+padded-pool representation the aggregation engine's PackSpec buckets use),
+so a mixed-tenant batch is served by gathering per-request slot indices —
+either leaf-wise (``adapter_view`` + the batched branch of
+``layers.dense``) or inside the gathered Pallas kernel
+(``kernels.gathered_lora_matmul``), never by re-stacking adapter trees.
+
+Hot-swap contract (the part jitted serving loops depend on):
+
+  * ``publish`` writes one slot via ``pooled.at[slot].set(tree)`` inside a
+    single jitted updater whose pooled operand is **donated** — on TPU the
+    write happens in place, and because the slot index is a traced scalar
+    the updater compiles exactly once no matter how many rounds are
+    published (``retrace_count`` pins this in tests).
+  * The pooled tree is passed *into* the serving jits as an argument (never
+    closed over), so a publish between decode steps swaps buffers without
+    invalidating any compiled function.
+
+Heterogeneous ranks (ILoRA-style tiers): a published tree whose leaves are
+narrower than the pool template is zero-padded up to the template shape —
+zero A/B columns multiply away exactly, so a rank-4 adapter served from a
+rank-16 pool is bit-identical to serving it unpadded.
+
+Admission/eviction is LRU by default (``policy="traffic"`` evicts the
+lowest-traffic slot instead); both keys are updated by ``acquire`` — the
+scheduler's per-batch slot lookup — so residency tracks live request flow.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import get_logger
+
+log = get_logger("serve.pool")
+
+tree_map = jax.tree_util.tree_map
+
+
+def adapter_view(pooled, slots: jnp.ndarray):
+    """Per-request adapter tree for ``model.forward``.
+
+    ``pooled`` is the pool's lora tree (leaves ``(n_slots, ...)``); ``slots``
+    is ``(B,)`` int32.  Group leaves come back as ``(n_groups, B, ...)`` —
+    the layer-stack scan axis stays leading, the request axis lines up with
+    the batched branch of ``layers.dense`` — and tail leaves as ``(B, ...)``.
+
+    Pure function of its arguments: call it *inside* jitted prefill/decode
+    so the gather fuses and a publish never forces a retrace.
+    """
+    return {
+        "groups": tree_map(
+            lambda leaf: jnp.moveaxis(jnp.take(leaf, slots, axis=0), 0, 1),
+            pooled["groups"],
+        ),
+        "tail": tree_map(
+            lambda leaf: jnp.take(leaf, slots, axis=0), pooled["tail"]
+        ),
+    }
+
+
+def merged_view(pooled, occupancy: jnp.ndarray):
+    """Occupancy-weighted mean adapter (the legacy single-tenant fallback)."""
+    denom = jnp.maximum(jnp.sum(occupancy), 1.0)
+
+    def mean(leaf):
+        w = occupancy.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(leaf * w, axis=0) / denom.astype(leaf.dtype)
+
+    return tree_map(mean, pooled)
+
+
+def _pad_to(leaf: jnp.ndarray, target_shape) -> jnp.ndarray:
+    if tuple(leaf.shape) == tuple(target_shape):
+        return leaf
+    pads = []
+    for have, want in zip(leaf.shape, target_shape):
+        if have > want:
+            raise ValueError(
+                f"adapter leaf {leaf.shape} exceeds pool template {tuple(target_shape)}"
+            )
+        pads.append((0, want - have))
+    return jnp.pad(leaf, pads)
+
+
+class AdapterPool:
+    """Fixed-capacity device pool of LoRA adapter trees.
+
+    Args:
+      template: a lora tree (e.g. ``init_lora_params(key, cfg)``) whose leaf
+        shapes/dtypes define one slot.  Pool leaves are
+        ``(n_slots, *leaf.shape)``, zero-initialised (an empty slot is an
+        exact no-op adapter).
+      n_slots: pool capacity.
+      policy: ``"lru"`` (default) or ``"traffic"`` eviction keying.
+    """
+
+    def __init__(self, template, n_slots: int, *, policy: str = "lru"):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if policy not in ("lru", "traffic"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
+        self.n_slots = n_slots
+        self.policy = policy
+        self._template_shapes = tree_map(lambda l: tuple(l.shape), template)
+        self.pooled = tree_map(
+            lambda l: jnp.zeros((n_slots,) + l.shape, l.dtype), template
+        )
+        self._slot_of: Dict[object, int] = {}
+        self._id_of: List[Optional[object]] = [None] * n_slots
+        self._last_used = [0] * n_slots
+        self._traffic = [0] * n_slots
+        self._tick = 0
+        self.publishes = 0
+        self.evictions = 0
+
+        @jax.jit
+        def _write(pooled, tree, slot):
+            return tree_map(lambda p, t: p.at[slot].set(t.astype(p.dtype)), pooled, tree)
+
+        # Donating the pooled operand makes the slot write in-place on
+        # TPU; the traced slot index keeps this a single compilation.
+        self._writer = jax.jit(
+            lambda pooled, tree, slot: _write(pooled, tree, slot), donate_argnums=0
+        )
+
+    # -- bookkeeping ---------------------------------------------------
+
+    def __contains__(self, adapter_id) -> bool:
+        return adapter_id in self._slot_of
+
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def retrace_count(self) -> int:
+        """Number of compilations of the slot writer (pin == 1 in tests)."""
+        return self._writer._cache_size()
+
+    def slot_map(self) -> Dict[object, int]:
+        return dict(self._slot_of)
+
+    def occupancy(self) -> jnp.ndarray:
+        return jnp.asarray(
+            [1.0 if i is not None else 0.0 for i in self._id_of], jnp.float32
+        )
+
+    def _touch(self, slot: int, traffic: int = 0):
+        self._tick += 1
+        self._last_used[slot] = self._tick
+        self._traffic[slot] += traffic
+
+    def _evict_candidate(self) -> int:
+        key = self._last_used if self.policy == "lru" else self._traffic
+        occupied = [s for s in range(self.n_slots) if self._id_of[s] is not None]
+        return min(occupied, key=lambda s: (key[s], s))
+
+    def _alloc(self, adapter_id) -> int:
+        if adapter_id in self._slot_of:
+            return self._slot_of[adapter_id]
+        for slot in range(self.n_slots):
+            if self._id_of[slot] is None:
+                break
+        else:
+            slot = self._evict_candidate()
+            evicted = self._id_of[slot]
+            del self._slot_of[evicted]
+            self.evictions += 1
+            log.info("pool full: evicting adapter %r from slot %d (%s)",
+                     evicted, slot, self.policy)
+        self._slot_of[adapter_id] = slot
+        self._id_of[slot] = adapter_id
+        self._traffic[slot] = 0
+        return slot
+
+    # -- data path -----------------------------------------------------
+
+    def publish(self, adapter_id, lora_tree) -> int:
+        """Admit/overwrite ``adapter_id`` with ``lora_tree``; returns its slot.
+
+        Leaves narrower than the template (heterogeneous rank) are
+        zero-padded; structure mismatches raise.
+        """
+        padded = tree_map(_pad_to, lora_tree, self._template_shapes)
+        slot = self._alloc(adapter_id)
+        self.pooled = self._writer(self.pooled, padded, jnp.asarray(slot, jnp.int32))
+        self._touch(slot)
+        self.publishes += 1
+        return slot
+
+    def publish_round(self, adapter_id, base_tree, update_tree, lr: float = 1.0) -> int:
+        """fed→serve in one call: apply an ``AggSession.step`` update to the
+        tenant's current adapter tree and hot-swap the result into its slot."""
+        new_tree = tree_map(
+            lambda g, u: (g + lr * u.astype(g.dtype)).astype(g.dtype),
+            base_tree, update_tree,
+        )
+        self.publish(adapter_id, new_tree)
+        return new_tree
+
+    def acquire(self, adapter_ids) -> jnp.ndarray:
+        """Resolve a batch of adapter ids to pool slots ((B,) int32).
+
+        Ids must be resident (``publish`` admits them); each hit bumps the
+        slot's recency and traffic counters.
+        """
+        slots = []
+        for aid in adapter_ids:
+            if aid not in self._slot_of:
+                raise KeyError(
+                    f"adapter {aid!r} not resident — publish() it before serving"
+                )
+            slot = self._slot_of[aid]
+            self._touch(slot, traffic=1)
+            slots.append(slot)
+        return jnp.asarray(slots, jnp.int32)
+
+    def view(self, slots: jnp.ndarray):
+        """Convenience eager wrapper over ``adapter_view``."""
+        return adapter_view(self.pooled, slots)
+
+    def merged(self):
+        """Mean over resident adapters (legacy ``merge_adapter_means``)."""
+        return merged_view(self.pooled, self.occupancy())

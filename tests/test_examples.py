@@ -53,6 +53,18 @@ class TestCompareAggregators:
         )
 
 
+class TestServeLora:
+    def test_pool_serving_and_hotswap(self, capsys):
+        """Reduced serve example: >=2 tenants co-batched, per-tenant outputs
+        differ from merged, and the aggregation-round hot-swap changes only
+        tenant-0 continuations with zero retraces (asserted inside main)."""
+        serve = load_example("serve_lora")
+        serve.main(batch=2, prompt=6, gen=3, n_adapters=2)
+        out = capsys.readouterr().out
+        assert "merged-baseline check" in out
+        assert "hot-swap" in out
+
+
 class TestTrainCLIValidation:
     """Eager flag validation: silently-inert combinations must refuse."""
 

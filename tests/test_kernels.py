@@ -92,7 +92,17 @@ class TestRPCAAdmmTail:
 
 class TestLoraMatmul:
     @pytest.mark.parametrize(
-        "m,k,n,r", [(64, 64, 64, 4), (200, 192, 160, 8), (16, 512, 48, 16), (130, 70, 90, 32)]
+        "m,k,n,r",
+        [
+            (64, 64, 64, 4),
+            (200, 192, 160, 8),
+            (16, 512, 48, 16),
+            (130, 70, 90, 32),
+            # rank not a multiple of the 128 lane width, and rank > 128:
+            # exercises the zero-pad of A/B up to the padded rank tile.
+            (64, 96, 72, 100),
+            (40, 130, 90, 160),
+        ],
     )
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_sweep(self, m, k, n, r, dtype, rng):
@@ -119,6 +129,138 @@ class TestLoraMatmul:
         got = ops.lora_matmul(x, w, a, b, 1.0)
         assert got.shape == (2, 5, 24)
         np.testing.assert_allclose(got, ref.lora_matmul_ref(x, w, a, b, 1.0), atol=2e-5)
+
+    def test_scale_zero_is_base_matmul(self, rng):
+        x, w = arr(rng, (32, 48), jnp.float32), arr(rng, (48, 24), jnp.float32)
+        a, b = arr(rng, (48, 8), jnp.float32), arr(rng, (8, 24), jnp.float32)
+        np.testing.assert_allclose(ops.lora_matmul(x, w, a, b, 0.0), x @ w, atol=2e-5)
+
+    def test_remainder_tiles_all_dims(self, rng):
+        """M, N and K all leave remainder tiles simultaneously."""
+        m, k, n, r = 129, 513, 130, 8
+        x, w = arr(rng, (m, k), jnp.float32), arr(rng, (k, n), jnp.float32)
+        a, b = arr(rng, (k, r), jnp.float32), arr(rng, (r, n), jnp.float32)
+        got = ops.lora_matmul(x, w, a, b, 1.3)
+        want = ref.lora_matmul_ref(x, w, a, b, 1.3)
+        np.testing.assert_allclose(got, want, atol=6e-5, rtol=2e-5)
+
+
+class TestGatheredLoraMatmul:
+    """Multi-adapter gathered matmul vs the grouped-by-adapter XLA oracle.
+
+    fp32 comparisons are BITWISE: both impls share the compiled oracle's
+    accumulation order per row, so any index-plumbing bug (wrong slot, wrong
+    unsort) shows up as an exact mismatch, not a tolerance question.  The
+    oracle must itself be jitted — eager vs jit of the same reference differ
+    in the final fused add chain.
+    """
+
+    S, M, K, N, R = 5, 37, 48, 33, 8
+
+    def _pools(self, rng, dtype=jnp.float32, s=None, k=None, n=None, r=None):
+        s, k, n, r = s or self.S, k or self.K, n or self.N, r or self.R
+        x = arr(rng, (self.M, k), dtype)
+        w = arr(rng, (k, n), dtype)
+        a_pool = arr(rng, (s, k, r), dtype)
+        b_pool = arr(rng, (s, r, n), dtype)
+        return x, w, a_pool, b_pool
+
+    def _index_cases(self, rng):
+        m, s = self.M, self.S
+        return {
+            "permuted": rng.permutation(np.arange(m) % s),
+            "duplicate": np.repeat(rng.integers(0, s, (m + 3) // 4), 4)[:m],
+            "all_same": np.full(m, 2),
+            "masked": rng.integers(-1, s, m),  # -1 = no adapter
+        }
+
+    @pytest.mark.parametrize("impl,interpret", [("pallas", True), ("xla", None)])
+    def test_bitwise_vs_grouped_oracle(self, impl, interpret, rng):
+        x, w, a_pool, b_pool = self._pools(rng)
+        ref_jit = jax.jit(ref.gathered_lora_matmul_ref)
+        for name, idx in self._index_cases(rng).items():
+            row_slot = jnp.asarray(idx, jnp.int32)
+            got = ops.gathered_lora_matmul(
+                x, w, a_pool, b_pool, row_slot, 1.7, impl=impl, interpret=interpret
+            )
+            want = ref_jit(x, w, a_pool, b_pool, row_slot, 1.7)
+            assert bool(jnp.all(got == want)), f"{impl}/{name}: not bitwise"
+
+    @pytest.mark.parametrize("impl,interpret", [("pallas", True), ("xla", None)])
+    def test_masked_rows_get_base_only(self, impl, interpret, rng):
+        x, w, a_pool, b_pool = self._pools(rng)
+        row_slot = jnp.asarray(
+            [-1 if i % 3 == 0 else i % self.S for i in range(self.M)], jnp.int32
+        )
+        got = ops.gathered_lora_matmul(
+            x, w, a_pool, b_pool, row_slot, 2.0, impl=impl, interpret=interpret
+        )
+        base = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+        masked = np.asarray(row_slot) < 0
+        np.testing.assert_allclose(
+            np.asarray(got)[masked], np.asarray(base)[masked], atol=2e-5
+        )
+        assert float(jnp.max(jnp.abs(got[~masked] - base[~masked]))) > 1e-3
+
+    def test_request_level_slots_3d(self, rng):
+        """(B,) slots broadcast over (B, S, K) activations — the serving path."""
+        b, s_len = 6, 7
+        x = arr(rng, (b, s_len, self.K), jnp.float32)
+        w = arr(rng, (self.K, self.N), jnp.float32)
+        a_pool = arr(rng, (self.S, self.K, self.R), jnp.float32)
+        b_pool = arr(rng, (self.S, self.R, self.N), jnp.float32)
+        req_slot = jnp.asarray([0, 3, 3, 1, 4, 0], jnp.int32)
+        got = ops.gathered_lora_matmul(x, w, a_pool, b_pool, req_slot, 1.0, impl="xla")
+        assert got.shape == (b, s_len, self.N)
+        for i in range(b):
+            want = ref.lora_matmul_ref(
+                x[i], w, a_pool[req_slot[i]], b_pool[req_slot[i]], 1.0
+            )
+            np.testing.assert_allclose(got[i], want, atol=3e-5, rtol=2e-5)
+
+    def test_matches_per_slot_single_adapter_kernel(self, rng):
+        """Each row's result equals running the single-adapter kernel with
+        that row's adapter."""
+        x, w, a_pool, b_pool = self._pools(rng)
+        row_slot = jnp.asarray(np.arange(self.M) % self.S, jnp.int32)
+        got = ops.gathered_lora_matmul(x, w, a_pool, b_pool, row_slot, 1.0, impl="xla")
+        for s in range(self.S):
+            rows = np.asarray(row_slot) == s
+            want = ops.lora_matmul(x, w, a_pool[s], b_pool[s], 1.0, interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(got)[rows], np.asarray(want)[rows], atol=3e-5, rtol=2e-5
+            )
+
+    def test_bf16(self, rng):
+        x, w, a_pool, b_pool = self._pools(rng, dtype=jnp.bfloat16)
+        row_slot = jnp.asarray(np.arange(self.M) % self.S, jnp.int32)
+        got = ops.gathered_lora_matmul(x, w, a_pool, b_pool, row_slot, 1.0, impl="xla")
+        want = ref.gathered_lora_matmul_ref(x, w, a_pool, b_pool, row_slot, 1.0)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=0.2, rtol=0.02,
+        )
+
+    def test_max_segments_invariance(self, rng):
+        """Tightening the segment bound (serving passes n_requests) must not
+        change results, only the tile layout."""
+        x, w, a_pool, b_pool = self._pools(rng)
+        row_slot = jnp.asarray(np.arange(self.M) % 3, jnp.int32)  # 3 distinct
+        full = ops.gathered_lora_matmul(x, w, a_pool, b_pool, row_slot, 1.0, impl="xla")
+        tight = ops.gathered_lora_matmul(
+            x, w, a_pool, b_pool, row_slot, 1.0, impl="xla", max_segments=3
+        )
+        assert bool(jnp.all(full == tight))
+
+    def test_bad_inputs_raise(self, rng):
+        x, w, a_pool, b_pool = self._pools(rng)
+        row_slot = jnp.asarray(np.arange(self.M) % self.S, jnp.int32)
+        with pytest.raises(ValueError):
+            ops.gathered_lora_matmul(x, w, a_pool, b_pool, row_slot, impl="nope")
+        with pytest.raises(ValueError):
+            ops.gathered_lora_matmul(
+                x, w, a_pool, b_pool, jnp.zeros((2, 2), jnp.int32)
+            )
 
 
 class TestLocalAttention:

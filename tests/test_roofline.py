@@ -130,3 +130,48 @@ class TestCostModel:
         assert terms["dominant"] == "compute"
         terms = rl.roofline_terms(1e9, 1e12, 1e6, 256)
         assert terms["dominant"] == "memory"
+
+
+class TestServeGatherCosts:
+    """Serve-path cost model vs the measured mode:"serve" bench directions."""
+
+    DIMS = dict(seq_len=4, d_in=512, d_out=512, rank=16)
+
+    def test_acceptance_cells_predict_gathered_wins(self):
+        for n_adapters, batch in [(16, 16), (16, 64), (64, 64)]:
+            c = cm.serve_gather_costs(
+                n_requests=batch, n_adapters=n_adapters, **self.DIMS
+            )
+            assert c["gathered_wins"], (n_adapters, batch)
+            assert c["gathered_vs_per_request"] > 1.0
+
+    def test_small_batch_prefers_per_request(self):
+        c = cm.serve_gather_costs(n_requests=4, n_adapters=16, **self.DIMS)
+        assert not c["gathered_wins"]
+
+    def test_tile_gather_saves_adapter_traffic(self):
+        """Gathering per block_m row-tile must move far fewer adapter bytes
+        than per-row materialization once rows >> distinct adapters."""
+        c = cm.serve_gather_costs(n_requests=256, n_adapters=4, **self.DIMS)
+        assert c["gathered"]["gather_bytes"] < c["per_request"]["gather_bytes"]
+
+    def test_m_pad_bound(self):
+        block_m = 16
+        for batch, n_adapters in [(16, 16), (64, 16), (16, 64)]:
+            c = cm.serve_gather_costs(
+                n_requests=batch, n_adapters=n_adapters, block_m=block_m, **self.DIMS
+            )
+            m_rows = batch * self.DIMS["seq_len"]
+            n_seg = min(n_adapters, batch)
+            assert m_rows <= c["m_pad"] <= m_rows + n_seg * (block_m - 1) + block_m
+
+    def test_merged_is_cheapest(self):
+        c = cm.serve_gather_costs(n_requests=64, n_adapters=16, **self.DIMS)
+        assert c["merged"]["us"] <= c["gathered"]["us"]
+        assert c["merged"]["us"] <= c["per_request"]["us"]
+
+    def test_crossover_batch_matches_measured_threshold(self):
+        b16 = cm.serve_crossover_batch(n_adapters=16)
+        assert b16 is not None and 8 <= b16 <= 24
+        b64 = cm.serve_crossover_batch(n_adapters=64)
+        assert b64 is not None and b64 >= b16

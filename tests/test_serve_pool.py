@@ -1,0 +1,233 @@
+"""AdapterPool: slot allocation, eviction, hot-swap, and the view gathers.
+
+The pinned contract here is the zero-retrace hot-swap: any number of
+``publish`` calls compiles the slot writer exactly once, and a jitted
+consumer that takes the pooled tree as an argument is never invalidated by
+a publish.  A regression (e.g. closing over the pool, or passing the slot
+as a python int) shows up as a cache-size bump, not a flaky timing test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import AdapterPool, adapter_view, merged_view
+
+
+def toy_template(rank=2, layers=3, d=6):
+    return {
+        "groups": (
+            {
+                "a": jnp.zeros((layers, d, rank), jnp.float32),
+                "b": jnp.zeros((layers, rank, d), jnp.float32),
+            },
+        ),
+        "tail": (
+            {
+                "a": jnp.zeros((d, rank), jnp.float32),
+                "b": jnp.zeros((rank, d), jnp.float32),
+            },
+        ),
+    }
+
+
+def toy_tree(seed, rank=2, layers=3, d=6):
+    rng = np.random.default_rng(seed)
+    fill = lambda shape: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    return {
+        "groups": (
+            {"a": fill((layers, d, rank)), "b": fill((layers, rank, d))},
+        ),
+        "tail": ({"a": fill((d, rank)), "b": fill((rank, d))},),
+    }
+
+
+class TestSlotAllocation:
+    def test_publish_fills_free_slots_in_order(self):
+        pool = AdapterPool(toy_template(), n_slots=3)
+        assert pool.publish("x", toy_tree(1)) == 0
+        assert pool.publish("y", toy_tree(2)) == 1
+        assert pool.publish("z", toy_tree(3)) == 2
+        assert len(pool) == 3
+        assert pool.slot_map() == {"x": 0, "y": 1, "z": 2}
+
+    def test_republish_reuses_slot(self):
+        pool = AdapterPool(toy_template(), n_slots=3)
+        pool.publish("x", toy_tree(1))
+        slot = pool.publish("x", toy_tree(2))
+        assert slot == 0 and len(pool) == 1
+        got = pool.pooled["tail"][0]["a"][0]
+        np.testing.assert_array_equal(got, toy_tree(2)["tail"][0]["a"])
+
+    def test_empty_slot_is_exact_noop_adapter(self):
+        pool = AdapterPool(toy_template(), n_slots=4)
+        pool.publish("x", toy_tree(1))
+        for part in ("groups", "tail"):
+            for leaf in jax.tree_util.tree_leaves(pool.pooled[part]):
+                assert float(jnp.abs(leaf[1:]).max()) == 0.0
+
+    def test_lru_eviction_respects_acquire_recency(self):
+        pool = AdapterPool(toy_template(), n_slots=2)
+        pool.publish("old", toy_tree(1))
+        pool.publish("new", toy_tree(2))
+        pool.acquire(["old"])  # bump recency: "new" is now least recent
+        pool.publish("third", toy_tree(3))
+        assert "new" not in pool and "old" in pool and "third" in pool
+        assert pool.evictions == 1
+
+    def test_traffic_eviction_keeps_hot_adapter(self):
+        pool = AdapterPool(toy_template(), n_slots=2, policy="traffic")
+        pool.publish("hot", toy_tree(1))
+        pool.publish("cold", toy_tree(2))
+        pool.acquire(["hot", "hot", "hot", "cold"])
+        pool.publish("third", toy_tree(3))
+        assert "cold" not in pool and "hot" in pool
+
+    def test_acquire_unknown_id_raises(self):
+        pool = AdapterPool(toy_template(), n_slots=2)
+        pool.publish("x", toy_tree(1))
+        with pytest.raises(KeyError):
+            pool.acquire(["x", "ghost"])
+
+    def test_bad_args_raise(self):
+        with pytest.raises(ValueError):
+            AdapterPool(toy_template(), n_slots=0)
+        with pytest.raises(ValueError):
+            AdapterPool(toy_template(), n_slots=2, policy="fifo")
+
+
+class TestHeterogeneousRank:
+    def test_narrow_rank_is_zero_padded(self):
+        pool = AdapterPool(toy_template(rank=4), n_slots=2)
+        narrow = toy_tree(1, rank=2)
+        pool.publish("narrow", narrow)
+        got = pool.pooled["tail"][0]["a"][0]
+        np.testing.assert_array_equal(got[:, :2], narrow["tail"][0]["a"])
+        assert float(jnp.abs(got[:, 2:]).max()) == 0.0
+
+    def test_padded_adapter_serves_identically(self):
+        """rank-2 adapter from a rank-4 pool == the unpadded adapter: the
+        zero A columns multiply away exactly."""
+        narrow = toy_tree(1, rank=2)
+        pool = AdapterPool(toy_template(rank=4), n_slots=2)
+        pool.publish("t", narrow)
+        view = pool.view(pool.acquire(["t"]))
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 6)), jnp.float32)
+        a, b = view["tail"][0]["a"][0], view["tail"][0]["b"][0]
+        got = (x @ a) @ b
+        want = (x @ narrow["tail"][0]["a"]) @ narrow["tail"][0]["b"]
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_oversize_leaf_raises(self):
+        pool = AdapterPool(toy_template(rank=2), n_slots=2)
+        with pytest.raises(ValueError):
+            pool.publish("big", toy_tree(1, rank=4))
+
+
+class TestViews:
+    def test_adapter_view_matches_per_request_stack(self):
+        pool = AdapterPool(toy_template(), n_slots=3)
+        trees = {i: toy_tree(10 + i) for i in range(3)}
+        for i, t in trees.items():
+            pool.publish(i, t)
+        slots = pool.acquire([2, 0, 2, 1])
+        view = adapter_view(pool.pooled, slots)
+        # groups: (layers, B, ...) — request axis second; tail: (B, ...)
+        for req, sid in enumerate([2, 0, 2, 1]):
+            np.testing.assert_array_equal(
+                view["groups"][0]["a"][:, req], trees[sid]["groups"][0]["a"]
+            )
+            np.testing.assert_array_equal(
+                view["tail"][0]["b"][req], trees[sid]["tail"][0]["b"]
+            )
+
+    def test_merged_is_mean_over_resident_only(self):
+        pool = AdapterPool(toy_template(), n_slots=4)  # 2 of 4 slots occupied
+        t1, t2 = toy_tree(1), toy_tree(2)
+        pool.publish("x", t1)
+        pool.publish("y", t2)
+        merged = pool.merged()
+        want = 0.5 * (t1["tail"][0]["a"] + t2["tail"][0]["a"])
+        np.testing.assert_allclose(merged["tail"][0]["a"], want, atol=1e-6)
+
+    def test_merged_view_empty_pool_is_zero(self):
+        pool = AdapterPool(toy_template(), n_slots=2)
+        merged = merged_view(pool.pooled, pool.occupancy())
+        assert float(jnp.abs(merged["tail"][0]["a"]).max()) == 0.0
+
+
+class TestHotSwap:
+    def test_publish_never_retraces_writer(self):
+        pool = AdapterPool(toy_template(), n_slots=4)
+        for i in range(12):  # every slot hit multiple times
+            pool.publish(i % 4, toy_tree(i))
+        assert pool.retrace_count == 1
+        assert pool.publishes == 12
+
+    def test_publish_does_not_invalidate_jitted_consumer(self):
+        """The serving contract: a jitted fn taking (pooled, slots) compiles
+        once; hot-swap publishes between calls reuse the executable and see
+        the new weights."""
+        pool = AdapterPool(toy_template(), n_slots=2)
+        pool.publish("t0", toy_tree(1))
+        pool.publish("t1", toy_tree(2))
+        slots = pool.acquire(["t0", "t1"])
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 6)), jnp.float32)
+
+        @jax.jit
+        def consume(pooled, slots, x):
+            view = adapter_view(pooled, slots)
+            a, b = view["tail"][0]["a"], view["tail"][0]["b"]
+            return jnp.einsum("bi,bir->br", x, a), b
+
+        before = consume(pool.pooled, slots, x)
+        n_rounds = 5
+        outs = []
+        for r in range(n_rounds):
+            pool.publish("t0", toy_tree(100 + r))
+            outs.append(consume(pool.pooled, slots, x))
+        assert consume._cache_size() == 1, "hot-swap must not retrace the consumer"
+        assert pool.retrace_count == 1
+        # each round's publish is visible to the same executable
+        assert not np.allclose(np.asarray(outs[-1][0]), np.asarray(before[0]))
+        for r in range(1, n_rounds):
+            assert not np.allclose(np.asarray(outs[r][0][0]), np.asarray(outs[r - 1][0][0]))
+
+    def test_publish_round_applies_update_and_swaps(self):
+        pool = AdapterPool(toy_template(), n_slots=2)
+        base = toy_tree(1)
+        update = toy_tree(2)
+        pool.publish("t", base)
+        new_tree = pool.publish_round("t", base, update, lr=0.5)
+        want = base["tail"][0]["a"] + 0.5 * update["tail"][0]["a"]
+        np.testing.assert_allclose(new_tree["tail"][0]["a"], want, atol=1e-6)
+        np.testing.assert_allclose(pool.pooled["tail"][0]["a"][0], want, atol=1e-6)
+
+
+class TestRequestScheduler:
+    def _sched(self, batch_size=3):
+        from repro.launch.serve import Request, RequestScheduler
+
+        pool = AdapterPool(toy_template(), n_slots=3)
+        for i in range(3):
+            pool.publish(f"tenant-{i}", toy_tree(i))
+        return pool, RequestScheduler(pool, batch_size), Request
+
+    def test_submit_unknown_adapter_raises(self):
+        _, sched, Request = self._sched()
+        with pytest.raises(KeyError):
+            sched.submit(Request(0, "ghost", np.zeros(4, np.int32)))
+
+    def test_next_batch_cobatches_across_tenants(self):
+        pool, sched, Request = self._sched(batch_size=3)
+        for i in range(5):
+            sched.submit(Request(i, f"tenant-{i % 3}", np.full(4, i, np.int32)))
+        requests, tokens, slots = sched.next_batch()
+        assert [r.request_id for r in requests] == [0, 1, 2]
+        assert tokens.shape == (3, 4)
+        np.testing.assert_array_equal(
+            np.asarray(slots), [pool.slot_map()[f"tenant-{i}"] for i in range(3)]
+        )
+        requests2, tokens2, _ = sched.next_batch()
+        assert [r.request_id for r in requests2] == [3, 4]
+        assert sched.next_batch() is None
