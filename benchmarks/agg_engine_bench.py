@@ -31,19 +31,29 @@ client local phase inside the previous round's still-running RPCA split
 (DESIGN.md §8).  The cells use a server-bound regime (the paper's: RPCA
 dominates the round), where the win is the point of the pipeline.
 
+Mesh mode (``--mesh``) adds the mesh-sharded aggregation cells of
+DESIGN.md §10: the packed client axis split over 1/2/4 forced host
+devices (XLA_FLAGS is preset before jax loads — run from the CLI), cold
+round vs warm-carry rounds at 32–512 packed clients, each against the
+``costmodel.mesh_agg_costs`` roofline prediction.  On a one-core CI host
+the devices share the core, so the cells demonstrate the memory-headroom
+envelope (peak resident bytes per shard), not a wall-clock speedup.
+
 Output contract:
   * CSV rows (stdout): name,us_per_call,derived — derived carries the
     packed speedup vs reference and, for svt_mode=subspace, the speedup vs
     the gram-mode cell.
   * ``BENCH_agg.json`` (path overridable via BENCH_AGG_JSON): machine-
-    readable, schema-versioned: {"schema_version": 4, "records": [...]}
+    readable, schema-versioned: {"schema_version": 5, "records": [...]}
     with single-call records {method, engine, svt_mode, n_modules,
     n_clients, masked, us_per_call, compile_s}, multi-round records
     {mode: "multi_round", carry_mode, round_type: cold|warm, rounds,
     fallbacks, ...}, pipeline records {mode: "pipeline", staleness,
     n_clients, rounds, us_per_round, speedup_vs_sync}, and serving records
     (``--serve``) {mode: "serve", path: gathered|per_request|merged,
-    n_adapters, batch, speedup_vs_per_request, predicted_speedup} — uploaded
+    n_adapters, batch, speedup_vs_per_request, predicted_speedup}, and mesh
+    records (``--mesh``) {mode: "mesh", shards, n_clients, round_type,
+    fallbacks, predicted_us, predicted_peak_bytes, vs_1shard} — uploaded
     as a CI artifact so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
@@ -55,6 +65,22 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _preset_host_devices(argv: list[str]) -> None:
+    """Force 4 host devices BEFORE the first jax import when ``--mesh`` is
+    requested (XLA fixes the device count at backend init, so this cannot
+    wait until argparse runs after the imports below)."""
+    if "--mesh" not in argv:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4"
+        ).strip()
+
+
+_preset_host_devices(sys.argv[1:])
 
 import numpy as np  # noqa: E402
 
@@ -68,8 +94,11 @@ from repro.core import AggregatorConfig, AggSession, aggregate  # noqa: E402
 #: multi-round (cross-round carry) records; 3 added the async round
 #: pipeline records (mode="pipeline": staleness 0 vs 1 wall clock); 4 added
 #: the multi-tenant serving records (mode="serve": gathered-pool vs
-#: per-request-gather vs merged adapter-count x batch throughput cells).
-SCHEMA_VERSION = 4
+#: per-request-gather vs merged adapter-count x batch throughput cells);
+#: 5 added the mesh-sharded aggregation records (mode="mesh": 1/2/4 host-
+#: device shard sweeps, cold + warm-carry, measured vs
+#: costmodel.mesh_agg_costs-predicted wall time and peak bytes).
+SCHEMA_VERSION = 5
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
@@ -430,8 +459,114 @@ def bench_serve(n_adapters: int, batch: int) -> None:
         )
 
 
+#: Mesh cells: host-device shard counts x packed-client cohorts.  The
+#: 512-client column is the acceptance cell (the cohort where one device's
+#: resident footprint is at its worst and 4-way sharding pays); quick mode
+#: keeps the small cohorts so CI still exercises every shard count.
+MESH_SHARDS = (1, 2, 4)
+MESH_CLIENTS = (32, 128, 512)
+MESH_CLIENTS_QUICK = (32, 64)
+MESH_MODULES = 16
+MESH_ITERS = 20
+MESH_ROUNDS = 3
+
+
+def _mesh_predicted(n_modules: int, cohort: int, shards: int, warm: bool) -> dict:
+    """Costmodel envelope for one mesh cell, summed over the two canonical
+    vec buckets SHAPES populates (64 and 128, half the modules each); the
+    per-call dispatch overhead is counted once."""
+    from repro.launch.costmodel import MESH_DISPATCH_US, mesh_agg_costs
+
+    buckets = {64: 0, 128: 0}
+    for i in range(n_modules):
+        buckets[int(np.prod(SHAPES[i % len(SHAPES)]))] += 1
+    parts = [
+        mesh_agg_costs(
+            n_modules=count, padded_vec=vec, cohort=cohort, shards=shards,
+            rpca_iters=MESH_ITERS, warm=warm,
+        )
+        for vec, count in buckets.items() if count
+    ]
+    return {
+        "us": sum(p["us"] for p in parts) - MESH_DISPATCH_US * (len(parts) - 1),
+        "peak_bytes_per_shard": max(p["peak_bytes_per_shard"] for p in parts),
+        "comm_fraction": max(p["comm_fraction"] for p in parts),
+    }
+
+
+def bench_mesh(shards: int, n_clients: int,
+               baseline: "tuple[float, float] | None" = None,
+               n_modules: int = MESH_MODULES,
+               rounds: int = MESH_ROUNDS) -> "tuple[float, float] | None":
+    """Mesh-sharded aggregation: client axis split over ``shards`` host
+    devices (DESIGN.md §10), cold round vs warm-carry rounds, against the
+    ``mesh_agg_costs`` roofline prediction.
+
+    On the CI host every "device" is a thread on the same core, so sharding
+    buys memory headroom (peak resident bytes / shard), not wall clock —
+    the costmodel's ``shared_host_core=True`` default predicts exactly
+    that, and the perf gate checks the measured/predicted envelope rather
+    than a speedup.  ``baseline`` is the (cold_s, warm_s) of the 1-shard
+    cell at the same cohort, for the vs-1-shard ratio in the record.
+    Returns this cell's (cold_s, warm_s) so the caller can thread it.
+    """
+    if shards > jax.device_count():
+        common.emit(
+            f"agg_mesh_s{shards}_c{n_clients}", 0.0,
+            f"skipped: need {shards} host devices, have {jax.device_count()} "
+            "(run with --mesh from the CLI so XLA_FLAGS is preset)",
+        )
+        return None
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(shards) if shards > 1 else None
+    cfg = AggregatorConfig(
+        method="fedrpca", rpca_iters=MESH_ITERS,
+        svt_mode="subspace", carry_mode="subspace",
+    )
+    trees = make_round_trees(n_modules, n_clients, rounds, seed=7)
+    sess = AggSession(cfg, mesh=mesh)
+    t0 = time.perf_counter()
+    jax.block_until_ready(sess.step(trees[0])[0])
+    compile_s = time.perf_counter() - t0
+    sess.reset()
+    t0 = time.perf_counter()
+    out, cold_diag = sess.step(trees[0])
+    jax.block_until_ready(out)
+    cold_s = time.perf_counter() - t0
+    warm_times, warm_falls = [], []
+    for tree in trees[1:]:
+        t0 = time.perf_counter()
+        out, diag = sess.step(tree)
+        jax.block_until_ready(out)
+        warm_times.append(time.perf_counter() - t0)
+        warm_falls.append(int(diag.scalars["fallback_count"]))
+    warm_s = min(warm_times)
+    tag = f"s{shards}_c{n_clients}"
+    for round_type, s, falls, base in (
+        ("cold", cold_s, int(cold_diag.scalars["fallback_count"]),
+         baseline[0] if baseline else None),
+        ("warm", warm_s, max(warm_falls), baseline[1] if baseline else None),
+    ):
+        pred = _mesh_predicted(n_modules, n_clients, shards, round_type == "warm")
+        extra = f" vs_1shard={base / s:.2f}x" if base else ""
+        record(
+            f"agg_mesh_{round_type}_{tag}", s * 1e6,
+            f"predicted={pred['us']:.0f}us envelope={s * 1e6 / pred['us']:.2f}x "
+            f"fallbacks={falls} compile={compile_s:.2f}s{extra}",
+            mode="mesh", shards=shards, n_clients=n_clients,
+            n_modules=n_modules, round_type=round_type, rounds=rounds,
+            fallbacks=falls, predicted_us=round(pred["us"], 1),
+            predicted_peak_bytes=int(pred["peak_bytes_per_shard"]),
+            predicted_comm_fraction=round(pred["comm_fraction"], 3),
+            vs_1shard=round(base / s, 3) if base else None,
+            compile_s=round(compile_s, 2),
+        )
+    return cold_s, warm_s
+
+
 def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace",
-         serve: bool = False) -> None:
+         serve: bool = False, mesh: bool = False) -> None:
     quick = common.QUICK if quick is None else quick
     module_counts = (32,) if quick else MODULE_COUNTS
     client_counts = (8, 32) if quick else CLIENT_COUNTS
@@ -453,6 +588,13 @@ def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace
         )
         for n_adapters, batch in cells:
             bench_serve(n_adapters, batch)
+    if mesh:
+        for n_clients in (MESH_CLIENTS_QUICK if quick else MESH_CLIENTS):
+            base = None
+            for shards in MESH_SHARDS:
+                got = bench_mesh(shards, n_clients, baseline=base)
+                if shards == 1:
+                    base = got
     out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")
     with open(out_path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION, "records": RECORDS}, f, indent=1)
@@ -483,6 +625,12 @@ if __name__ == "__main__":
         help="add multi-tenant serving cells: gathered-pool vs per-request "
              "vs merged across adapter-count x batch",
     )
+    parser.add_argument(
+        "--mesh", action="store_true",
+        help="add mesh-sharded aggregation cells: 1/2/4 host-device shard "
+             "sweeps, cold + warm-carry, vs the costmodel envelope "
+             "(presets XLA_FLAGS for 4 host devices before jax loads)",
+    )
     args = parser.parse_args()
     main(quick=True if args.quick else None, rounds=args.rounds,
-         carry_mode=args.carry_mode, serve=args.serve)
+         carry_mode=args.carry_mode, serve=args.serve, mesh=args.mesh)

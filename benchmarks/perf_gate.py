@@ -1,0 +1,184 @@
+"""Perf gate over BENCH_agg.json: fail CI on aggregation perf regressions.
+
+Reads the schema-v5 bench artifact (no jax import — this is a pure JSON
+check, cheap enough to run on every CI push) and enforces the roofline /
+costmodel-derived bounds each engine PR established:
+
+  * single-call: the packed engine must not regress vs the per-leaf
+    reference at the largest benched cell, and subspace SVT must stay in
+    the same ballpark as gram SVT (its win grows with cohort size; the
+    gate only catches a collapse).
+  * multi-round carry: warm rounds must be no slower than cold rounds and
+    must finish with ZERO eigh fallbacks (the cross-round carry contract —
+    a warm fallback means the carried subspace stopped being reusable).
+  * mesh: every mode="mesh" cell's measured wall time must sit inside the
+    ``costmodel.mesh_agg_costs`` envelope band, warm mesh rounds must also
+    be fallback-free, and wherever a cohort has both 1-shard and 4-shard
+    cells the 4-shard warm cell must itself be in-envelope (the scale-out
+    acceptance cell: sharding keeps working where one device is at its
+    memory-footprint worst).
+
+The bounds are deliberately wide tolerance bands, not point predictions:
+the costmodel is an order-of-magnitude envelope and CI hosts are noisy
+shared cores.  A regression that escapes an 8x band is a real one.
+
+Usage: python benchmarks/perf_gate.py [BENCH_agg.json] [--require mesh ...]
+Exit 0 = all checks pass; exit 1 = at least one FAIL line printed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Packed-vs-reference speedup floor at the largest single-call cell.
+PACKED_SPEEDUP_MIN = 1.0
+#: Subspace-SVT wall time may not exceed this multiple of gram-SVT's.
+SUBSPACE_VS_GRAM_MAX = 1.5
+#: Warm carry rounds may not be slower than this multiple of cold rounds.
+WARM_VS_COLD_MAX = 1.0
+#: measured/predicted band for mode="mesh" cells (order-of-magnitude
+#: envelope: the costmodel's dispatch floor and the shared-core collective
+#: emulation are both rough on CI hosts; see costmodel.mesh_agg_costs).
+MESH_ENVELOPE = (0.1, 8.0)
+
+FAILURES: list[str] = []
+
+
+def check(ok: bool, name: str, detail: str) -> None:
+    status = "PASS" if ok else "FAIL"
+    print(f"{status} {name}: {detail}", flush=True)
+    if not ok:
+        FAILURES.append(name)
+
+
+def gate_single_call(records: list[dict]) -> None:
+    cells = [
+        r for r in records
+        if r.get("method") == "fedrpca" and "mode" not in r and not r.get("masked")
+    ]
+    if not cells:
+        print("# no single-call fedrpca cells; skipping single-call gate")
+        return
+    by_size: dict[tuple, dict[str, dict]] = {}
+    for r in cells:
+        key = (r["n_modules"], r["n_clients"])
+        slot = r["engine"] if r["engine"] == "reference" else r["svt_mode"]
+        by_size.setdefault(key, {})[slot] = r
+    largest = max(by_size, key=lambda k: k[0] * k[1])
+    cell = by_size[largest]
+    if "reference" in cell and "subspace" in cell:
+        speedup = cell["reference"]["us_per_call"] / cell["subspace"]["us_per_call"]
+        check(
+            speedup >= PACKED_SPEEDUP_MIN,
+            f"packed_speedup_m{largest[0]}_c{largest[1]}",
+            f"packed subspace {speedup:.2f}x vs reference "
+            f"(floor {PACKED_SPEEDUP_MIN}x)",
+        )
+    for key, slots in sorted(by_size.items()):
+        if "gram" in slots and "subspace" in slots:
+            ratio = slots["subspace"]["us_per_call"] / slots["gram"]["us_per_call"]
+            check(
+                ratio <= SUBSPACE_VS_GRAM_MAX,
+                f"subspace_vs_gram_m{key[0]}_c{key[1]}",
+                f"subspace/gram wall ratio {ratio:.2f} "
+                f"(ceiling {SUBSPACE_VS_GRAM_MAX})",
+            )
+
+
+def gate_multi_round(records: list[dict]) -> None:
+    cells = [r for r in records if r.get("mode") == "multi_round"]
+    if not cells:
+        print("# no multi_round cells; skipping carry gate")
+        return
+    by_mode: dict[str, dict[str, dict]] = {}
+    for r in cells:
+        by_mode.setdefault(r["carry_mode"], {})[r["round_type"]] = r
+    for mode, slots in sorted(by_mode.items()):
+        if mode == "none" or "cold" not in slots or "warm" not in slots:
+            continue
+        ratio = slots["warm"]["us_per_call"] / slots["cold"]["us_per_call"]
+        check(
+            ratio <= WARM_VS_COLD_MAX,
+            f"carry_warm_vs_cold_{mode}",
+            f"warm/cold wall ratio {ratio:.2f} (ceiling {WARM_VS_COLD_MAX})",
+        )
+        falls = slots["warm"]["fallbacks"]
+        check(
+            falls == 0,
+            f"carry_warm_fallbacks_{mode}",
+            f"{falls} eigh fallbacks on warm rounds (must be 0)",
+        )
+
+
+def gate_mesh(records: list[dict]) -> None:
+    cells = [r for r in records if r.get("mode") == "mesh"]
+    if not cells:
+        print("# no mesh cells; skipping mesh gate")
+        return
+    lo, hi = MESH_ENVELOPE
+    for r in cells:
+        env = r["us_per_call"] / r["predicted_us"]
+        tag = f"s{r['shards']}_c{r['n_clients']}_{r['round_type']}"
+        check(
+            lo <= env <= hi,
+            f"mesh_envelope_{tag}",
+            f"measured/predicted {env:.2f} (band [{lo}, {hi}])",
+        )
+        if r["round_type"] == "warm":
+            check(
+                r["fallbacks"] == 0,
+                f"mesh_warm_fallbacks_{tag}",
+                f"{r['fallbacks']} eigh fallbacks on warm sharded rounds "
+                "(must be 0)",
+            )
+    # Scale-out acceptance: wherever a cohort ran at both 1 and 4 shards,
+    # the 4-shard warm cell must exist and be in-envelope (checked above) —
+    # here we just require its presence so a silently-skipped cell (too few
+    # devices) cannot pass the gate.
+    cohorts = {r["n_clients"] for r in cells if r["shards"] == 1}
+    for c in sorted(cohorts):
+        has4 = any(
+            r["shards"] == 4 and r["n_clients"] == c and r["round_type"] == "warm"
+            for r in cells
+        )
+        check(has4, f"mesh_4shard_present_c{c}",
+              "4-shard warm cell recorded" if has4
+              else "4-shard warm cell missing (skipped? too few host devices)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="BENCH_agg.json")
+    ap.add_argument(
+        "--require", nargs="*", default=(),
+        choices=["single_call", "multi_round", "mesh"],
+        help="fail (instead of skip) when these record groups are absent",
+    )
+    args = ap.parse_args()
+    with open(args.path) as f:
+        payload = json.load(f)
+    version = payload.get("schema_version")
+    check(version == 5, "schema_version", f"got {version}, want 5")
+    records = payload.get("records", [])
+    present = {
+        "single_call": any("mode" not in r for r in records),
+        "multi_round": any(r.get("mode") == "multi_round" for r in records),
+        "mesh": any(r.get("mode") == "mesh" for r in records),
+    }
+    for group in args.require:
+        check(present[group], f"require_{group}",
+              "records present" if present[group] else "no records of this group")
+    gate_single_call(records)
+    gate_multi_round(records)
+    gate_mesh(records)
+    if FAILURES:
+        print(f"# perf gate: {len(FAILURES)} check(s) FAILED: "
+              f"{', '.join(FAILURES)}", flush=True)
+        return 1
+    print("# perf gate: all checks passed", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -536,6 +536,7 @@ def aggregate(
     mask=None,
     weights=None,
     with_diagnostics: bool = False,
+    mesh=None,
 ) -> PyTree:
     """Aggregate stacked client deltas per ``cfg.method``.
 
@@ -553,6 +554,11 @@ def aggregate(
     ``cfg.weighting == "data_size"``); they are mask-zeroed and normalized
     internally.  With both None the legacy unweighted code paths run
     bit-for-bit unchanged.
+
+    ``mesh`` shards the packed client axis across a device mesh (packed
+    engine only; DESIGN.md §10).  The reference engine is the single-device
+    parity oracle, so passing a multi-shard mesh with it is an error; a
+    one-shard mesh is accepted and ignored on both engines.
     """
     cfg = cfg or AggregatorConfig()
     if cfg.weighting not in WEIGHTINGS:
@@ -572,10 +578,15 @@ def aggregate(
 
         return engine_lib.aggregate_packed(
             stacked, cfg, shrink_fn=shrink_fn, key=key, mask=mask, weights=weights,
-            with_diagnostics=with_diagnostics,
+            with_diagnostics=with_diagnostics, mesh=mesh,
         )
     if engine != "reference":
         raise ValueError(f"unknown engine: {engine!r} (expected one of {ENGINES})")
+    if mesh is not None and rpca_lib.mesh_client_shards(mesh) > 1:
+        raise ValueError(
+            "the reference engine is the single-device parity oracle and "
+            "cannot shard the client axis; use engine='packed' with a mesh"
+        )
     if cfg.method in _SIMPLE:
         out = _SIMPLE[cfg.method](stacked, cfg, key, mask, weights)
         return (out, {}) if with_diagnostics else out

@@ -108,6 +108,7 @@ def pack(
     client_mask=None,
     weights=None,
     cohort_size: int | None = None,
+    mesh=None,
 ) -> tuple[dict, PackSpec]:
     """Pack a stacked client-delta pytree into shape buckets.
 
@@ -125,6 +126,13 @@ def pack(
     returned ``Bucket``s.  ``cohort_size`` zero-pads the client axis up to
     a canonical size (``stacking.canonical_cohort_size``) and extends the
     mask with zeros — the shape-static partial-participation layout.
+
+    ``mesh`` (with more than one client shard) constrains every bucket's
+    client axis onto the mesh's client axes (shard-major column placement:
+    contiguous column blocks per shard, so tier gathers, ``migrate_carry``
+    and ``plan_retier`` stay shard-local) and the mask/weight vectors along
+    the same axis.  One-shard meshes are a no-op — callers normalize them
+    to None via ``plan_aggregation``.
     """
     if granularity not in ("module", "leaf"):
         raise ValueError(f"unknown granularity: {granularity!r}")
@@ -230,10 +238,26 @@ def pack(
     mask32 = None if client_mask is None else jnp.asarray(client_mask, jnp.float32)
     w32 = None if weights is None else jnp.asarray(weights, jnp.float32)
 
+    sharded = mesh is not None and rpca_lib.mesh_client_shards(mesh) > 1
+    if sharded:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ax = rpca_lib.mesh_client_axes(mesh)
+        ax = ax if len(ax) > 1 else ax[0]
+        constrain = lambda x, spec: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec)
+        )
+        if mask32 is not None:
+            mask32 = constrain(mask32, P(ax))
+        if w32 is not None:
+            w32 = constrain(w32, P(ax))
+
     def build(mats, key):
         data = jnp.concatenate(mats, axis=0)
         if mask32 is not None:
             data = data * mask32.astype(data.dtype)
+        if sharded:
+            data = constrain(data, P(None, None, ax))
         return Bucket(
             data=data,
             true_dims=jnp.asarray(dims_by_bucket[key], jnp.int32),
@@ -385,7 +409,12 @@ def _ties_bucket(
 
 
 def _fedrpca_bucket(
-    bucket: Bucket, cfg, shrink_fn: Callable, carry=None, svt_rank: int | None = None
+    bucket: Bucket,
+    cfg,
+    shrink_fn: Callable,
+    carry=None,
+    svt_rank: int | None = None,
+    mesh=None,
 ) -> tuple[jnp.ndarray, dict, Any]:
     """One-dispatch FedRPCA over a bucket: ((B, vec) update, diag, carry').
 
@@ -400,7 +429,10 @@ def _fedrpca_bucket(
     ``carry`` is this bucket's cross-round ``BucketCarry`` (or None for the
     stateless call, in which case the returned carry is None too);
     ``svt_rank`` overrides the config's basis-width cap — the two-tier
-    re-pack runs converged tiers at a tighter cap.
+    re-pack runs converged tiers at a tighter cap.  ``mesh`` (multi-shard)
+    routes the ADMM loop through ``robust_pca_bucket_sharded``; the
+    column-mean tail stays a plain einsum (GSPMD partitions it along the
+    constraint ``pack`` placed on the bucket).
     """
     m = bucket.data.astype(jnp.float32)
     col_scaled = cfg.weighting == "data_size_rpca" and bucket.weights is not None
@@ -412,7 +444,12 @@ def _fedrpca_bucket(
         w_uniform = bucket.client_mask / n_eff
     if col_scaled:
         m = m * (bucket.weights * n_eff)[None, None, :]
-    res = rpca_lib.robust_pca_bucket(
+    rpca_fn = rpca_lib.robust_pca_bucket
+    rpca_kwargs = {}
+    if mesh is not None and rpca_lib.mesh_client_shards(mesh) > 1:
+        rpca_fn = rpca_lib.robust_pca_bucket_sharded
+        rpca_kwargs = {"mesh": mesh}
+    res = rpca_fn(
         m,
         bucket.true_dims,
         n_iter=cfg.rpca_iters,
@@ -427,6 +464,7 @@ def _fedrpca_bucket(
         carry=carry,
         return_carry=carry is not None,
         carry_gate=cfg.carry_gate,
+        **rpca_kwargs,
     )
     new_carry = None
     if carry is not None:
@@ -472,6 +510,7 @@ def aggregate_packed(
     mask=None,
     weights=None,
     with_diagnostics: bool = False,
+    mesh=None,
 ):
     """Aggregate stacked client deltas with one batched call per shape bucket.
 
@@ -485,9 +524,16 @@ def aggregate_packed(
     engine zeroes masked bucket columns at pack time and threads normalized
     weights through every bucket op.  Both None -> the legacy unweighted
     dispatch, bit-for-bit.
+
+    ``mesh`` shards every bucket's client axis (DESIGN.md §10): fedrpca
+    runs the shard-mapped ADMM loop, every other method relies on GSPMD
+    partitioning the batched means/elections along the ``pack`` constraint.
+    A one-shard mesh is normalized away — the single-device trace, bitwise.
     """
     cfg = cfg or AggregatorConfig()
     method = cfg.method
+    if mesh is not None and rpca_lib.mesh_client_shards(mesh) == 1:
+        mesh = None
     mask32 = None if mask is None else jnp.asarray(mask, jnp.float32)
     w = _client_weights(mask32, weights)
     if method == "dare":
@@ -497,7 +543,7 @@ def aggregate_packed(
     joint = method == "fedrpca" and cfg.joint_ab
     buckets, spec = pack(
         stacked, granularity=granularity, joint_ab=joint,
-        client_mask=mask32, weights=w,
+        client_mask=mask32, weights=w, mesh=mesh,
     )
 
     updates: dict[BucketKey, jnp.ndarray] = {}
@@ -538,7 +584,7 @@ def aggregate_packed(
     elif method == "fedrpca":
         betas, energies, residuals = {}, {}, {}
         for bkey, bucket in buckets.items():
-            updates[bkey], d, _ = _fedrpca_bucket(bucket, cfg, shrink_fn)
+            updates[bkey], d, _ = _fedrpca_bucket(bucket, cfg, shrink_fn, mesh=mesh)
             betas[bkey], energies[bkey], residuals[bkey] = (
                 d["beta"],
                 d["energy"],
@@ -622,6 +668,11 @@ class AggPlan:
     joint_ab: bool
     carry: bool  # whether step() threads an AggCarry
     tiers: Mapping[BucketKey, TierSpec]
+    # Device mesh the packed client axis shards across (DESIGN.md §10).
+    # Always None when the mesh has a single client shard —
+    # ``plan_aggregation`` normalizes, so ``mesh is None`` IS the
+    # single-device path and sharded steps never retrace against it.
+    mesh: Any = None
 
 
 def _plan_carry(cfg) -> bool:
@@ -640,20 +691,48 @@ def _plan_carry(cfg) -> bool:
     return True
 
 
-def plan_aggregation(stacked: PyTree, cfg=None, *, cohort_size: int | None = None) -> AggPlan:
+def plan_aggregation(
+    stacked: PyTree,
+    cfg=None,
+    *,
+    cohort_size: int | None = None,
+    mesh=None,
+) -> AggPlan:
     """Build the trace-time plan for aggregating trees shaped like ``stacked``.
 
     ``stacked`` may be concrete arrays or tracers — only its structure,
     shapes and dtypes matter.  The initial plan puts every bucket's modules
     in the burn-in tier; ``plan_retier`` moves converged modules to the
     low-rank tier between rounds.
+
+    ``mesh`` requests client-axis sharding: plans validate eagerly (cohort
+    divisible by the shard count, unfused tail) so misconfigurations fail
+    at plan time, not rounds deep inside a jit, and normalize one-shard
+    meshes (the ``(1, 1)`` debug mesh included) to ``mesh=None`` so the
+    single-device trace stays bitwise identical.
     """
     cfg = cfg or AggregatorConfig()
+    if mesh is not None and rpca_lib.mesh_client_shards(mesh) == 1:
+        mesh = None
     granularity = "leaf" if cfg.method == "ties" else "module"
     joint = cfg.method == "fedrpca" and cfg.joint_ab
     _, spec = pack(
         stacked, granularity=granularity, joint_ab=joint, cohort_size=cohort_size
     )
+    if mesh is not None:
+        shards = rpca_lib.mesh_client_shards(mesh)
+        d2 = spec.cohort_size
+        if d2 % shards != 0:
+            raise ValueError(
+                f"cohort size {d2} is not divisible by {shards} mesh shards; "
+                "pad the cohort to a canonical (power-of-two) size or change "
+                "--mesh-shards"
+            )
+        if cfg.method == "fedrpca" and cfg.rpca_fused_tail:
+            raise ValueError(
+                "rpca_fused_tail is single-device (Pallas tail kernels); "
+                "disable it to shard the client axis across a mesh"
+            )
     tiers = {
         key: TierSpec(low_idx=(), full_idx=tuple(range(dims[0])), low_cap=0)
         for key, dims in spec.bucket_dims.items()
@@ -665,6 +744,7 @@ def plan_aggregation(stacked: PyTree, cfg=None, *, cohort_size: int | None = Non
         joint_ab=joint,
         carry=_plan_carry(cfg),
         tiers=tiers,
+        mesh=mesh,
     )
 
 
@@ -729,6 +809,7 @@ def aggregate_planned(
         out = aggregate_packed(
             stacked, cfg, shrink_fn=shrink_fn, key=key, mask=mask,
             weights=weights, with_diagnostics=with_diagnostics,
+            mesh=plan.mesh,
         )
         new_carry = {} if carry is None else carry
         if with_diagnostics:
@@ -739,7 +820,7 @@ def aggregate_planned(
     w = _client_weights(mask32, weights)
     buckets, spec = pack(
         stacked, granularity=plan.granularity, joint_ab=plan.joint_ab,
-        client_mask=mask32, weights=w,
+        client_mask=mask32, weights=w, mesh=plan.mesh,
     )
     if dict(spec.bucket_dims) != dict(plan.spec.bucket_dims):
         raise ValueError(
@@ -767,6 +848,7 @@ def aggregate_planned(
             upd, d, c2 = _fedrpca_bucket(
                 bucket, cfg, shrink_fn,
                 carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
+                mesh=plan.mesh,
             )
             updates[bkey] = upd
             per_mod = dict(d)
@@ -786,6 +868,7 @@ def aggregate_planned(
                 u_t, d_t, c2 = _fedrpca_bucket(
                     sub, cfg, shrink_fn,
                     carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
+                    mesh=plan.mesh,
                 )
                 ia = jnp.asarray(idx, jnp.int32)
                 upd = upd.at[ia].set(u_t.astype(jnp.float32))
@@ -936,9 +1019,16 @@ class AggSession:
     pipeline work the ROADMAP points at.
     """
 
-    def __init__(self, cfg=None, *, shrink_fn: Callable = rpca_lib.soft_threshold):
+    def __init__(
+        self,
+        cfg=None,
+        *,
+        shrink_fn: Callable = rpca_lib.soft_threshold,
+        mesh=None,
+    ):
         self.cfg = cfg or AggregatorConfig()
         self.shrink_fn = shrink_fn
+        self.mesh = mesh
         self.plan: AggPlan | None = None
         self.carry: AggCarry = {}
         self.round_idx = 0
@@ -973,7 +1063,7 @@ class AggSession:
     def step(self, stacked, *, key=None, mask=None, weights=None):
         """Aggregate one round's stacked deltas; returns (update, diag)."""
         if self.plan is None:
-            self.plan = plan_aggregation(stacked, self.cfg)
+            self.plan = plan_aggregation(stacked, self.cfg, mesh=self.mesh)
             self.carry = init_agg_carry(self.plan)
             self._compile()
         elif (

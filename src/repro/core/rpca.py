@@ -935,3 +935,438 @@ def robust_pca_bucket(
         hit=warm.astype(jnp.float32),
     )
     return result, new_carry
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded bucket RPCA (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The packed client axis (d2) of a bucket is the axis that scales — cohorts
+# grow, vec dims don't — so the sharded loop splits client COLUMNS across
+# the mesh's client axes ("pod", "data").  Everything elementwise (shrink,
+# dual ascent, masking) is column-local and runs on the shard untouched.
+# The subspace SVT decomposes around the projected factor W = X @ V:
+#
+#   W      = psum_k( X_k @ V_k )         one (B, d1, r) all-reduce per sweep
+#   (GV)_k = X_k^T @ W                   shard-local rows of G @ V
+#   CholeskyQR / Rayleigh-Ritz           r x r psums, solves replicated
+#   L_k    = (W @ W_rot) coef V_k^T      shard-local columns of L
+#
+# so the d2 x d2 Gram is never materialized and per-ADMM-iteration traffic
+# is (sweeps + 1) * B * d1 * r floats plus a few r x r reductions — constant
+# in the cohort size.  Only the exact-eigh fallback (cold start / residual
+# breach / rank saturation) all-gathers X to form the full Gram; warm-carry
+# rounds take zero fallbacks, so steady-state sharded sessions never gather.
+
+#: Mesh axis names the packed client axis may shard over.
+CLIENT_AXIS_NAMES = ("pod", "data")
+
+
+def mesh_client_axes(mesh) -> tuple:
+    """Client axes of ``mesh`` (same filter as ``launch.mesh.client_axes``)."""
+    return tuple(a for a in mesh.axis_names if a in CLIENT_AXIS_NAMES)
+
+
+def mesh_client_shards(mesh) -> int:
+    """Product of client-axis sizes; 1 means 'take the single-device path'."""
+    if mesh is None:
+        return 1
+    n = 1
+    for a in mesh_client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def robust_pca_bucket_sharded(
+    m: jnp.ndarray,
+    true_dims: jnp.ndarray | None = None,
+    *,
+    mesh,
+    n_iter: int = 50,
+    tol: float | None = None,
+    mu: float | None = None,
+    lam: float | None = None,
+    shrink_fn: Callable = soft_threshold,
+    fused_tail: bool = False,
+    interpret: bool | None = None,
+    client_mask: jnp.ndarray | None = None,
+    svt_mode: str = "gram",
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    svt_fallback_tol: float = 1e-3,
+    carry: BucketCarry | None = None,
+    return_carry: bool = False,
+    carry_gate: float = 1.0,
+) -> RPCAResult:
+    """``robust_pca_bucket`` with the client axis sharded across ``mesh``.
+
+    Same contract as the single-device loop (fp32-allclose results, same
+    carry pytree with the eigenbasis rows client-sharded internally and
+    reassembled on exit), with two hard rules:
+
+      * one client shard (``mesh_client_shards(mesh) == 1``, the ``(1, 1)``
+        debug mesh included) delegates to ``robust_pca_bucket`` — the
+        single-device path stays bitwise identical;
+      * multi-shard requires ``d2 % shards == 0`` (canonical cohort sizes
+        are powers of two, so shard counts of 2/4/... always divide) and
+        an unfused tail (the Pallas tail kernels are single-device).
+
+    The gram svt mode runs the exact projector every iteration, which under
+    sharding means an all-gather of X per iteration — correct but not the
+    scaling path; use ``svt_mode="subspace"`` for collectives that stay
+    constant in the cohort size.
+    """
+    shards = mesh_client_shards(mesh)
+    if shards == 1:
+        return robust_pca_bucket(
+            m, true_dims, n_iter=n_iter, tol=tol, mu=mu, lam=lam,
+            shrink_fn=shrink_fn, fused_tail=fused_tail, interpret=interpret,
+            client_mask=client_mask, svt_mode=svt_mode, svt_rank=svt_rank,
+            svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
+            carry=carry, return_carry=return_carry, carry_gate=carry_gate,
+        )
+    if m.ndim != 3:
+        raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
+    if svt_mode not in SVT_MODES:
+        raise ValueError(f"unknown svt_mode: {svt_mode!r} (expected one of {SVT_MODES})")
+    if fused_tail:
+        raise ValueError(
+            "fused_tail=False is required under client-axis sharding: the "
+            "Pallas tail kernels are single-device (set rpca_fused_tail=False "
+            "or run with one mesh shard)"
+        )
+    b, d1p, d2 = m.shape
+    if d2 % shards != 0:
+        raise ValueError(
+            f"cohort size {d2} is not divisible by {shards} client shards; "
+            "pad the cohort to a canonical (power-of-two) size first"
+        )
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh_client_axes(mesh)
+    ax = axes if len(axes) > 1 else axes[0]
+    d2_loc = d2 // shards
+    orig_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    if true_dims is None:
+        true_dims = jnp.full((b,), d1p, jnp.int32)
+    dims_f = true_dims.astype(jnp.float32)
+    cmask_full = (
+        jnp.ones((d2,), jnp.float32)
+        if client_mask is None
+        else jnp.asarray(client_mask, jnp.float32)
+    )
+    r = subspace_rank(d2, svt_rank)
+    use_subspace = svt_mode == "subspace"
+    has_carry = carry is not None
+    if has_carry:
+        if carry.l.shape != m.shape:
+            raise ValueError(
+                f"carry shape {carry.l.shape} does not match bucket {m.shape}"
+            )
+        if carry.v.shape != (b, d2, r):
+            raise ValueError(
+                f"carry basis shape {carry.v.shape} != {(b, d2, r)}; "
+                "was the carry built with a different svt_rank?"
+            )
+
+    col = P(None, None, ax)
+    rep = P()
+    carry_spec = BucketCarry(
+        l=col, s=col, y=col, v=P(None, ax, None),
+        n_live=rep, n_eff=rep, valid=rep, fall_count=rep, hit=rep,
+    )
+
+    def shard_index():
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def inner(m_k, dims_f, cmask_k, *rest):
+        gs = lambda x: jax.lax.psum(x, ax)
+        m_k = m_k * cmask_k
+        n_eff = jnp.maximum(gs(jnp.sum(cmask_k)), 1.0)
+        abs_sum = gs(jnp.sum(jnp.abs(m_k), axis=(1, 2)))
+        numel = dims_f * n_eff
+        mu_v = jnp.where(
+            abs_sum > _EPS, numel / (4.0 * jnp.maximum(abs_sum, _EPS)), 1.0
+        )
+        if mu is not None:
+            mu_v = jnp.full((b,), mu, jnp.float32)
+        lam_v = (
+            jnp.full((b,), lam, jnp.float32)
+            if lam is not None
+            else 1.0 / jnp.sqrt(jnp.maximum(dims_f, n_eff))
+        )
+        rho = 1.0 / mu_v
+        thresh = rho * lam_v
+        m_norm = jnp.maximum(jnp.sqrt(gs(jnp.sum(m_k * m_k, axis=(1, 2)))), _EPS)
+        n_eff_s = jnp.asarray(n_eff, jnp.float32)
+        rho_b = rho[:, None, None]
+        mu_b = mu_v[:, None, None]
+
+        zeros = jnp.zeros_like(m_k)
+        if has_carry:
+            cin = rest[0]
+            cl, cs, cy = cin.l * cmask_k, cin.s * cmask_k, cin.y * cmask_k
+            init_res = m_k - cl - cs
+            init_err = (
+                jnp.sqrt(gs(jnp.sum(init_res * init_res, axis=(1, 2)))) / m_norm
+            )
+            warm = jnp.logical_and(
+                jnp.asarray(cin.valid),
+                jnp.logical_and(
+                    cin.n_eff == n_eff_s, jnp.all(init_err <= carry_gate)
+                ),
+            )
+            wsel = lambda a: jnp.where(warm, a, 0.0)
+            l0, s0, y0 = wsel(cl), wsel(cs), wsel(cy)
+        else:
+            cin = None
+            warm = jnp.asarray(False)
+            l0 = s0 = y0 = zeros
+
+        def tail(l, y):
+            s = shrink_fn(m_k - l + rho_b * y, thresh[:, None, None]) * cmask_k
+            resid = (m_k - l - s) * cmask_k
+            y_new = (y + mu_b * resid) * cmask_k
+            return s, y_new, jnp.sqrt(gs(jnp.sum(resid * resid, axis=(1, 2))))
+
+        def exact_svt(x_k, t):
+            # Exact fallback: the full d2 x d2 Gram needs every column, so
+            # gather X once, eigh replicated, and slice the projector
+            # application back to this shard's client columns/basis rows.
+            xg = jax.lax.all_gather(x_k, ax, axis=2, tiled=True)
+            g = jnp.einsum("bdc,bde->bce", xg, xg)
+            w_eig, v_full = jnp.linalg.eigh(g)  # ascending
+            s_ = jnp.sqrt(jnp.maximum(w_eig, 0.0))
+            s_shrunk = shrink_fn(s_, t[:, None])
+            coef = jnp.where(s_ > _EPS, s_shrunk / jnp.maximum(s_, _EPS), 0.0)
+            xv = jnp.einsum("bdc,bck->bdk", xg, v_full)
+            v_loc = jax.lax.dynamic_slice_in_dim(
+                v_full, shard_index() * d2_loc, d2_loc, axis=1
+            )  # this shard's client rows of the full eigenbasis
+            l_k = jnp.einsum("bdk,bk,bck->bdc", xv, coef, v_loc)
+            v_top = v_loc[:, :, -r:]
+            n_live = jnp.sum((s_shrunk > 0.0).astype(jnp.int32), axis=-1)
+            return l_k, v_top, n_live, jnp.zeros(t.shape, jnp.float32)
+
+        eye_r = jnp.eye(r, dtype=jnp.float32)
+
+        def ritz_svt(x_k, t, v_k, n_sweeps):
+            # Power sweeps on local rows: W = X V is the only non-tiny
+            # collective; (G V)_k = X_k^T W never leaves the shard.
+            for _ in range(n_sweeps):
+                w = gs(jnp.einsum("bdc,bcr->bdr", x_k, v_k))
+                z_k = jnp.einsum("bdc,bdr->bcr", x_k, w)
+                szz = gs(jnp.einsum("bcr,bcs->brs", z_k, z_k))
+                jitter = (1e-6 / r) * (
+                    jnp.trace(szz, axis1=-2, axis2=-1) + _EPS
+                )[:, None, None]
+                chol = jnp.linalg.cholesky(szz + jitter * eye_r)
+                v_k = jax.lax.linalg.triangular_solve(
+                    chol, z_k, left_side=False, lower=True, transpose_a=True
+                )
+            w = gs(jnp.einsum("bdc,bcr->bdr", x_k, v_k))
+            gv_k = jnp.einsum("bdc,bdr->bcr", x_k, w)
+            t_small = gs(jnp.einsum("bcr,bcs->brs", v_k, gv_k))
+            theta, w_rot = jnp.linalg.eigh(t_small)  # ascending Ritz values
+            vr_k = jnp.einsum("bcr,brs->bcs", v_k, w_rot)
+            gvr_k = jnp.einsum("bcr,brs->bcs", gv_k, w_rot)
+            s_ = jnp.sqrt(jnp.maximum(theta, 0.0))
+            s_shrunk = shrink_fn(s_, t[:, None])
+            coef = jnp.where(s_ > _EPS, s_shrunk / jnp.maximum(s_, _EPS), 0.0)
+            # L_k = (X Vr) coef Vr_k^T with X Vr = W @ W_rot already in hand:
+            # the shard's L columns come from replicated (B, d1, r) factors.
+            xvr = jnp.einsum("bdr,brs->bds", w, w_rot)
+            l_k = jnp.einsum("bds,bs,bcs->bdc", xvr, coef, vr_k)
+            live = (s_shrunk > 0.0).astype(jnp.float32)
+            res = (gvr_k - vr_k * theta[:, None, :]) * live[:, None, :]
+            g_mass = jnp.sum(jnp.maximum(theta, 0.0), axis=-1)
+            rel = jnp.sqrt(gs(jnp.sum(res * res, axis=(1, 2)))) / jnp.maximum(
+                g_mass, _EPS
+            )
+            n_live = jnp.sum(live.astype(jnp.int32), axis=-1)
+            return l_k, vr_k, n_live, rel
+
+        def svt_step(x_k, v_k, n_live, rel_prev, cold):
+            t = rho
+
+            def exact():
+                l_k, v2, live, rel = exact_svt(x_k, t)
+                return l_k, v2, live, rel, jnp.asarray(True)
+
+            def attempt():
+                if svt_sweeps > 1:
+                    l_k, v2, live, rel = jax.lax.cond(
+                        jnp.max(rel_prev) <= 0.1 * svt_fallback_tol,
+                        lambda: ritz_svt(x_k, t, v_k, 1),
+                        lambda: ritz_svt(x_k, t, v_k, svt_sweeps),
+                    )
+                else:
+                    l_k, v2, live, rel = ritz_svt(x_k, t, v_k, max(svt_sweeps, 1))
+                bad = jnp.logical_or(
+                    jnp.any(rel > svt_fallback_tol), jnp.any(live >= r)
+                )
+                return jax.lax.cond(
+                    bad, exact, lambda: (l_k, v2, live, rel, jnp.asarray(False))
+                )
+
+            # All gate predicates derive from psum-reduced or replicated
+            # values, so every shard takes the same branch and the
+            # collectives inside the branches line up.
+            pre_full = jnp.logical_or(cold, jnp.any(n_live >= r))
+            l_k, v2, live2, rel2, fell = jax.lax.cond(pre_full, exact, attempt)
+            rel2 = jnp.where(fell, 0.5 * svt_fallback_tol, rel2)
+            return l_k, v2, live2, rel2, fell
+
+        err0 = jnp.full((b,), jnp.inf, jnp.float32)
+        falls0 = jnp.zeros((), jnp.int32)
+
+        if use_subspace:
+            eye_loc = jax.lax.dynamic_slice_in_dim(
+                jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (b, d2, r)),
+                shard_index() * d2_loc, d2_loc, axis=1,
+            )
+            if has_carry:
+                v0 = jnp.where(warm, cin.v, eye_loc)
+                nl0 = jnp.where(warm, cin.n_live, jnp.full((b,), r, jnp.int32))
+                rel0 = jnp.where(
+                    warm,
+                    jnp.full((b,), 0.5 * svt_fallback_tol, jnp.float32),
+                    jnp.full((b,), jnp.inf, jnp.float32),
+                )
+            else:
+                v0 = eye_loc
+                nl0 = jnp.full((b,), r, jnp.int32)
+                rel0 = jnp.full((b,), jnp.inf, jnp.float32)
+
+            def step_sub(l, s, y, v_k, n_live, rel, it):
+                x_k = m_k - s + rho_b * y
+                cold = jnp.logical_and(it == 0, jnp.logical_not(warm))
+                l2, v2, live2, rel2, fell = svt_step(x_k, v_k, n_live, rel, cold)
+                s2, y2, rnorm = tail(l2, y)
+                return l2, s2, y2, rnorm / m_norm, v2, live2, rel2, fell
+
+        else:
+
+            def step_gram(l, s, y):
+                x_k = m_k - s + rho_b * y
+                l2, _, _, _ = exact_svt(x_k, rho)
+                s2, y2, rnorm = tail(l2, y)
+                return l2, s2, y2, rnorm / m_norm
+
+        falls = falls0
+        if use_subspace:
+            if tol is None:
+
+                def body_sub(it, state):
+                    l, s, y, _err, v_k, nl, rl, fc = state
+                    l2, s2, y2, err2, v2, nl2, rl2, fell = step_sub(
+                        l, s, y, v_k, nl, rl, it
+                    )
+                    return (l2, s2, y2, err2, v2, nl2, rl2, fc + fell.astype(jnp.int32))
+
+                l, s, y, err, v_f, nl_f, _, falls = jax.lax.fori_loop(
+                    0, n_iter, body_sub, (l0, s0, y0, err0, v0, nl0, rel0, falls0)
+                )
+                n_done = jnp.full((b,), n_iter, jnp.int32)
+            else:
+
+                def cond_sub(state):
+                    _, _, _, err, i = state[3], state[3], state[3], state[3], state[4]
+                    return jnp.logical_and(state[4] < n_iter, jnp.any(state[3] > tol))
+
+                def body_sub(state):
+                    l, s, y, err, i, niter, v_k, nl, rl, fc = state
+                    l2, s2, y2, err2, v2, nl2, rl2, fell = step_sub(
+                        l, s, y, v_k, nl, rl, i
+                    )
+                    active = err > tol
+                    sel = lambda new, old: jnp.where(active[:, None, None], new, old)
+                    selv = lambda new, old: jnp.where(active, new, old)
+                    return (
+                        sel(l2, l), sel(s2, s), sel(y2, y), selv(err2, err),
+                        i + 1, jnp.where(active, i + 1, niter),
+                        sel(v2, v_k), selv(nl2, nl), selv(rl2, rl),
+                        fc + fell.astype(jnp.int32),
+                    )
+
+                init = (
+                    l0, s0, y0, err0, jnp.asarray(0, jnp.int32),
+                    jnp.zeros((b,), jnp.int32), v0, nl0, rel0, falls0,
+                )
+                l, s, y, err, _, n_done, v_f, nl_f, _, falls = jax.lax.while_loop(
+                    cond_sub, body_sub, init
+                )
+        else:
+            if tol is None:
+
+                def body(_, state):
+                    l, s, y, _err = state
+                    return step_gram(l, s, y)
+
+                l, s, y, err = jax.lax.fori_loop(0, n_iter, body, (l0, s0, y0, err0))
+                n_done = jnp.full((b,), n_iter, jnp.int32)
+            else:
+
+                def cond(state):
+                    return jnp.logical_and(state[4] < n_iter, jnp.any(state[3] > tol))
+
+                def body(state):
+                    l, s, y, err, i, niter = state
+                    l2, s2, y2, err2 = step_gram(l, s, y)
+                    active = err > tol
+                    sel = lambda new, old: jnp.where(active[:, None, None], new, old)
+                    return (
+                        sel(l2, l), sel(s2, s), sel(y2, y),
+                        jnp.where(active, err2, err),
+                        i + 1, jnp.where(active, i + 1, niter),
+                    )
+
+                init = (
+                    l0, s0, y0, err0, jnp.asarray(0, jnp.int32),
+                    jnp.zeros((b,), jnp.int32),
+                )
+                l, s, y, err, _, n_done = jax.lax.while_loop(cond, body, init)
+            v_f = None
+            nl_f = None
+
+        l = l * cmask_k
+        outs = (l, s, n_done, err)
+        if not return_carry:
+            return outs
+        if use_subspace:
+            v_out, nl_out = v_f, nl_f
+        elif has_carry:
+            v_out, nl_out = cin.v, cin.n_live
+        else:
+            v_out = jnp.zeros((b, d2_loc, r), jnp.float32)
+            nl_out = jnp.zeros((b,), jnp.int32)
+        new_carry = BucketCarry(
+            l=l, s=s, y=y, v=v_out, n_live=nl_out, n_eff=n_eff_s,
+            valid=jnp.ones((), bool), fall_count=falls,
+            hit=warm.astype(jnp.float32),
+        )
+        return outs + (new_carry,)
+
+    in_specs = [col, rep, P(ax)]
+    args = [m, dims_f, cmask_full]
+    if has_carry:
+        in_specs.append(carry_spec)
+        args.append(carry)
+    out_specs = (col, col, rep, rep)
+    if return_carry:
+        out_specs = out_specs + (carry_spec,)
+    mapped = shard_map(
+        inner, mesh, in_specs=tuple(in_specs), out_specs=out_specs,
+        check_rep=False,
+    )
+    out = mapped(*args)
+    l, s, n_done, err = out[:4]
+    result = RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)
+    if not return_carry:
+        return result
+    return result, out[4]

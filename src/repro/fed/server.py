@@ -25,6 +25,7 @@ function (see tests/test_cohort.py's retrace regression test).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -125,6 +126,14 @@ class FedRunConfig:
     # synchronous schedule, bit-for-bit — same phases, same order).
     pipeline: bool = False
     staleness: int = 1
+    # Shard the packed client axis of the aggregation across a device mesh
+    # (DESIGN.md §10).  0/1 = single-device (bitwise the legacy round);
+    # n > 1 builds launch.mesh.make_host_mesh(n) — the process must have
+    # been started with XLA_FLAGS=--xla_force_host_platform_device_count>=n
+    # (or a real backend with >= n devices).  Packed engine only: the
+    # reference engine is the single-device parity oracle and runs
+    # replicated with a warning.
+    mesh_shards: int = 0
 
 
 def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
@@ -288,6 +297,19 @@ def make_round_phases(
         and cfg.engine == "packed"
         and cfg.aggregator.method == "fedrpca"
     )
+    mesh = None
+    if cfg.mesh_shards > 1:
+        if cfg.engine != "packed":
+            warnings.warn(
+                f"mesh_shards={cfg.mesh_shards} with engine="
+                f"{cfg.engine!r}: the reference engine is the single-device "
+                "parity oracle; running the aggregation replicated",
+                stacklevel=2,
+            )
+        else:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(cfg.mesh_shards)
     plan = None
     if carry_on:
         if lora_template is None:
@@ -301,7 +323,7 @@ def make_round_phases(
             lambda x: jnp.zeros((slots,) + jnp.shape(x), jnp.asarray(x).dtype),
             lora_template,
         )
-        plan = engine_lib.plan_aggregation(example, cfg.aggregator)
+        plan = engine_lib.plan_aggregation(example, cfg.aggregator, mesh=mesh)
 
     @jax.jit
     def local_phase(state: RoundState, n_active=None):
@@ -395,7 +417,7 @@ def make_round_phases(
     def agg_phase(lora_global, agg_carry, bundle: LocalBundle, scale):
         agg_kw = dict(
             engine=cfg.engine, key=bundle.agg_key, mask=bundle.mask,
-            weights=bundle.weights,
+            weights=bundle.weights, mesh=mesh,
         )
         new_carry = agg_carry
         if plan is not None:

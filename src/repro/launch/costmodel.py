@@ -473,3 +473,155 @@ def _lora_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> float:
     if cfg.encoder_decoder:  # cross-attention adapters
         total += cfg.n_layers * ((cfg.d_model * r + r * cfg.q_dim) + (cfg.d_model * r + r * cfg.kv_dim))
     return total * dtype_bytes
+
+
+# CPU-calibrated roofline constants for the mesh-sharded aggregation model
+# (bytes/us, flops/us, us).  Host-platform "devices" are XLA CPU threads:
+# collectives are memcpys through shared memory (fast, but each carries a
+# real dispatch overhead), and every thread timeshares the container's
+# core(s) — see ``shared_host_core`` below.  Calibrated against the
+# ``mode:"mesh"`` cells of BENCH_agg.json on this container.
+MESH_FLOPS_PEAK = 5.0e4
+MESH_BW_HBM = 3.0e4
+MESH_BW_COLL = 2.0e4
+MESH_COLL_OVERHEAD_US = 150.0
+# Per-aggregation-call floor: session-step Python plus the XLA dispatch
+# chain, calibrated against the warm 1-shard BENCH_agg mesh cells on the
+# CI host (where it dominates the small-cohort cells).
+MESH_DISPATCH_US = 6000.0
+
+
+def mesh_agg_costs(
+    *,
+    n_modules: int,
+    padded_vec: int,
+    cohort: int,
+    shards: int,
+    rpca_iters: int = 30,
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    warm: bool = True,
+    dtype_bytes: int = 4,
+    shared_host_core: bool = True,
+) -> Dict[str, float]:
+    """Analytic round cost of one mesh-sharded RPCA bucket (DESIGN.md §10).
+
+    Per ADMM iteration the client-axis-sharded loop does, per shard of
+    ``c_loc = cohort / shards`` columns:
+
+      column-local tail — shrink / residual / dual on (B, d1, c_loc) blocks
+        (pure elementwise, zero communication);
+      subspace SVT — per power sweep one (B, d1, r) all-reduce of the
+        projected factor W = X V plus an r x r Gram reduce, with the
+        2 * B * d1 * c_loc * r matmul FLOPs staying shard-local; a final
+        r x r Rayleigh-Ritz solve replicated.
+
+    ``warm=True`` models the steady-state carry path (sweep-cut to one
+    sweep, zero eigh fallbacks — the acceptance criterion); ``warm=False``
+    models the cold/exact path, whose per-iteration all-gather of X
+    (B * d1 * cohort bytes) and replicated d2 x d2 eigh are the non-scaling
+    terms the subspace path exists to avoid.
+
+    ``shared_host_core=True`` (the CI/container reality) divides the
+    per-shard FLOP peak by the shard count — host-platform devices are
+    threads on the same core(s), so sharding buys *memory headroom and the
+    collective schedule*, not wall-clock compute.  Set it False for the
+    real-accelerator prediction, where per-shard compute time drops 1/n and
+    the comm/compute crossover appears; ``mesh_crossover_shards`` sweeps it.
+
+    Returns per-round totals: local flops/bytes per shard, all-reduced and
+    gathered bytes, collective count, predicted peak bytes per shard, and
+    the ``us`` roofline estimate split into compute/comm.
+    """
+    if cohort % shards:
+        raise ValueError(f"cohort {cohort} not divisible by {shards} shards")
+    b, d1 = float(n_modules), float(padded_vec)
+    c_loc = cohort / shards
+    r = float(max(1, min(svt_rank, cohort // 2)) if cohort > 1 else 1)
+    sweeps_eff = 1.0 if warm else float(max(svt_sweeps, 1))
+    applies = sweeps_eff + 1.0  # power sweeps + the final Ritz G @ V
+
+    tail_flops = 10.0 * b * d1 * c_loc
+    sweep_flops = applies * 4.0 * b * d1 * c_loc * r
+    small_flops = 4.0 * b * c_loc * r * r + 30.0 * b * r**3
+    l_flops = 2.0 * b * d1 * r * r + 2.0 * b * d1 * c_loc * r
+    local_flops = tail_flops + sweep_flops + small_flops + l_flops
+    local_bytes = (8.0 + 2.0 * applies) * b * d1 * c_loc * dtype_bytes
+
+    ring = 2.0 * (shards - 1) / shards if shards > 1 else 0.0
+    allreduce_bytes = applies * b * d1 * r * dtype_bytes * ring
+    allreduce_bytes += (applies + 1.0) * b * r * r * dtype_bytes * ring
+    n_collectives = (2.0 * applies + 1.0) if shards > 1 else 0.0
+    gather_bytes = 0.0
+    if not warm:
+        # Exact path: gather X, form the d2 x d2 Gram and eigh REPLICATED —
+        # neither divides by the shard count.
+        gather_bytes = b * d1 * cohort * dtype_bytes * (
+            (shards - 1) / shards if shards > 1 else 0.0
+        )
+        local_flops += 2.0 * b * d1 * cohort**2 + 26.0 * b * cohort**3
+        local_bytes += 2.0 * b * d1 * cohort * dtype_bytes
+        n_collectives += 1.0 if shards > 1 else 0.0
+
+    it = float(rpca_iters)
+    local_flops *= it
+    local_bytes *= it
+    allreduce_bytes *= it
+    gather_bytes *= it
+    n_collectives *= it
+
+    # Resident per shard: M/S/Y/L + X + two tail temporaries, plus the
+    # carried basis; the cold path transiently adds the gathered X and Gram.
+    peak = 8.0 * b * d1 * c_loc * dtype_bytes + b * c_loc * r * dtype_bytes
+    if not warm:
+        peak += b * d1 * cohort * dtype_bytes + b * cohort**2 * dtype_bytes
+
+    flops_peak = MESH_FLOPS_PEAK / (shards if shared_host_core else 1)
+    compute_us = max(local_flops / flops_peak, local_bytes / MESH_BW_HBM)
+    comm_us = (
+        (allreduce_bytes + gather_bytes) / MESH_BW_COLL
+        + n_collectives * MESH_COLL_OVERHEAD_US
+    )
+    us = compute_us + comm_us + MESH_DISPATCH_US
+    return {
+        "local_flops": local_flops,
+        "local_hbm_bytes": local_bytes,
+        "allreduce_bytes": allreduce_bytes,
+        "gather_bytes": gather_bytes,
+        "n_collectives": n_collectives,
+        "peak_bytes_per_shard": peak,
+        "compute_us": compute_us,
+        "comm_us": comm_us,
+        "us": us,
+        "comm_fraction": comm_us / us if us > 0 else 0.0,
+    }
+
+
+def mesh_crossover_shards(
+    *,
+    n_modules: int,
+    padded_vec: int,
+    cohort: int,
+    rpca_iters: int = 30,
+    svt_rank: int = 8,
+    svt_sweeps: int = 2,
+    warm: bool = True,
+    max_shards: int = 64,
+) -> int | None:
+    """Smallest power-of-two shard count predicted to beat one device on
+    real hardware (per-shard compute scales 1/n; ``shared_host_core=False``).
+    None if communication overhead swamps the saving by ``max_shards`` —
+    the regime where the cohort is too small to be worth distributing.
+    """
+    kw = dict(
+        n_modules=n_modules, padded_vec=padded_vec, cohort=cohort,
+        rpca_iters=rpca_iters, svt_rank=svt_rank, svt_sweeps=svt_sweeps,
+        warm=warm, shared_host_core=False,
+    )
+    base = mesh_agg_costs(shards=1, **kw)["us"]
+    n = 2
+    while n <= max_shards:
+        if cohort % n == 0 and mesh_agg_costs(shards=n, **kw)["us"] < base:
+            return n
+        n *= 2
+    return None

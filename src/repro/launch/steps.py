@@ -181,6 +181,7 @@ def make_agg_step(
     *,
     engine: str = "packed",
     client_weights=None,
+    mesh=None,
 ) -> Callable:
     """Server half of the federated step, independently dispatchable.
 
@@ -199,6 +200,10 @@ def make_agg_step(
     over a zeros delta tree, as ``launch/train.py`` does) and its metrics
     grow the carry health scalars.  With carry off the return arity drops
     the carry, matching the legacy contract.
+
+    ``mesh`` shards the packed client axis of the aggregation across the
+    mesh's client axes (packed engine only — DESIGN.md §10); one-shard
+    meshes are normalized away, keeping the single-device trace bitwise.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
     if agg_cfg.carry_mode not in CARRY_MODES:
@@ -210,6 +215,15 @@ def make_agg_step(
         and engine == "packed"
         and agg_cfg.method == "fedrpca"
     )
+    if mesh is not None and engine != "packed":
+        from repro.core.rpca import mesh_client_shards
+
+        if mesh_client_shards(mesh) > 1:
+            raise ValueError(
+                "mesh-sharded aggregation requires engine='packed' (the "
+                "reference engine is the single-device parity oracle)"
+            )
+        mesh = None
     use_weights = agg_cfg.weighting in ("data_size", "data_size_rpca")
     if use_weights and client_weights is None:
         raise ValueError(
@@ -230,14 +244,15 @@ def make_agg_step(
             # Plan at trace time from the deltas' own structure (static),
             # thread the cross-round carry, and surface the session health
             # in the metrics so training logs show carry regressions.
-            plan = engine_lib.plan_aggregation(deltas, agg_cfg)
+            plan = engine_lib.plan_aggregation(deltas, agg_cfg, mesh=mesh)
             update, new_carry, ediag = engine_lib.aggregate_planned(
                 plan, deltas, agg_carry, key=agg_key, mask=mask,
                 weights=weights, with_diagnostics=True,
             )
             return apply(lora_global, update, scale), rpca_diag_summary(ediag), new_carry
         update = aggregate(
-            deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights
+            deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights,
+            mesh=mesh,
         )
         return apply(lora_global, update, scale), {}
 

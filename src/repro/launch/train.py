@@ -21,8 +21,34 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import types
 from typing import Any, NamedTuple
+
+
+def _preset_host_devices(argv) -> None:
+    """Self-set the host device count for ``--mesh-shards`` N runs.
+
+    jax locks the device count at first init, so the flag must land in
+    XLA_FLAGS before the ``import jax`` below (the launch/dryrun.py idiom).
+    Peeks at argv instead of argparse because parsing happens long after
+    the import; a user-provided XLA_FLAGS with the flag wins.
+    """
+    n = 0
+    for i, a in enumerate(argv):
+        if a == "--mesh-shards" and i + 1 < len(argv):
+            n = int(argv[i + 1])
+        elif a.startswith("--mesh-shards="):
+            n = int(a.split("=", 1)[1])
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
+_preset_host_devices(sys.argv[1:])
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +149,13 @@ def main(argv=None):
                     help="pipeline depth bound: how many aggregation "
                          "dispatches may stay in flight (0 = synchronous "
                          "schedule; landed updates are scaled by 1/(1+s))")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard the aggregation's packed client axis across "
+                         "this many mesh shards (DESIGN.md §10; 0/1 = single "
+                         "device, bitwise the legacy round; sets "
+                         "--xla_force_host_platform_device_count on CPU "
+                         "automatically). Packed engine only — the reference "
+                         "engine runs replicated with a warning")
     ap.add_argument("--heterogeneity", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -146,6 +179,22 @@ def main(argv=None):
         )
     if args.staleness < 0:
         ap.error(f"--staleness must be >= 0, got {args.staleness}")
+    if args.mesh_shards < 0:
+        ap.error(f"--mesh-shards must be >= 0, got {args.mesh_shards}")
+    mesh = None
+    if args.mesh_shards > 1:
+        if args.engine != "packed":
+            log.warning(
+                "--mesh-shards %d with --engine %s: the reference engine is "
+                "the single-device parity oracle; running the aggregation "
+                "replicated", args.mesh_shards, args.engine,
+            )
+        else:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(args.mesh_shards)
+            log.info("aggregation client axis sharded over %d host devices",
+                     args.mesh_shards)
     if args.pipeline and args.staleness > 1:
         ap.error(
             f"--staleness {args.staleness} exceeds the double buffer: the "
@@ -182,7 +231,9 @@ def main(argv=None):
         example = jax.tree_util.tree_map(
             lambda x: jnp.zeros((args.clients,) + x.shape, x.dtype), lora
         )
-        carry = engine_lib.init_agg_carry(engine_lib.plan_aggregation(example, agg))
+        carry = engine_lib.init_agg_carry(
+            engine_lib.plan_aggregation(example, agg, mesh=mesh)
+        )
 
     start_round = 0
     if args.resume and args.ckpt_dir:
@@ -225,6 +276,7 @@ def main(argv=None):
         steps_lib.make_agg_step(
             agg, engine=args.engine,
             client_weights=client_sizes / client_sizes.sum(),
+            mesh=mesh,
         )
     )
 

@@ -233,3 +233,33 @@ def stacked_lora_pspecs(lora: PyTree, client_axes: Tuple[str, ...]) -> PyTree:
     return jax.tree_util.tree_map(
         lambda l: P(client_axes, *([None] * (l.ndim - 1))), lora
     )
+
+
+def bucket_pspec(client_axes: Tuple[str, ...]) -> P:
+    """Packed shape-bucket layout ``(modules, padded_vec, cohort)``: client
+    columns shard-major over the client mesh axes, everything else
+    replicated — the layout the sharded agg engine's ``shard_map`` loop
+    assumes (DESIGN.md §10)."""
+    return P(None, None, client_axes)
+
+
+def bucket_carry_pspecs(client_axes: Tuple[str, ...]):
+    """PartitionSpecs for one ``rpca.BucketCarry`` under client sharding.
+
+    The ADMM iterates ``l``/``s``/``y`` shard their client columns exactly
+    like the bucket data; the eigenbasis ``v`` ``(B, d2, r)`` shards its
+    *rows* (one row per client) along the same axes, so ``x_k @ v_k``
+    partial products psum into the replicated projected factor; the
+    live-rank / fingerprint / health scalars are replicated.  Returned as a
+    ``BucketCarry`` of specs so it maps 1:1 onto the carry pytree (usable
+    directly as ``shard_map`` in/out specs).
+    """
+    from repro.core import rpca as rpca_lib
+
+    col = bucket_pspec(client_axes)
+    rep = P()
+    return rpca_lib.BucketCarry(
+        l=col, s=col, y=col,
+        v=P(None, client_axes, None),
+        n_live=rep, n_eff=rep, valid=rep, fall_count=rep, hit=rep,
+    )

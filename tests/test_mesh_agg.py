@@ -1,0 +1,269 @@
+"""Mesh-sharded aggregation (DESIGN.md §10): shard-count invariance.
+
+The contract under test: sharding the packed client axis over host devices
+is a pure execution-layout choice — every method, both SVT modes, masked
+cohorts, and cross-round carry must produce the same numbers at 1, 2, and
+4 shards (bitwise at one shard, fp32-allclose beyond, where only the
+collective reduction order differs), and the warm-carry path must stay
+eigh-fallback-free under sharding exactly as it is on one device.
+
+The multi-device half of the suite needs 4 forced host devices
+(XLA_FLAGS=--xla_force_host_platform_device_count=4 — the CI mesh job
+sets it; conftest.py deliberately never does) and self-skips otherwise,
+so the tier-1 run stays single-device.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AggregatorConfig, AggSession, aggregate
+from repro.core import rpca as rpca_lib
+from repro.core.engine import plan_aggregation
+from repro.launch import costmodel
+from repro.launch.mesh import client_shard_count, make_debug_mesh, make_host_mesh
+from repro.models import partitioning
+
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4",
+)
+
+
+def planted_bucket(rng, b=2, d=24, nc=8):
+    """Low-rank core + sparse spikes: the FedRPCA workload model."""
+    u = rng.normal(size=(b, d, 2))
+    w = rng.normal(size=(b, 2, nc))
+    sp = np.where(rng.random((b, d, nc)) < 0.05,
+                  5.0 * rng.normal(size=(b, d, nc)), 0.0)
+    return jnp.asarray(u @ w + sp, jnp.float32)
+
+
+def round_trees(rng, nc=8, rounds=4, drift=0.02):
+    """Correlated multi-round deltas (drifting shared core + persistent
+    spikes) — the regime where warm carry rounds stay fallback-free."""
+    shapes = {"A": (4, 6, 8), "head": (12, 4)}
+    cores, spikes = {}, {}
+    for k, s in shapes.items():
+        d = int(np.prod(s))
+        cores[k] = (rng.normal(size=(d, 2)), rng.normal(size=(2, nc)))
+        supp = rng.random((d, nc)) < 0.05
+        spikes[k] = np.where(supp, 5.0 * rng.normal(size=(d, nc)), 0.0)
+    out = []
+    for _t in range(rounds):
+        tree = {}
+        for k, s in shapes.items():
+            u, w = cores[k]
+            w_t = w + drift * rng.normal(size=w.shape)
+            sp_t = spikes[k] * (1.0 + 0.05 * rng.normal(size=spikes[k].shape))
+            tree[k] = jnp.asarray((u @ w_t + sp_t).T.reshape(nc, *s), jnp.float32)
+        out.append(tree)
+    return out
+
+
+def session_cfg(**kw):
+    base = dict(
+        method="fedrpca", rpca_iters=60, rpca_fixed_iters=False, rpca_tol=1e-5,
+        svt_mode="subspace", carry_mode="subspace",
+    )
+    base.update(kw)
+    return AggregatorConfig(**base)
+
+
+def assert_trees_close(a, b, atol=1e-4, rtol=1e-4):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            atol=atol, rtol=rtol,
+        ),
+        a, b,
+    )
+
+
+class TestSingleDevice:
+    """Always-run half: the one-shard path and the static plumbing."""
+
+    @pytest.mark.parametrize("svt_mode", ["gram", "subspace"])
+    def test_one_shard_delegates_bitwise(self, rng, svt_mode):
+        """At one client shard the sharded entry point must BE the
+        unsharded kernel (delegation before shard_map), not a 1-shard
+        shard_map of it — pinned bitwise, not allclose."""
+        m = planted_bucket(rng)
+        ref = rpca_lib.robust_pca_bucket(m, n_iter=15, svt_mode=svt_mode)
+        for mesh in (None, make_debug_mesh()):
+            got = rpca_lib.robust_pca_bucket_sharded(
+                m, mesh=mesh, n_iter=15, svt_mode=svt_mode
+            )
+            assert np.array_equal(np.asarray(ref.low_rank), np.asarray(got.low_rank))
+            assert np.array_equal(np.asarray(ref.sparse), np.asarray(got.sparse))
+
+    def test_plan_normalizes_one_shard_mesh(self, rng):
+        """A 1-client-shard mesh IS the single-device path: the plan pins
+        mesh=None so downstream jit caches can never split on it."""
+        tree = {"w": jnp.asarray(rng.normal(size=(8, 4, 8)), jnp.float32)}
+        plan = plan_aggregation(tree, AggregatorConfig(method="fedrpca"),
+                                mesh=make_debug_mesh())
+        assert plan.mesh is None
+
+    def test_make_host_mesh_validates(self):
+        with pytest.raises(ValueError):
+            make_host_mesh(0)
+        with pytest.raises(RuntimeError, match="xla_force_host_platform_device_count"):
+            make_host_mesh(4096)
+
+    def test_shard_count_helpers_agree(self):
+        meshes = [None, make_debug_mesh()]
+        if jax.device_count() >= 2:
+            meshes.append(make_host_mesh(2))
+        for mesh in meshes:
+            assert client_shard_count(mesh) == rpca_lib.mesh_client_shards(mesh)
+
+    def test_bucket_carry_pspecs_match_layout(self):
+        """partitioning's exported carry specs must match the layout the
+        sharded kernel actually uses: column-sharded l/s/y, row-sharded v,
+        replicated scalars."""
+        P = jax.sharding.PartitionSpec
+        specs = partitioning.bucket_carry_pspecs(("data",))
+        assert isinstance(specs, rpca_lib.BucketCarry)
+        col = P(None, None, ("data",))
+        assert specs.l == col and specs.s == col and specs.y == col
+        assert specs.v == P(None, ("data",), None)
+        for scalar in (specs.n_live, specs.n_eff, specs.valid,
+                       specs.fall_count, specs.hit):
+            assert scalar == P()
+        assert partitioning.bucket_pspec(("data",)) == col
+
+    def test_mesh_agg_costs_sanity(self):
+        kw = dict(n_modules=8, padded_vec=64, cohort=64, rpca_iters=20)
+        with pytest.raises(ValueError):
+            costmodel.mesh_agg_costs(shards=3, cohort=65, n_modules=8,
+                                     padded_vec=64)
+        c1 = costmodel.mesh_agg_costs(shards=1, **kw)
+        c4 = costmodel.mesh_agg_costs(shards=4, **kw)
+        warm4 = costmodel.mesh_agg_costs(shards=4, warm=True, **kw)
+        cold4 = costmodel.mesh_agg_costs(shards=4, warm=False, **kw)
+        assert c1["us"] > 0 and c4["us"] > 0
+        # Sharding's guaranteed win: per-device resident footprint.
+        assert c4["peak_bytes_per_shard"] < c1["peak_bytes_per_shard"]
+        # Warm rounds skip the gather + replicated Gram/eigh burn-in.
+        assert warm4["us"] < cold4["us"]
+        assert warm4["gather_bytes"] == 0.0
+        # One shard has nobody to talk to.
+        assert c1["allreduce_bytes"] == 0.0
+        cross = costmodel.mesh_crossover_shards(
+            n_modules=8, padded_vec=64, cohort=512
+        )
+        assert cross is None or (cross & (cross - 1)) == 0
+
+
+METHOD_CONFIGS = [
+    pytest.param(AggregatorConfig(method="fedavg"), id="fedavg"),
+    pytest.param(AggregatorConfig(method="task_arithmetic", beta=2.5),
+                 id="task_arithmetic"),
+    pytest.param(AggregatorConfig(method="ties", ties_keep=0.2), id="ties"),
+    pytest.param(AggregatorConfig(method="fedexp"), id="fedexp"),
+    pytest.param(AggregatorConfig(method="dare", dare_drop=0.5), id="dare"),
+    pytest.param(AggregatorConfig(method="fedrpca", rpca_iters=25,
+                                  svt_mode="subspace"), id="fedrpca-subspace"),
+    pytest.param(AggregatorConfig(method="fedrpca", rpca_iters=25), id="fedrpca-gram"),
+    pytest.param(
+        AggregatorConfig(method="fedrpca", rpca_fixed_iters=False,
+                         rpca_tol=1e-4, rpca_iters=50),
+        id="fedrpca-tol",
+    ),
+]
+
+
+@needs4
+class TestShardInvariance:
+    """Multi-device half: 1 vs 2 vs 4 shards must agree fp32-allclose."""
+
+    def _tree(self, rng, nc=8):
+        mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+        return {"A": mk(nc, 4, 6, 8), "head": mk(nc, 12, 4)}
+
+    @pytest.mark.parametrize("cfg", METHOD_CONFIGS)
+    def test_methods_masked(self, cfg, rng):
+        """Every method, masked partial-participation cohort: packed engine
+        on a 2- and 4-shard mesh matches the unsharded packed run and the
+        reference oracle."""
+        tree = self._tree(rng)
+        mask = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+        key = jax.random.PRNGKey(3)
+        ref = aggregate(tree, cfg, engine="reference", mask=mask, key=key)
+        base = aggregate(tree, cfg, engine="packed", mask=mask, key=key)
+        assert_trees_close(ref, base, atol=1e-5, rtol=1e-5)
+        for shards in (2, 4):
+            got = aggregate(tree, cfg, engine="packed", mask=mask, key=key,
+                            mesh=make_host_mesh(shards))
+            assert_trees_close(base, got, atol=1e-5, rtol=1e-5)
+
+    def test_tol_mode_trip_counts_match(self, rng):
+        """Tolerance-driven ADMM must take the SAME number of iterations
+        sharded and not: the while-condition reduces over a psum'd
+        residual, so the trip count is a sharp invariance probe."""
+        m = planted_bucket(rng, b=3, d=32, nc=8)
+        ref = rpca_lib.robust_pca_bucket(m, n_iter=50, tol=1e-4,
+                                         svt_mode="subspace")
+        for shards in (2, 4):
+            got = rpca_lib.robust_pca_bucket_sharded(
+                m, mesh=make_host_mesh(shards), n_iter=50, tol=1e-4,
+                svt_mode="subspace",
+            )
+            assert np.array_equal(np.asarray(ref.n_iter), np.asarray(got.n_iter))
+            np.testing.assert_allclose(np.asarray(ref.low_rank),
+                                       np.asarray(got.low_rank),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_plan_validation(self, rng):
+        mesh = make_host_mesh(2)
+        odd = {"w": jnp.asarray(rng.normal(size=(7, 4, 8)), jnp.float32)}
+        with pytest.raises(ValueError, match="divisible"):
+            plan_aggregation(odd, AggregatorConfig(method="fedrpca"), mesh=mesh)
+        even = {"w": jnp.asarray(rng.normal(size=(8, 4, 8)), jnp.float32)}
+        with pytest.raises(ValueError, match="fused_tail|fused-tail"):
+            plan_aggregation(
+                even,
+                AggregatorConfig(method="fedrpca", rpca_fused_tail=True),
+                mesh=mesh,
+            )
+
+    def test_reference_engine_refuses_mesh(self, rng):
+        tree = self._tree(rng)
+        with pytest.raises(ValueError, match="reference engine"):
+            aggregate(tree, AggregatorConfig(method="fedrpca"),
+                      engine="reference", mesh=make_host_mesh(2))
+
+
+@needs4
+class TestShardedCarry:
+    """Cross-round carry under sharding: warm equivalence and the
+    zero-fallback contract."""
+
+    def _run(self, mesh, trees):
+        sess = AggSession(session_cfg(), mesh=mesh)
+        outs, falls, hits = [], [], []
+        for tree in trees:
+            out, diag = sess.step(tree)
+            outs.append(jax.tree_util.tree_map(np.asarray, out))
+            falls.append(int(diag.scalars["fallback_count"]))
+            hits.append(float(diag.scalars["carry_hit_rate"]))
+        return outs, falls, hits
+
+    def test_warm_carry_equivalent_across_shard_counts(self, rng):
+        trees = round_trees(rng, nc=8, rounds=4)
+        base_outs, base_falls, _ = self._run(None, trees)
+        for shards in (2, 4):
+            outs, falls, _ = self._run(make_host_mesh(shards), trees)
+            assert falls == base_falls
+            for a, b in zip(base_outs, outs):
+                assert_trees_close(a, b)
+
+    def test_warm_rounds_fallback_free_sharded(self, rng):
+        """The acceptance bar: on correlated rounds, the 4-shard warm path
+        reuses the carried subspace every round — zero eigh fallbacks and a
+        full carry hit rate, exactly like one device."""
+        trees = round_trees(rng, nc=8, rounds=4)
+        _, falls, hits = self._run(make_host_mesh(4), trees)
+        assert all(f == 0 for f in falls[1:])
+        assert all(h == 1.0 for h in hits[1:])
