@@ -97,8 +97,11 @@ from repro.core import AggregatorConfig, AggSession, aggregate  # noqa: E402
 #: per-request-gather vs merged adapter-count x batch throughput cells);
 #: 5 added the mesh-sharded aggregation records (mode="mesh": 1/2/4 host-
 #: device shard sweeps, cold + warm-carry, measured vs
-#: costmodel.mesh_agg_costs-predicted wall time and peak bytes).
-SCHEMA_VERSION = 5
+#: costmodel.mesh_agg_costs-predicted wall time and peak bytes); 6 added
+#: the fault-tolerance records (mode="faults": rounds-to-target and final
+#: accuracy under 0/10/30% scale-corruption with the quarantine on vs
+#: off, DESIGN.md §11).
+SCHEMA_VERSION = 6
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
@@ -565,8 +568,75 @@ def bench_mesh(shards: int, n_clients: int,
     return cold_s, warm_s
 
 
+def bench_faults(rounds: int, n_clients: int = 16) -> None:
+    """Convergence under injected corruption, quarantine on vs off.
+
+    Drives the full fed simulation on the synthetic non-IID task with
+    ``corrupt_mode="scale"`` (norm blow-up — finite, so it degrades
+    convergence instead of NaN-ing the run, which makes guard-off a
+    measurable baseline rather than an instant failure).  Cells:
+    corruption 0% (clean reference, guard off) and 10/30% x {quarantine
+    on, off}; each records final accuracy, rounds-to-target (R@90), and
+    whether the final state stayed finite.
+    """
+    if rounds < 2:
+        raise ValueError(f"faults mode needs --rounds >= 2, got {rounds}")
+    from repro.fed import (
+        FaultConfig, FedRunConfig, GuardConfig, LocalSpec, rounds_to_reach,
+        run_simulation, synth,
+    )
+    from repro.optim import make_optimizer
+
+    task = synth.make_synth_task(
+        n_clients=n_clients, n_per_client=64, d_in=128, d_feat=128,
+        lora_rank=8, alpha=0.3, seed=0,
+    )
+    local = LocalSpec(
+        loss_fn=lambda base, lora, b: synth.loss_fn(base, lora, b, task.lora_scale),
+        optimizer=make_optimizer("adam", 1e-2),
+        local_steps=4, batch_size=32, lr=1e-2,
+    )
+    lora0 = synth.init_lora(task)
+
+    def eval_fn(lora):
+        return synth.accuracy(
+            task.base, lora, task.test_x, task.test_y, task.lora_scale
+        )
+
+    for corrupt in (0.0, 0.1, 0.3):
+        for guard in ((False,) if corrupt == 0.0 else (True, False)):
+            faults = (
+                None if corrupt == 0.0
+                else FaultConfig(corrupt=corrupt, corrupt_mode="scale", seed=0)
+            )
+            cfg = FedRunConfig(
+                aggregator=AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS),
+                local=local, rounds=rounds, seed=0,
+                faults=faults, guard=GuardConfig() if guard else False,
+            )
+            t0 = time.perf_counter()
+            lora, hist = run_simulation(
+                task.base, lora0, task.client_x, task.client_y, cfg, eval_fn
+            )
+            wall = time.perf_counter() - t0
+            finite = all(
+                bool(jnp.all(jnp.isfinite(x)))
+                for x in jax.tree_util.tree_leaves(lora)
+            )
+            r90 = rounds_to_reach(np.asarray(hist))
+            name = f"faults_c{int(corrupt * 100)}_{'guard' if guard else 'noguard'}"
+            record(
+                name, wall / rounds * 1e6,
+                f"acc={float(hist[-1]):.3f} R@90={r90} finite={finite}",
+                mode="faults", corrupt=corrupt, guard=bool(guard),
+                n_clients=n_clients, rounds=rounds,
+                final_acc=round(float(hist[-1]), 4),
+                rounds_to_target=int(r90), finite=bool(finite),
+            )
+
+
 def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace",
-         serve: bool = False, mesh: bool = False) -> None:
+         serve: bool = False, mesh: bool = False, faults: bool = False) -> None:
     quick = common.QUICK if quick is None else quick
     module_counts = (32,) if quick else MODULE_COUNTS
     client_counts = (8, 32) if quick else CLIENT_COUNTS
@@ -595,6 +665,8 @@ def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace
                 got = bench_mesh(shards, n_clients, baseline=base)
                 if shards == 1:
                     base = got
+    if faults:
+        bench_faults(rounds or 10, n_clients=8 if quick else 16)
     out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")
     with open(out_path, "w") as f:
         json.dump({"schema_version": SCHEMA_VERSION, "records": RECORDS}, f, indent=1)
@@ -631,6 +703,13 @@ if __name__ == "__main__":
              "sweeps, cold + warm-carry, vs the costmodel envelope "
              "(presets XLA_FLAGS for 4 host devices before jax loads)",
     )
+    parser.add_argument(
+        "--faults", action="store_true",
+        help="add fault-tolerance cells: rounds-to-target under 0/10/30%% "
+             "scale-corruption with the quarantine on vs off "
+             "(DESIGN.md §11; uses --rounds, default 10)",
+    )
     args = parser.parse_args()
     main(quick=True if args.quick else None, rounds=args.rounds,
-         carry_mode=args.carry_mode, serve=args.serve, mesh=args.mesh)
+         carry_mode=args.carry_mode, serve=args.serve, mesh=args.mesh,
+         faults=args.faults)

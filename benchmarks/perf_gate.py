@@ -1,6 +1,6 @@
 """Perf gate over BENCH_agg.json: fail CI on aggregation perf regressions.
 
-Reads the schema-v5 bench artifact (no jax import — this is a pure JSON
+Reads the schema-v6 bench artifact (no jax import — this is a pure JSON
 check, cheap enough to run on every CI push) and enforces the roofline /
 costmodel-derived bounds each engine PR established:
 
@@ -17,6 +17,9 @@ costmodel-derived bounds each engine PR established:
     cells the 4-shard warm cell must itself be in-envelope (the scale-out
     acceptance cell: sharding keeps working where one device is at its
     memory-footprint worst).
+  * faults: every mode="faults" run must end with a finite state, and at
+    each corruption level the quarantined run's final accuracy must be no
+    worse than the unguarded one (DESIGN.md §11).
 
 The bounds are deliberately wide tolerance bands, not point predictions:
 the costmodel is an order-of-magnitude envelope and CI hosts are noisy
@@ -41,6 +44,10 @@ WARM_VS_COLD_MAX = 1.0
 #: envelope: the costmodel's dispatch floor and the shared-core collective
 #: emulation are both rough on CI hosts; see costmodel.mesh_agg_costs).
 MESH_ENVELOPE = (0.1, 8.0)
+#: faults cells: guarded final accuracy may trail unguarded by at most
+#: this much at the same corruption level (noise slack — the quarantine
+#: should win outright on corrupted runs).
+FAULTS_ACC_SLACK = 0.05
 
 FAILURES: list[str] = []
 
@@ -147,24 +154,56 @@ def gate_mesh(records: list[dict]) -> None:
               else "4-shard warm cell missing (skipped? too few host devices)")
 
 
+def gate_faults(records: list[dict]) -> None:
+    """mode="faults" cells (DESIGN.md §11): every run must end finite, the
+    clean (0% corruption) reference must converge, and wherever a
+    corruption level ran with the quarantine both on and off the guarded
+    run's final accuracy must be no worse than the unguarded one (minus a
+    noise slack) — the quarantine has to pay for itself."""
+    cells = [r for r in records if r.get("mode") == "faults"]
+    if not cells:
+        print("# no faults cells; skipping faults gate")
+        return
+    by_level: dict[float, dict[bool, dict]] = {}
+    for r in cells:
+        check(
+            bool(r["finite"]),
+            f"faults_finite_c{int(r['corrupt'] * 100)}_g{int(r['guard'])}",
+            f"final state finite={r['finite']} (guard={r['guard']})",
+        )
+        by_level.setdefault(r["corrupt"], {})[bool(r["guard"])] = r
+    for level, slots in sorted(by_level.items()):
+        if level == 0.0 or True not in slots or False not in slots:
+            continue
+        guarded = slots[True]["final_acc"]
+        bare = slots[False]["final_acc"]
+        check(
+            guarded >= bare - FAULTS_ACC_SLACK,
+            f"faults_guard_helps_c{int(level * 100)}",
+            f"guarded acc {guarded:.3f} vs unguarded {bare:.3f} "
+            f"(slack {FAULTS_ACC_SLACK})",
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_agg.json")
     ap.add_argument(
         "--require", nargs="*", default=(),
-        choices=["single_call", "multi_round", "mesh"],
+        choices=["single_call", "multi_round", "mesh", "faults"],
         help="fail (instead of skip) when these record groups are absent",
     )
     args = ap.parse_args()
     with open(args.path) as f:
         payload = json.load(f)
     version = payload.get("schema_version")
-    check(version == 5, "schema_version", f"got {version}, want 5")
+    check(version == 6, "schema_version", f"got {version}, want 6")
     records = payload.get("records", [])
     present = {
         "single_call": any("mode" not in r for r in records),
         "multi_round": any(r.get("mode") == "multi_round" for r in records),
         "mesh": any(r.get("mode") == "mesh" for r in records),
+        "faults": any(r.get("mode") == "faults" for r in records),
     }
     for group in args.require:
         check(present[group], f"require_{group}",
@@ -172,6 +211,7 @@ def main() -> int:
     gate_single_call(records)
     gate_multi_round(records)
     gate_mesh(records)
+    gate_faults(records)
     if FAILURES:
         print(f"# perf gate: {len(FAILURES)} check(s) FAILED: "
               f"{', '.join(FAILURES)}", flush=True)

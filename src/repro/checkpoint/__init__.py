@@ -1,4 +1,5 @@
 from repro.checkpoint.io import (
+    CheckpointCorruptError,
     checkpoint_metadata,
     load_pytree,
     restore_checkpoint,
@@ -7,6 +8,7 @@ from repro.checkpoint.io import (
 )
 
 __all__ = [
+    "CheckpointCorruptError",
     "checkpoint_metadata",
     "load_pytree",
     "restore_checkpoint",

@@ -3,12 +3,21 @@
 Arrays are stored as (dtype, shape, raw bytes) triples keyed by their
 flattened tree path; metadata rides alongside.  Retention: ``save_checkpoint``
 keeps the newest ``keep`` step directories.
+
+Durability (DESIGN.md §11): writes are atomic — the payload lands in a
+temp file, is fsync'd, and ``os.replace``'d into place, so a crash mid-save
+never leaves a torn checkpoint under the final name.  Every payload embeds
+a CRC32 of its packed body in the metadata; ``load_pytree`` verifies it,
+and ``restore_checkpoint`` (without an explicit ``step``) walks back to the
+newest *intact* step when the latest one is corrupted or torn.
 """
 from __future__ import annotations
 
 import os
 import re
 import shutil
+import warnings
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -19,6 +28,10 @@ import numpy as np
 PyTree = Any
 
 _KEY = "__array__"
+
+
+class CheckpointCorruptError(ValueError):
+    """The checkpoint file is unreadable, torn, or fails its checksum."""
 
 
 def _pack_leaf(x) -> dict:
@@ -48,22 +61,61 @@ def _unpack_leaf(d: dict) -> np.ndarray:
 
 def save_pytree(tree: PyTree, path: str, metadata: Optional[dict] = None) -> None:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    payload = {
-        "leaves": [_pack_leaf(x) for x in leaves],
-        "treedef": str(treedef),
-        "metadata": metadata or {},
-    }
+    # The checksum covers the body (leaves + treedef) packed on its own, so
+    # the metadata — which must hold the checksum itself — stays outside
+    # the covered bytes and the check is deterministic.
+    body = msgpack.packb(
+        {"leaves": [_pack_leaf(x) for x in leaves], "treedef": str(treedef)},
+        use_bin_type=True,
+    )
+    meta = dict(metadata or {})
+    meta["crc32"] = zlib.crc32(body)
+    payload = {"body": body, "metadata": meta}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+def _read_payload(path: str) -> dict:
+    """Decode and checksum-verify one checkpoint file.
+
+    Returns ``{"leaves", "treedef", "metadata"}``; raises
+    ``CheckpointCorruptError`` on unreadable/torn files or checksum
+    mismatch.  Accepts the legacy un-checksummed layout (pre-§11 files
+    carry the body inline) so old checkpoints keep restoring.
+    """
+    try:
+        with open(path, "rb") as f:
+            payload = msgpack.unpackb(f.read(), raw=False)
+    except (OSError, msgpack.UnpackException, ValueError) as e:
+        raise CheckpointCorruptError(f"unreadable checkpoint {path}: {e}") from e
+    if not isinstance(payload, dict):
+        raise CheckpointCorruptError(f"malformed checkpoint {path}")
+    if "body" in payload:
+        meta = payload.get("metadata", {})
+        body = payload["body"]
+        want = meta.get("crc32")
+        if want is not None and zlib.crc32(body) != want:
+            raise CheckpointCorruptError(
+                f"checksum mismatch in {path}: the file is corrupted"
+            )
+        try:
+            decoded = msgpack.unpackb(body, raw=False)
+        except (msgpack.UnpackException, ValueError) as e:
+            raise CheckpointCorruptError(f"torn checkpoint body {path}: {e}") from e
+        return {**decoded, "metadata": meta}
+    if "leaves" not in payload:
+        raise CheckpointCorruptError(f"malformed checkpoint {path}")
+    return payload  # legacy layout, no checksum to verify
 
 
 def load_pytree(path: str, like: PyTree) -> Tuple[PyTree, dict]:
     """Restore into the structure of ``like`` (treedef source of truth)."""
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+    payload = _read_payload(path)
     leaves, treedef = jax.tree_util.tree_flatten(like)
     stored = [_unpack_leaf(d) for d in payload["leaves"]]
     if len(stored) != len(leaves):
@@ -91,11 +143,35 @@ def save_checkpoint(
 
 
 def restore_checkpoint(ckpt_dir: str, like: PyTree, step: Optional[int] = None):
+    """Restore the requested (or newest) step.
+
+    Without an explicit ``step``, a corrupted/torn newest checkpoint falls
+    back to the next-newest intact one — loudly, via ``warnings.warn`` —
+    so a crash during save costs one checkpoint interval, not the run.
+    An explicit ``step`` stays strict: the caller asked for that file.
+    """
     steps = _list_steps(ckpt_dir)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    chosen = step if step is not None else steps[-1]
-    return load_pytree(os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack"), like)
+    if step is not None:
+        return load_pytree(
+            os.path.join(ckpt_dir, f"step_{step:08d}", "state.msgpack"), like
+        )
+    errors = []
+    for chosen in reversed(steps):
+        path = os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack")
+        try:
+            restored = load_pytree(path, like)
+        except CheckpointCorruptError as e:
+            warnings.warn(
+                f"skipping corrupted checkpoint step {chosen}: {e}"
+            )
+            errors.append(str(e))
+            continue
+        return restored
+    raise CheckpointCorruptError(
+        f"every checkpoint under {ckpt_dir} is corrupted: {errors}"
+    )
 
 
 def checkpoint_metadata(ckpt_dir: str, step: Optional[int] = None) -> dict:
@@ -112,9 +188,7 @@ def checkpoint_metadata(ckpt_dir: str, step: Optional[int] = None) -> dict:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     chosen = step if step is not None else steps[-1]
     path = os.path.join(ckpt_dir, f"step_{chosen:08d}", "state.msgpack")
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    return payload.get("metadata", {})
+    return _read_payload(path).get("metadata", {})
 
 
 def _list_steps(ckpt_dir: str):

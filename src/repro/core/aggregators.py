@@ -84,6 +84,11 @@ class AggregatorConfig:
     dare_drop: float = 0.9  # DARE drop rate
     joint_ab: bool = False  # RPCA jointly over concatenated vec(A),vec(B)
     # (App. B.2: "we also apply this jointly across the (A,B) pairs")
+    # Sparse-energy quarantine (DESIGN.md §11): clients whose per-module
+    # RPCA sparse-energy score exceeds guard_energy_k x the module's median
+    # are zero-weighted in the post-split means (both engines).  0.0 = off,
+    # the legacy bit-for-bit path.
+    guard_energy_k: float = 0.0
 
     def replace(self, **kw) -> "AggregatorConfig":
         return dataclasses.replace(self, **kw)
@@ -300,7 +305,12 @@ def _fedrpca_matrix(
     packed engine, so the two must agree without sharing code; change them
     together.
 
-    Returns (update_vector, beta, energy_ratio, residual)."""
+    ``cfg.guard_energy_k > 0`` (the sparse-energy quarantine) swaps the
+    post-split mean weights for ``rpca.energy_guard_weights``'s guarded
+    vector so anomalous clients contribute exactly zero.
+
+    Returns (update_vector, beta, energy_ratio, residual, client_energy,
+    client_flagged)."""
     mu = lam = None
     if col_scale is not None:
         m_mat = m_mat * jnp.asarray(col_scale, m_mat.dtype)[None, :]
@@ -328,6 +338,17 @@ def _fedrpca_matrix(
             m_mat, tol=cfg.rpca_tol, max_iter=cfg.rpca_iters, mu=mu, lam=lam,
             shrink_fn=shrink_fn, **svt_kw,
         )
+    n_clients = m_mat.shape[-1]
+    client_energy = rpca_lib.client_sparse_energy(m_mat, res.sparse)
+    client_flagged = jnp.zeros((n_clients,), jnp.float32)
+    if cfg.guard_energy_k > 0:
+        # Sparse-energy quarantine: replace the post-split means' weights
+        # with the guard-renormalized vector (flagged clients exactly zero).
+        # Mirrors the packed engine's per-module guard bit-for-bit — the
+        # matrix here IS one module.
+        w, client_flagged = rpca_lib.energy_guard_weights(
+            client_energy, cfg.guard_energy_k, base_w=w, valid=mask,
+        )
     if w is None:
         low_rank_mean = jnp.mean(res.low_rank, axis=-1)
         sparse_mean = jnp.mean(res.sparse, axis=-1)
@@ -340,7 +361,7 @@ def _fedrpca_matrix(
     else:
         beta = jnp.asarray(cfg.beta, jnp.float32)
     update = low_rank_mean + beta * sparse_mean
-    return update, beta, energy, res.residual
+    return update, beta, energy, res.residual, client_energy, client_flagged
 
 
 def _fedrpca_leaf(
@@ -356,9 +377,11 @@ def _fedrpca_leaf(
         _fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w,
         col_scale=col_scale,
     )
-    updates, betas, energies, residuals = jax.vmap(fn)(mats.astype(jnp.float32))
+    updates, betas, energies, residuals, ce, cf = jax.vmap(fn)(
+        mats.astype(jnp.float32)
+    )
     update_leaf = stacking.matrices_to_leaf_update(updates, leaf)
-    return update_leaf, betas, energies, residuals
+    return update_leaf, betas, energies, residuals, ce, cf
 
 
 def _fedrpca_joint_ab(
@@ -375,10 +398,10 @@ def _fedrpca_joint_ab(
         _fedrpca_matrix, cfg=cfg, shrink_fn=shrink_fn, mask=mask, w=w,
         col_scale=col_scale,
     )
-    updates, betas, energies, residuals = jax.vmap(fn)(joint)
+    updates, betas, energies, residuals, ce, cf = jax.vmap(fn)(joint)
     upd_a = stacking.matrices_to_leaf_update(updates[:, :va], node["A"])
     upd_b = stacking.matrices_to_leaf_update(updates[:, va:], node["B"])
-    return {"A": upd_a, "B": upd_b}, betas, energies, residuals
+    return {"A": upd_a, "B": upd_b}, betas, energies, residuals, ce, cf
 
 
 def _is_ab_node(node) -> bool:
@@ -416,23 +439,36 @@ def fedrpca(
         w = None if mask is None else _client_weights(mask, None)
     diag = {}
     flats = {"beta": [], "energy": [], "residual": []}
+    # Per-client guard stats: max energy / any-flag over every module seen.
+    client = {"energy": None, "flagged": None}
 
-    def record(betas, energies, residuals):
+    def record(betas, energies, residuals, ce, cf):
         flats["beta"].append(jnp.ravel(betas))
         flats["energy"].append(jnp.ravel(energies))
         flats["residual"].append(jnp.ravel(residuals))
+        ce = jnp.max(ce, axis=0)
+        cf = jnp.max(cf, axis=0)
+        client["energy"] = ce if client["energy"] is None else jnp.maximum(client["energy"], ce)
+        client["flagged"] = cf if client["flagged"] is None else jnp.maximum(client["flagged"], cf)
+
+    def finish(out):
+        diag.update({k: jnp.concatenate(v) for k, v in flats.items()})
+        if cfg.guard_energy_k > 0:
+            diag["client_energy"] = client["energy"]
+            diag["client_flagged"] = client["flagged"]
+        return out, diag
 
     if cfg.joint_ab:
         idx = [0]
 
         def walk(node):
             if _is_ab_node(node):
-                upd, betas, energies, residuals = _fedrpca_joint_ab(
+                upd, betas, energies, residuals, ce, cf = _fedrpca_joint_ab(
                     node, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
                 )
                 diag[f"pair{idx[0]}/beta_mean"] = jnp.mean(betas)
                 diag[f"pair{idx[0]}/energy_mean"] = jnp.mean(energies)
-                record(betas, energies, residuals)
+                record(betas, energies, residuals, ce, cf)
                 idx[0] += 1
                 return upd
             if isinstance(node, dict):
@@ -440,32 +476,30 @@ def fedrpca(
             if isinstance(node, (tuple, list)):
                 return type(node)(walk(v) for v in node)
             # bare leaf outside an (A, B) pair: fall back to per-leaf RPCA
-            upd, betas, energies, residuals = _fedrpca_leaf(
+            upd, betas, energies, residuals, ce, cf = _fedrpca_leaf(
                 node, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
             )
-            record(betas, energies, residuals)
+            record(betas, energies, residuals, ce, cf)
             return upd
 
         out = walk(stacked)
         if with_diagnostics:
-            diag.update({k: jnp.concatenate(v) for k, v in flats.items()})
-            return out, diag
+            return finish(out)
         return out
 
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     updates = []
     for i, leaf in enumerate(leaves):
-        upd, betas, energies, residuals = _fedrpca_leaf(
+        upd, betas, energies, residuals, ce, cf = _fedrpca_leaf(
             leaf, cfg, shrink_fn, mask=mask, w=w, col_scale=col_scale
         )
         updates.append(upd)
         diag[f"leaf{i}/beta_mean"] = jnp.mean(betas)
         diag[f"leaf{i}/energy_mean"] = jnp.mean(energies)
-        record(betas, energies, residuals)
+        record(betas, energies, residuals, ce, cf)
     out = jax.tree_util.tree_unflatten(treedef, updates)
     if with_diagnostics:
-        diag.update({k: jnp.concatenate(v) for k, v in flats.items()})
-        return out, diag
+        return finish(out)
     return out
 
 
@@ -489,15 +523,42 @@ def rpca_diag_summary(diag) -> dict:
         # in training logs long before they show up in wall time.
         if "live_rank" in diag.arrays:
             out["live_rank_mean"] = diag.mean("live_rank")
+        if "client_flagged" in diag.arrays:
+            # Sparse-energy quarantine: per-client any-flag across buckets
+            # (buckets share the client axis, so element-wise max is "any").
+            flags = functools.reduce(
+                jnp.maximum, diag.arrays["client_flagged"].values()
+            )
+            out["guard_flagged"] = jnp.sum(flags)
+            out["client_energy_max"] = diag.max("client_energy")
         for k in ("fallback_count", "carry_hit_rate"):
             if k in diag.scalars:
                 out[k] = diag.scalars[k]
         return out
-    return {
+    out = {
         "beta_mean": jnp.mean(diag["beta"]),
         "energy_mean": jnp.mean(diag["energy"]),
         "rpca_residual_max": jnp.max(diag["residual"]),
     }
+    if "client_flagged" in diag:
+        out["guard_flagged"] = jnp.sum(diag["client_flagged"])
+        out["client_energy_max"] = jnp.max(diag["client_energy"])
+    return out
+
+
+def client_flag_vector(diag):
+    """Per-client sparse-energy quarantine flags from either engine's
+    fedrpca diagnostics: (cohort,) float32 with 1 = flagged in at least one
+    module, or None when the guard (``guard_energy_k``) was off."""
+    if hasattr(diag, "arrays"):
+        if "client_flagged" not in getattr(diag, "arrays", {}):
+            return None
+        return functools.reduce(
+            jnp.maximum, diag.arrays["client_flagged"].values()
+        )
+    if isinstance(diag, dict) and "client_flagged" in diag:
+        return diag["client_flagged"]
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -470,7 +470,24 @@ def _fedrpca_bucket(
     if carry is not None:
         res, new_carry = res
     w_post = w_uniform if col_scaled else bucket.weights
-    if w_post is None:
+    diag_extra = {}
+    if cfg.guard_energy_k > 0:
+        # Sparse-energy quarantine (DESIGN.md §11): per-module per-client
+        # column scores replace the shared weight vector with a guarded
+        # (flagged clients exactly zero) per-module one.  Off (k=0) keeps
+        # the legacy shared-vector einsums bit-for-bit.
+        client_energy = rpca_lib.client_sparse_energy(m, res.sparse)
+        gw, flags = rpca_lib.energy_guard_weights(
+            client_energy, cfg.guard_energy_k, base_w=w_post,
+            valid=bucket.client_mask,
+        )
+        low_mean = jnp.einsum("mvc,mc->mv", res.low_rank, gw)
+        sparse_mean = jnp.einsum("mvc,mc->mv", res.sparse, gw)
+        diag_extra = {
+            "client_energy": jnp.max(client_energy, axis=0),
+            "client_flagged": jnp.max(flags, axis=0),
+        }
+    elif w_post is None:
         low_mean = jnp.mean(res.low_rank, axis=-1)
         sparse_mean = jnp.mean(res.sparse, axis=-1)
     else:
@@ -484,7 +501,8 @@ def _fedrpca_bucket(
     else:
         beta = jnp.full(energy.shape, cfg.beta, jnp.float32)
     update = low_mean + beta[:, None] * sparse_mean
-    return update, {"beta": beta, "energy": energy, "residual": res.residual}, new_carry
+    diag = {"beta": beta, "energy": energy, "residual": res.residual, **diag_extra}
+    return update, diag, new_carry
 
 
 def _dare_rescale(stacked: PyTree, drop_rate: float, key, mask=None) -> PyTree:
@@ -582,15 +600,14 @@ def aggregate_packed(
         for bkey, mean in means.items():
             updates[bkey] = (eta * mean).astype(mean.dtype)
     elif method == "fedrpca":
-        betas, energies, residuals = {}, {}, {}
+        names = ("beta", "energy", "residual") + (
+            ("client_energy", "client_flagged") if cfg.guard_energy_k > 0 else ()
+        )
+        diag_arrays = {k: {} for k in names}
         for bkey, bucket in buckets.items():
             updates[bkey], d, _ = _fedrpca_bucket(bucket, cfg, shrink_fn, mesh=mesh)
-            betas[bkey], energies[bkey], residuals[bkey] = (
-                d["beta"],
-                d["energy"],
-                d["residual"],
-            )
-        diag_arrays = {"beta": betas, "energy": energies, "residual": residuals}
+            for k in names:
+                diag_arrays[k][bkey] = d[k]
     else:
         raise ValueError(f"unknown aggregation method: {method!r}")
 
@@ -832,8 +849,16 @@ def aggregate_planned(
         carry = init_agg_carry(plan)
 
     updates: dict[BucketKey, jnp.ndarray] = {}
+    # Guard diagnostics are (cohort,)-shaped, not per-module: tiers combine
+    # them element-wise (max = "any module flagged") instead of scattering.
+    client_keys = (
+        ("client_energy", "client_flagged") if cfg.guard_energy_k > 0 else ()
+    )
     arrays: dict[str, dict] = {
-        k: {} for k in ("beta", "energy", "residual") + (("live_rank",) if plan.carry else ())
+        k: {}
+        for k in ("beta", "energy", "residual")
+        + (("live_rank",) if plan.carry else ())
+        + client_keys
     }
     new_carry: AggCarry = {}
     falls, hits = [], []
@@ -860,7 +885,9 @@ def aggregate_planned(
         else:
             upd = jnp.zeros((b_total, padded_vec), jnp.float32)
             per_mod = {
-                k: jnp.zeros((b_total,), jnp.float32) for k in arrays
+                k: jnp.zeros((b_total,), jnp.float32)
+                for k in arrays
+                if k not in client_keys
             }
             for name, idx, cap in tiers:
                 ck = (bkey, name)
@@ -874,6 +901,11 @@ def aggregate_planned(
                 upd = upd.at[ia].set(u_t.astype(jnp.float32))
                 for k in ("beta", "energy", "residual"):
                     per_mod[k] = per_mod[k].at[ia].set(d_t[k])
+                for k in client_keys:
+                    per_mod[k] = (
+                        d_t[k] if k not in per_mod
+                        else jnp.maximum(per_mod[k], d_t[k])
+                    )
                 if plan.carry:
                     new_carry[ck] = c2
                     per_mod["live_rank"] = per_mod["live_rank"].at[ia].set(

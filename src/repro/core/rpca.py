@@ -77,6 +77,65 @@ def svt_svd(x: jnp.ndarray, t, shrink_fn: Callable = soft_threshold) -> jnp.ndar
 
 
 # ---------------------------------------------------------------------------
+# Sparse-energy client anomaly scores (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# RPCA's sparse component is a free byzantine detector: a corrupted client's
+# delta cannot be explained by the shared low-rank subspace, so its energy
+# concentrates in its own S-column.  These helpers score each client's
+# column and fold anomalies out of the aggregation weight vector; they are
+# shared by both engines (per packed bucket here, per matrix on the
+# reference path) so masked cross-engine parity holds.
+
+
+def client_sparse_energy(m: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Per-client column energy ratio ``||S[:, c]|| / ||M[:, c]||``.
+
+    ``m``/``s`` have clients on the last axis and the vec dimension second
+    to last (``(..., vec, clients)``); leading axes (e.g. the packed module
+    axis) broadcast.  Padded rows and masked columns are zero in both, so
+    inactive clients score 0.
+    """
+    num = jnp.linalg.norm(s, axis=-2)
+    den = jnp.linalg.norm(m, axis=-2)
+    return num / jnp.maximum(den, _EPS)
+
+
+def energy_guard_weights(
+    energy: jnp.ndarray,
+    k: float,
+    base_w=None,
+    valid=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero out anomalous clients' weights and renormalize, per module.
+
+    A client is flagged when its sparse-energy score exceeds ``k`` times
+    the median score over valid clients of the same module (the median is
+    robust to the anomalies being scored).  ``energy`` is ``(...,
+    n_clients)``; ``base_w`` (broadcastable to it) supplies the unguarded
+    weights (None = uniform) and ``valid`` is the (n_clients,) float mask.
+    Returns ``(weights, flagged)``: normalized per-module weights with
+    flagged clients at exactly zero, and the float32 flag matrix.  A module
+    whose every valid client is flagged keeps all-zero weights — a zero
+    update beats aggregating known-suspect columns.
+    """
+    vals = energy if valid is None else jnp.where(valid > 0, energy, jnp.nan)
+    med = jnp.nanmedian(vals, axis=-1, keepdims=True)
+    flagged = energy > k * jnp.maximum(med, _EPS)
+    if valid is not None:
+        flagged = flagged & (valid > 0)
+    if base_w is None:
+        w = jnp.ones_like(energy)
+    else:
+        w = jnp.broadcast_to(jnp.asarray(base_w, jnp.float32), energy.shape)
+    if valid is not None:
+        w = w * valid
+    w = jnp.where(flagged, 0.0, w)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)
+    return w, flagged.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # Warm-started subspace-iteration SVT (DESIGN.md §6)
 # ---------------------------------------------------------------------------
 #

@@ -18,8 +18,16 @@ from repro.fed.server import (
     rounds_to_reach,
     run_simulation,
 )
-from repro.fed import pipeline, synth
-from repro.fed.pipeline import AggWorker, InFlightQueue, run_rounds, stale_scale
+from repro.fed import faults, guard, pipeline, synth
+from repro.fed.faults import FaultConfig, FaultModel, make_deadline_sampler
+from repro.fed.guard import GuardConfig, screen
+from repro.fed.pipeline import (
+    AdaptiveStaleScale,
+    AggWorker,
+    InFlightQueue,
+    run_rounds,
+    stale_scale,
+)
 
 __all__ = [
     "LocalSpec",
@@ -39,10 +47,18 @@ __all__ = [
     "make_sampler",
     "rounds_to_reach",
     "run_simulation",
+    "AdaptiveStaleScale",
     "AggWorker",
+    "FaultConfig",
+    "FaultModel",
+    "GuardConfig",
     "InFlightQueue",
+    "make_deadline_sampler",
     "run_rounds",
+    "screen",
     "stale_scale",
+    "faults",
+    "guard",
     "pipeline",
     "synth",
 ]

@@ -1,0 +1,234 @@
+"""Deterministic fault injection for federated rounds (DESIGN.md §11).
+
+Real cohorts straggle, drop out, and occasionally ship garbage.  This
+module makes every such failure mode a seeded, config-driven, *testable*
+scenario:
+
+  * ``FaultConfig`` / ``parse`` — the declarative fault model, including
+    the CLI spec grammar behind ``launch/train.py --faults``
+    (``"nan:0.1"``, ``"dropout:0.2,straggler:0.5"``, ...).
+  * ``FaultModel.inject`` — a jit-safe injector applied to one round's
+    stacked client deltas: bernoulli result-loss dropout, straggler slots
+    missing the round deadline, and per-client corruption (nan / inf /
+    norm blow-up / sign-flip poison).  Randomness is
+    ``fold_in(PRNGKey(seed), round_idx)``, so a given (seed, round) always
+    injects the same faults — resume/replay deterministic, and the guard
+    tests can assert exactly which clients were poisoned.
+  * ``make_deadline_sampler`` — deadline-based cohort formation over any
+    ``fed.server.make_sampler`` sampler: over-sample candidates, take the
+    first arrivals by simulated delay, zero this round's stragglers out of
+    the validity mask, and give last round's late arrivals priority seats
+    this round (stateless buffering: the delay process is a pure function
+    of (round, client), so "late in round r-1" is recomputable in round r).
+
+Injection happens *before* the guard screen (``fed.guard``): the
+corruption the model plants is exactly what the quarantine must catch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Corruption modes: ``nan``/``inf`` poison every element of the client's
+#: delta; ``scale`` multiplies it by ``corrupt_scale`` (norm blow-up);
+#: ``sign`` flips it (the classic sign-flip attack — finite,
+#: norm-preserving, and inside the cohort's low-rank column span, so it
+#: slips past both quarantine layers and stresses the aggregator's own
+#: robustness; element-wise poison is what the sparse-energy layer
+#: catches).
+CORRUPT_MODES = ("nan", "inf", "scale", "sign")
+
+#: Score bonus that seats last round's late arrivals ahead of everyone
+#: else in the deadline sampler (any value > the max possible delay term).
+_BUFFER_BONUS = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Declarative fault model for one federated run.
+
+    Probabilities are per (round, active client).  Delays and the deadline
+    share one simulated time unit (a "round budget"): a client whose
+    exponential delay exceeds ``deadline`` misses the round.
+    """
+
+    dropout: float = 0.0  # P(an active client's result is lost)
+    straggler: float = 0.0  # P(a client is slow this round)
+    straggler_delay_mean: float = 2.0  # mean exponential delay of a slow client
+    deadline: float = 1.0  # arrival cutoff, same unit as the delays
+    corrupt: float = 0.0  # P(an active client ships a corrupted delta)
+    corrupt_mode: str = "nan"  # see CORRUPT_MODES
+    corrupt_scale: float = 1e4  # blow-up factor for corrupt_mode="scale"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.corrupt_mode not in CORRUPT_MODES:
+            raise ValueError(
+                f"unknown corrupt_mode: {self.corrupt_mode!r} "
+                f"(expected one of {CORRUPT_MODES})"
+            )
+        for name in ("dropout", "straggler", "corrupt"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} is not a probability")
+
+    @property
+    def active(self) -> bool:
+        return (self.dropout > 0 or self.straggler > 0 or self.corrupt > 0)
+
+    def replace(self, **kw) -> "FaultConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def parse(spec: str, seed: int = 0) -> FaultConfig:
+    """Parse a ``--faults`` spec into a ``FaultConfig``.
+
+    Grammar: comma-separated ``name:value`` terms.  A corruption-mode name
+    (``nan``/``inf``/``scale``/``sign``) sets both the corruption
+    probability and the mode — ``"nan:0.1"`` corrupts 10% of active
+    clients with NaNs.  Other names map to config fields: ``dropout``,
+    ``straggler``, ``delay`` (straggler_delay_mean), ``deadline``,
+    ``corrupt_scale``, ``seed``.  Terms compose left to right:
+    ``"dropout:0.2,straggler:0.5,scale:0.3"``.
+    """
+    kw: dict = {"seed": seed}
+    for term in filter(None, (t.strip() for t in spec.split(","))):
+        if ":" not in term:
+            raise ValueError(
+                f"bad --faults term {term!r}: expected name:value "
+                f"(e.g. 'nan:0.1' or 'dropout:0.2')"
+            )
+        name, _, value = term.partition(":")
+        name = name.strip()
+        value = value.strip()
+        if name in CORRUPT_MODES:
+            kw["corrupt"] = float(value)
+            kw["corrupt_mode"] = name
+        elif name in ("dropout", "straggler", "corrupt", "deadline",
+                      "corrupt_scale"):
+            kw[name] = float(value)
+        elif name == "delay":
+            kw["straggler_delay_mean"] = float(value)
+        elif name == "seed":
+            kw["seed"] = int(value)
+        else:
+            raise ValueError(
+                f"unknown --faults term {name!r} (corruption modes "
+                f"{CORRUPT_MODES} or dropout/straggler/delay/deadline/"
+                "corrupt_scale/seed)"
+            )
+    return FaultConfig(**kw)
+
+
+class FaultModel:
+    """Seeded fault injector; every method is jit-safe (``round_idx`` may
+    be traced — the PRNG stream is ``fold_in(base, round_idx)``)."""
+
+    def __init__(self, cfg: FaultConfig):
+        self.cfg = cfg
+        self.base_key = jax.random.PRNGKey(cfg.seed)
+
+    # -- simulated arrival process -------------------------------------
+
+    def delays(self, round_idx, n: int) -> jnp.ndarray:
+        """(n,) simulated arrival delays for one round: 0 for fast clients,
+        exponential(mean=straggler_delay_mean) for slow ones.  Pure in
+        (seed, round, index) so any round's process can be recomputed."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(self.base_key, 0x57A6), round_idx
+        )
+        k_slow, k_delay = jax.random.split(key)
+        slow = jax.random.bernoulli(k_slow, self.cfg.straggler, (n,))
+        delay = (
+            jax.random.exponential(k_delay, (n,))
+            * self.cfg.straggler_delay_mean
+        )
+        return jnp.where(slow, delay, 0.0)
+
+    # -- delta corruption ----------------------------------------------
+
+    def _poison(self, x: jnp.ndarray, corrupt: jnp.ndarray) -> jnp.ndarray:
+        c = corrupt.reshape(corrupt.shape + (1,) * (x.ndim - 1))
+        mode = self.cfg.corrupt_mode
+        if mode == "nan":
+            return jnp.where(c, jnp.nan, x)
+        if mode == "inf":
+            return jnp.where(c, jnp.inf, x)
+        if mode == "scale":
+            return jnp.where(c, x * self.cfg.corrupt_scale, x)
+        return jnp.where(c, -x, x)  # "sign"
+
+    def inject(self, round_idx, deltas, mask, *, stragglers: bool = True):
+        """Apply one round's faults to the stacked client deltas.
+
+        ``mask`` is the (cohort,) float32 validity mask (the caller
+        materializes all-ones for full participation — fault rounds are
+        always masked rounds).  Returns ``(deltas', mask', fault_slots)``
+        where ``fault_slots`` marks the corrupted clients (float32, for
+        the guard-detection diagnostics).  Dropout and straggler losses
+        fold into the mask; ``stragglers=False`` skips the straggler term
+        when deadline-based cohort formation already applied it upstream.
+        Never empties the cohort: if every slot would drop, the original
+        mask is kept (a fully-lost round re-runs rather than aggregating
+        nothing).
+        """
+        cfg = self.cfg
+        key = jax.random.fold_in(self.base_key, round_idx)
+        k_drop, k_cor = jax.random.split(key)
+        cohort = mask.shape[0]
+        new_mask = mask
+        if cfg.dropout > 0:
+            drop = jax.random.bernoulli(k_drop, cfg.dropout, (cohort,))
+            new_mask = jnp.where(drop, 0.0, new_mask)
+        if cfg.straggler > 0 and stragglers:
+            late = self.delays(round_idx, cohort) > cfg.deadline
+            new_mask = jnp.where(late, 0.0, new_mask)
+        new_mask = jnp.where(jnp.sum(new_mask) > 0, new_mask, mask)
+        fault_slots = jnp.zeros((cohort,), jnp.float32)
+        if cfg.corrupt > 0:
+            cor = jax.random.bernoulli(k_cor, cfg.corrupt, (cohort,))
+            cor = cor & (new_mask > 0)
+            fault_slots = cor.astype(jnp.float32)
+            deltas = jax.tree_util.tree_map(
+                lambda x: self._poison(x, cor), deltas
+            )
+        return deltas, new_mask, fault_slots
+
+
+def make_deadline_sampler(model: FaultModel, inner, n_clients: int,
+                          cohort_pad: int):
+    """Deadline-based cohort formation over an over-sampling inner sampler.
+
+    ``inner`` is a ``make_sampler`` sampler built with over-sampled slots
+    (> ``cohort_pad``); each round it proposes candidates, which are
+    ranked by simulated arrival: last round's late arrivals first (their
+    buffered results are "already here" — stateless buffering, since the
+    delay process is pure in (round, client)), then earliest arrivals.
+    The first ``cohort_pad`` seats form the cohort; seats whose client
+    still misses this round's deadline are zeroed in ``slot_valid`` and
+    get a priority seat next round.  Delays are indexed by client id over
+    the full ``n_clients`` population, not by candidate seat.
+    """
+
+    def sample(key, round_idx):
+        round_idx = jnp.asarray(round_idx, jnp.int32)
+        k_inner, _ = jax.random.split(key)
+        cand, cand_valid = inner(k_inner, round_idx)  # (n_candidates,)
+        d_now = model.delays(round_idx, n_clients)[cand]
+        # Round 0 has no previous round to buffer from; clamping keeps the
+        # fold_in argument nonnegative (uint32) instead of wrapping.
+        d_prev = model.delays(jnp.maximum(round_idx - 1, 0), n_clients)[cand]
+        buffered = (
+            (d_prev > model.cfg.deadline) & (round_idx > 0)
+        ).astype(jnp.float32)
+        score = jnp.where(
+            cand_valid > 0, buffered * _BUFFER_BONUS - d_now, -jnp.inf
+        )
+        seat = jax.lax.top_k(score, cohort_pad)[1]
+        cohort = cand[seat]
+        arrived = (d_now[seat] <= model.cfg.deadline).astype(jnp.float32)
+        return cohort, cand_valid[seat] * arrived
+
+    return sample

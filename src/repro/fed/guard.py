@@ -1,0 +1,134 @@
+"""Pre-aggregation update quarantine (DESIGN.md §11).
+
+``screen`` is a jitted pre-aggregation gate over one round's stacked
+client deltas: it folds non-finite clients and norm outliers into the
+existing shape-static validity mask and *zeroes* quarantined columns so
+no non-finite value can ever reach an aggregator.  The zeroing must be a
+``jnp.where`` select, not a mask multiply — ``pack`` zeroes masked
+columns by multiplication, and ``NaN * 0 == NaN``, so a NaN column would
+silently poison every bucket reduction downstream.
+
+The screen is layer one of the quarantine ladder; layer two is the RPCA
+sparse-energy score (``AggregatorConfig.guard_energy_k``, applied inside
+both engines — see ``core.rpca.energy_guard_weights``), which catches
+finite, norm-plausible poison (e.g. sign flips) that no per-column
+statistic can see.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Quarantine thresholds.
+
+    ``norm_k`` is the robust z-score cutoff on per-client log delta norms
+    (median absolute deviation units); ``norm_ratio_min`` floors the
+    cutoff at ``log(norm_ratio_min)`` so homogeneous cohorts (MAD ~ 0)
+    don't flag benign spread — a client must be at least that factor away
+    from the median norm to quarantine.  ``energy_k`` feeds
+    ``AggregatorConfig.guard_energy_k`` (0 disables the energy layer).
+    """
+
+    norm_k: float = 6.0
+    norm_ratio_min: float = 4.0
+    energy_k: float = 3.0
+
+    def replace(self, **kw) -> "GuardConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _client_sq_norms(deltas) -> jnp.ndarray:
+    """(cohort,) per-client squared norms summed over every leaf (float32)."""
+    leaves = jax.tree_util.tree_leaves(deltas)
+    total = 0.0
+    for leaf in leaves:
+        x = leaf.astype(jnp.float32)
+        total = total + jnp.sum(
+            jnp.square(x), axis=tuple(range(1, x.ndim))
+        )
+    return total
+
+
+def _client_finite(deltas) -> jnp.ndarray:
+    """(cohort,) bool: every element of every leaf of the client is finite."""
+    leaves = jax.tree_util.tree_leaves(deltas)
+    ok = None
+    for leaf in leaves:
+        f = jnp.all(
+            jnp.isfinite(leaf), axis=tuple(range(1, leaf.ndim))
+        )
+        ok = f if ok is None else (ok & f)
+    return ok
+
+
+def screen(deltas, mask, cfg: GuardConfig):
+    """Quarantine non-finite and norm-outlier clients before aggregation.
+
+    ``deltas`` are the stacked per-slot client deltas (leading axis =
+    cohort); ``mask`` is the (cohort,) float32 validity mask (all-ones for
+    full participation).  Jit-safe and shape-static.
+
+    Returns ``(cleaned, new_mask, diags)``: quarantined columns are
+    **zeroed via where-select** (true zeros — a mask multiply cannot
+    sanitize NaN) and folded out of the mask; ``diags`` carries
+    ``guard_nonfinite`` / ``guard_norm_outliers`` / ``guard_quarantined``
+    counts, the per-client ``flags`` vector, and ``screen_clean`` (1.0 iff
+    the cleaned tree is fully finite — the zero-escapes invariant, which
+    must always hold).
+    """
+    valid0 = mask > 0
+    finite = _client_finite(deltas)
+    keep = valid0 & finite
+    keep_f = keep.astype(jnp.float32)
+
+    # Sanitize FIRST: every column not kept becomes exactly zero, so the
+    # norm statistics below (and everything downstream) see no non-finite
+    # values at all.
+    def _zero(x):
+        k = keep_f.reshape((keep_f.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(k > 0, x, jnp.zeros_like(x))
+
+    cleaned = jax.tree_util.tree_map(_zero, deltas)
+
+    # Robust norm outlier test on the surviving clients: |log n - med| >
+    # max(norm_k * 1.4826 * MAD, log(norm_ratio_min)).  nanmedian over a
+    # where-NaN'd vector keeps the statistic masked yet jittable.
+    logn = 0.5 * jnp.log(_client_sq_norms(cleaned) + _EPS)
+    vals = jnp.where(keep, logn, jnp.nan)
+    med = jnp.nanmedian(vals)
+    mad = jnp.nanmedian(jnp.abs(vals - med))
+    cut = jnp.maximum(
+        cfg.norm_k * 1.4826 * mad, jnp.log(cfg.norm_ratio_min)
+    )
+    outlier = keep & (jnp.abs(logn - med) > cut)
+
+    final = keep & ~outlier
+    final_f = final.astype(jnp.float32)
+
+    def _zero_final(x):
+        k = final_f.reshape((final_f.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(k > 0, x, jnp.zeros_like(x))
+
+    cleaned = jax.tree_util.tree_map(_zero_final, deltas)
+    new_mask = mask * final_f
+    flags = (valid0 & ~final).astype(jnp.float32)
+    diags = {
+        "guard_nonfinite": jnp.sum((valid0 & ~finite).astype(jnp.float32)),
+        "guard_norm_outliers": jnp.sum(outlier.astype(jnp.float32)),
+        "guard_quarantined": jnp.sum(flags),
+        "flags": flags,
+        "screen_clean": jnp.all(
+            jnp.stack([
+                jnp.all(jnp.isfinite(leaf))
+                for leaf in jax.tree_util.tree_leaves(cleaned)
+            ])
+        ).astype(jnp.float32),
+    }
+    return cleaned, new_mask, diags

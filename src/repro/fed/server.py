@@ -34,8 +34,12 @@ import numpy as np
 
 from repro.core import AggregatorConfig, aggregate
 from repro.core import engine as engine_lib
-from repro.core.aggregators import CARRY_MODES, WEIGHTINGS, rpca_diag_summary
+from repro.core.aggregators import (
+    CARRY_MODES, WEIGHTINGS, client_flag_vector, rpca_diag_summary,
+)
 from repro.core import stacking
+from repro.fed import faults as faults_lib
+from repro.fed import guard as guard_lib
 from repro.fed.client import LocalSpec, make_local_fn
 from repro.utils.pytree import tree_zeros_like
 
@@ -76,6 +80,10 @@ class LocalBundle(NamedTuple):
     weights: Any
     agg_key: jnp.ndarray
     loss_mean: jnp.ndarray
+    # Clients whose deltas the fault model corrupted this round ((cohort,)
+    # float32; None with fault injection off) — lets the aggregation phase
+    # report how many injected faults the quarantine caught.
+    fault_slots: Any = None
 
 
 class RoundPhases:
@@ -89,25 +97,41 @@ class RoundPhases:
     untouched, so a pipelined driver may dispatch the next local phase
     before the previous aggregation lands.
 
-    ``agg(lora_global, agg_carry, bundle, scale) -> (lora', carry', diags)``
-    consumes a bundle (possibly one round stale) and applies
-    ``lora + scale * update``.  ``scale=1.0`` reproduces the legacy unscaled
-    apply bit-for-bit (IEEE multiplication by 1.0 is exact); the pipelined
-    driver passes the staleness-corrected ``pipeline.stale_scale``.
+    ``agg(agg_carry, bundle, scale) -> (scaled_update, carry', diags)``
+    consumes a bundle (possibly several rounds stale) and returns the
+    *scaled update* — NOT the applied state.  Decoupling the update from
+    the base it lands on is what enables the FedBuff-style K-deep
+    in-flight queue: the driver composes updates at land time via
+    ``apply(lora_global, scaled_update) -> lora'``, so an update computed
+    K rounds ago still lands on the *current* global model.  ``scale=1.0``
+    reproduces the legacy unscaled apply bit-for-bit (IEEE multiplication
+    by 1.0 is exact, and splitting ``g + s*u`` into ``s*u`` then ``g + su``
+    does not change the float ops — XLA does not contract them into an
+    FMA); the pipelined driver passes the staleness-corrected scale.
 
-    The synchronous driver (``make_round_fn``) composes the two back to
+    ``fallback(bundle, scale) -> (scaled_update, cold_carry, diags)`` is
+    the degradation ladder's last rung: plain masked FedAvg over the
+    (screened) deltas, used by the driver's supervisor when the real
+    aggregation produced a non-finite update even after a cold-carry
+    retry.  ``cold_carry()`` returns the bitwise-cold carry for that retry.
+
+    The synchronous driver (``make_round_fn``) composes the phases back to
     back; ``repro.fed.pipeline.run_rounds`` overlaps them.  Both consume
     the *same* compiled phases, which is what makes the staleness=0
     pipeline bitwise identical to the synchronous path.
     """
 
-    def __init__(self, local, agg, *, cohort_pad, plan, prep_state, cache_size):
+    def __init__(self, local, agg, *, cohort_pad, plan, prep_state, cache_size,
+                 apply=None, fallback=None, cold_carry=None):
         self.local = local
         self.agg = agg
         self.cohort_pad = cohort_pad
         self.plan = plan
         self.prep_state = prep_state
         self.cache_size = cache_size
+        self.apply = apply
+        self.fallback = fallback
+        self.cold_carry = cold_carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +150,14 @@ class FedRunConfig:
     # synchronous schedule, bit-for-bit — same phases, same order).
     pipeline: bool = False
     staleness: int = 1
+    # Fault tolerance (DESIGN.md §11).  ``faults`` is a
+    # ``fed.faults.FaultConfig`` (None = no injection); ``guard`` controls
+    # the pre-aggregation quarantine: None = auto (on exactly when faults
+    # are injected), a ``fed.guard.GuardConfig`` = on with those
+    # thresholds, False = force off.  Both default to the legacy
+    # bit-for-bit round.
+    faults: Any = None
+    guard: Any = None
     # Shard the packed client axis of the aggregation across a device mesh
     # (DESIGN.md §10).  0/1 = single-device (bitwise the legacy round);
     # n > 1 builds launch.mesh.make_host_mesh(n) — the process must have
@@ -285,6 +317,38 @@ def make_round_phases(
         else None
     )
 
+    # Fault model + update quarantine (DESIGN.md §11).  The guard defaults
+    # to on exactly when faults are injected; ``cfg.guard=False`` forces it
+    # off (chaos baselines), a GuardConfig forces it on.  ``agg_cfg`` folds
+    # the sparse-energy threshold into the aggregator so both engines score
+    # and down-weight suspect clients inside the RPCA split itself.
+    fault_model = None
+    if cfg.faults is not None and cfg.faults.active:
+        fault_model = faults_lib.FaultModel(cfg.faults)
+    guard_cfg = cfg.guard
+    if guard_cfg is None:
+        guard_cfg = guard_lib.GuardConfig() if fault_model is not None else None
+    elif guard_cfg is False:
+        guard_cfg = None
+    agg_cfg = cfg.aggregator
+    if guard_cfg is not None and guard_cfg.energy_k > 0:
+        agg_cfg = cfg.aggregator.replace(guard_energy_k=guard_cfg.energy_k)
+    deadline_cohort = False
+    if fault_model is not None and cfg.faults.straggler > 0 and partial:
+        # Deadline-based cohort formation: over-sample candidates from the
+        # configured sampler, seat the earliest simulated arrivals, zero
+        # this round's stragglers, and buffer late arrivals into the next
+        # round's cohort head.
+        n_cand = min(2 * cohort_pad, n_clients)
+        inner = make_sampler(
+            cfg.sampler, n_clients, n_cand,
+            availability=availability, weights=client_weights,
+        )
+        sampler = faults_lib.make_deadline_sampler(
+            fault_model, inner, n_clients, cohort_pad
+        )
+        deadline_cohort = True
+
     if cfg.aggregator.carry_mode not in CARRY_MODES:
         raise ValueError(
             f"unknown carry_mode: {cfg.aggregator.carry_mode!r} "
@@ -323,7 +387,7 @@ def make_round_phases(
             lambda x: jnp.zeros((slots,) + jnp.shape(x), jnp.asarray(x).dtype),
             lora_template,
         )
-        plan = engine_lib.plan_aggregation(example, cfg.aggregator, mesh=mesh)
+        plan = engine_lib.plan_aggregation(example, agg_cfg, mesh=mesh)
 
     @jax.jit
     def local_phase(state: RoundState, n_active=None):
@@ -407,37 +471,115 @@ def make_round_phases(
             round_idx=state.round_idx + 1,
             agg_carry=state.agg_carry,
         )
+        bundle_mask = mask
+        fault_slots = None
+        if fault_model is not None or guard_cfg is not None:
+            # Fault/guard rounds are always masked rounds: injection and
+            # quarantine fold losses into the validity mask, so the full-
+            # participation None-mask fast path materializes all-ones.
+            if bundle_mask is None:
+                bundle_mask = jnp.ones((n_clients,), jnp.float32)
+        if fault_model is not None:
+            # Inject on the pre-increment round counter so a given (seed,
+            # round) always plants the same faults, resume included.
+            stacked_deltas, bundle_mask, fault_slots = fault_model.inject(
+                state.round_idx, stacked_deltas, bundle_mask,
+                stragglers=not deadline_cohort,
+            )
         bundle = LocalBundle(
-            deltas=stacked_deltas, mask=mask, weights=weights,
-            agg_key=agg_key, loss_mean=loss_mean,
+            deltas=stacked_deltas, mask=bundle_mask, weights=weights,
+            agg_key=agg_key, loss_mean=loss_mean, fault_slots=fault_slots,
         )
         return new_state, bundle
 
+    def _screen_bundle(bundle: LocalBundle):
+        # Layer-one quarantine: fold non-finite / norm-outlier clients into
+        # the validity mask and zero their columns (where-select — a mask
+        # multiply cannot sanitize NaN).
+        deltas, mask2 = bundle.deltas, bundle.mask
+        sflags = None
+        sdiags = {}
+        if guard_cfg is not None:
+            deltas, mask2, g = guard_lib.screen(deltas, mask2, guard_cfg)
+            sflags = g.pop("flags")
+            sdiags = g
+        return deltas, mask2, sflags, sdiags
+
+    def _update_diags(scaled, sflags, eflags, bundle: LocalBundle, sdiags):
+        diags = dict(sdiags)
+        finite = jnp.stack([
+            jnp.all(jnp.isfinite(leaf))
+            for leaf in jax.tree_util.tree_leaves(scaled)
+        ])
+        diags["update_finite"] = jnp.all(finite).astype(jnp.float32)
+        if bundle.fault_slots is not None:
+            flags = sflags
+            if eflags is not None:
+                flags = eflags if flags is None else jnp.maximum(flags, eflags)
+            injected = bundle.fault_slots
+            diags["fault_injected"] = jnp.sum(injected)
+            if flags is not None:
+                diags["fault_caught"] = jnp.sum(flags * injected)
+        return diags
+
     @jax.jit
-    def agg_phase(lora_global, agg_carry, bundle: LocalBundle, scale):
+    def agg_phase(agg_carry, bundle: LocalBundle, scale):
+        deltas, mask2, sflags, sdiags = _screen_bundle(bundle)
         agg_kw = dict(
-            engine=cfg.engine, key=bundle.agg_key, mask=bundle.mask,
+            engine=cfg.engine, key=bundle.agg_key, mask=mask2,
             weights=bundle.weights, mesh=mesh,
         )
         new_carry = agg_carry
+        eflags = None
         if plan is not None:
             update, new_carry, ediag = engine_lib.aggregate_planned(
-                plan, bundle.deltas, agg_carry, key=bundle.agg_key,
-                mask=bundle.mask, weights=bundle.weights, with_diagnostics=True,
+                plan, deltas, agg_carry, key=bundle.agg_key,
+                mask=mask2, weights=bundle.weights, with_diagnostics=True,
             )
             rpca_diags = rpca_diag_summary(ediag)
-        elif cfg.aggregator.method == "fedrpca":
+            eflags = client_flag_vector(ediag)
+        elif agg_cfg.method == "fedrpca":
             update, ediag = aggregate(
-                bundle.deltas, cfg.aggregator, with_diagnostics=True, **agg_kw
+                deltas, agg_cfg, with_diagnostics=True, **agg_kw
             )
             rpca_diags = rpca_diag_summary(ediag)
+            eflags = client_flag_vector(ediag)
         else:
-            update = aggregate(bundle.deltas, cfg.aggregator, **agg_kw)
+            update = aggregate(deltas, agg_cfg, **agg_kw)
             rpca_diags = {}
-        new_lora = jax.tree_util.tree_map(
-            lambda g, u: g + scale * u, lora_global, update
+        scaled = jax.tree_util.tree_map(lambda u: scale * u, update)
+        diags = {
+            **rpca_diags,
+            **_update_diags(scaled, sflags, eflags, bundle, sdiags),
+        }
+        return scaled, new_carry, diags
+
+    @jax.jit
+    def apply_phase(lora_global, scaled_update):
+        return jax.tree_util.tree_map(
+            lambda g, su: g + su, lora_global, scaled_update
         )
-        return new_lora, new_carry, rpca_diags
+
+    def cold_carry():
+        return engine_lib.init_agg_carry(plan) if plan is not None else ()
+
+    # Degradation floor: plain masked FedAvg over the screened deltas, no
+    # RPCA, no energy guard — the last rung of the supervisor ladder.
+    fedavg_cfg = agg_cfg.replace(method="fedavg", guard_energy_k=0.0)
+
+    @jax.jit
+    def fallback_phase(bundle: LocalBundle, scale):
+        deltas, mask2, sflags, sdiags = _screen_bundle(bundle)
+        update = aggregate(
+            deltas, fedavg_cfg, engine=cfg.engine, key=bundle.agg_key,
+            mask=mask2, weights=bundle.weights, mesh=mesh,
+        )
+        scaled = jax.tree_util.tree_map(lambda u: scale * u, update)
+        diags = {
+            **_update_diags(scaled, sflags, None, bundle, sdiags),
+            "degraded": jnp.asarray(1.0, jnp.float32),
+        }
+        return scaled, cold_carry(), diags
 
     def guard_n_active(n_active):
         # Eager guard: a concrete out-of-range n_active is a caller bug —
@@ -474,6 +616,9 @@ def make_round_phases(
         plan=plan,
         prep_state=prep_state,
         cache_size=lambda: max(local_phase._cache_size(), agg_phase._cache_size()),
+        apply=apply_phase,
+        fallback=fallback_phase,
+        cold_carry=cold_carry,
     )
 
 
@@ -517,10 +662,11 @@ def make_round_fn(
 
     def round_fn(state: RoundState, n_active=None):
         state, bundle = phases.local(state, n_active)
-        new_lora, new_carry, rpca_diags = phases.agg(
-            state.lora_global, state.agg_carry, bundle, 1.0
+        upd, new_carry, rpca_diags = phases.agg(state.agg_carry, bundle, 1.0)
+        state = state._replace(
+            lora_global=phases.apply(state.lora_global, upd),
+            agg_carry=new_carry,
         )
-        state = state._replace(lora_global=new_lora, agg_carry=new_carry)
         return state, {"mean_local_loss": bundle.loss_mean, **rpca_diags}
 
     round_fn._cache_size = phases.cache_size

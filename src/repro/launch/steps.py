@@ -176,6 +176,21 @@ def make_local_step(
     return local_step
 
 
+def apply_update(lora_global: PyTree, scaled_update: PyTree) -> PyTree:
+    """Land-time composition: fold an already-scaled update into the global.
+
+    The aggregation step returns the scaled *update*, not the applied
+    state (so K-deep in-flight aggregations can land in dispatch order
+    without overwriting each other — DESIGN.md §11); this is the single
+    apply they all compose through.  Multiplying the update by exactly 1.0
+    upstream is IEEE-exact, so the synchronous schedule stays bit-for-bit
+    the legacy ``lora + update``.
+    """
+    return jax.tree_util.tree_map(
+        lambda g, su: g + su, lora_global, scaled_update
+    )
+
+
 def make_agg_step(
     agg_cfg: Optional[AggregatorConfig] = None,
     *,
@@ -185,13 +200,15 @@ def make_agg_step(
 ) -> Callable:
     """Server half of the federated step, independently dispatchable.
 
-    ``(lora_global, deltas, mask=None, agg_key=None[, agg_carry], scale=1.0)
-    -> (new_lora_global, metrics[, new_carry])``: aggregate the stacked
-    client deltas and apply ``lora + scale * update``.  ``scale=1.0`` is
-    bit-for-bit the legacy unscaled apply; the async pipeline passes the
-    staleness-corrected ``fed.pipeline.stale_scale`` for updates landing
-    one round behind.  ``client_weights`` are per-client data sizes, used
-    when ``agg_cfg.weighting`` is data-size based.
+    ``(deltas, mask=None, agg_key=None[, agg_carry], scale=1.0)
+    -> (scaled_update, metrics[, new_carry])``: aggregate the stacked
+    client deltas and return ``scale * update`` for the caller to land via
+    ``apply_update`` (land-time composition — the driver may hold several
+    aggregations in flight, so the step must not bake in the global it was
+    dispatched from).  ``scale=1.0`` is bit-for-bit the legacy unscaled
+    update; the async pipeline passes the staleness-corrected damping for
+    updates landing behind.  ``client_weights`` are per-client data sizes,
+    used when ``agg_cfg.weighting`` is data-size based.
 
     ``agg_cfg.carry_mode != "none"`` (packed engine, fedrpca) makes the
     step a cross-round aggregation session: it threads the ``agg_carry``
@@ -232,14 +249,10 @@ def make_agg_step(
         )
     w_clients = None if client_weights is None else jnp.asarray(client_weights, jnp.float32)
 
-    def apply(lora_global, update, scale):
-        return jax.tree_util.tree_map(lambda g, u: g + scale * u, lora_global, update)
-
-    def agg_step(lora_global, deltas, mask=None, agg_key=None, agg_carry=None,
-                 scale=1.0):
+    def agg_step(deltas, mask=None, agg_key=None, agg_carry=None, scale=1.0):
         weights = w_clients if use_weights else None
         # agg_key varies the stochastic aggregators (dare) across rounds;
-        # None keeps the step a pure (lora, deltas) function.
+        # None keeps the step a pure function of the deltas.
         if carry_on:
             # Plan at trace time from the deltas' own structure (static),
             # thread the cross-round carry, and surface the session health
@@ -249,12 +262,14 @@ def make_agg_step(
                 plan, deltas, agg_carry, key=agg_key, mask=mask,
                 weights=weights, with_diagnostics=True,
             )
-            return apply(lora_global, update, scale), rpca_diag_summary(ediag), new_carry
+            scaled = jax.tree_util.tree_map(lambda u: scale * u, update)
+            return scaled, rpca_diag_summary(ediag), new_carry
         update = aggregate(
             deltas, agg_cfg, engine=engine, key=agg_key, mask=mask, weights=weights,
             mesh=mesh,
         )
-        return apply(lora_global, update, scale), {}
+        scaled = jax.tree_util.tree_map(lambda u: scale * u, update)
+        return scaled, {}
 
     agg_step.carry_on = carry_on
     return agg_step
@@ -312,12 +327,10 @@ def make_fed_train_step(
     def fed_train_step(base, lora_global, batch, agg_key=None, agg_carry=None):
         deltas, loss, mask = local_step(base, lora_global, batch, agg_key)
         if agg_step.carry_on:
-            new_lora, metrics, new_carry = agg_step(
-                lora_global, deltas, mask, agg_key, agg_carry
-            )
-            return new_lora, {"loss": loss, **metrics}, new_carry
-        new_lora, metrics = agg_step(lora_global, deltas, mask, agg_key)
-        return new_lora, {"loss": loss, **metrics}
+            upd, metrics, new_carry = agg_step(deltas, mask, agg_key, agg_carry)
+            return apply_update(lora_global, upd), {"loss": loss, **metrics}, new_carry
+        upd, metrics = agg_step(deltas, mask, agg_key)
+        return apply_update(lora_global, upd), {"loss": loss, **metrics}
 
     return fed_train_step
 

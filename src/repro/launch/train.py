@@ -10,9 +10,16 @@ written every ``--ckpt-every`` rounds.
 The step runs as its two halves (``steps.make_local_step`` +
 ``steps.make_agg_step``), each jitted separately, so every round logs
 per-phase wall clocks — and ``--pipeline`` overlaps them: round *r*'s
-local phase dispatches while round *r-1*'s aggregation is still in flight
-(bounded by ``--staleness``; landed updates are damped by the FedAsync
-scale, DESIGN.md §8).  ``--staleness 0`` keeps the synchronous schedule.
+local phase dispatches while up to ``--staleness`` earlier aggregations
+are still in flight (FedBuff-style K-deep buffering; updates land in
+dispatch order, damped adaptively from the carry residual — DESIGN.md §8,
+§11).  ``--staleness 0`` keeps the synchronous schedule.
+
+``--faults`` injects seeded failures (client dropout, stragglers,
+delta corruption: ``nan:0.1``, ``dropout:0.2,straggler:0.5``, ...); the
+pre-aggregation quarantine (``fed.guard``) switches on with them (force
+with ``--guard`` / ``--no-guard``), and the run exits nonzero if the
+final state is non-finite or a corrupted column ever escaped the screen.
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --reduced \
@@ -61,6 +68,8 @@ from repro.core import (
 )
 from repro.core import engine as engine_lib
 from repro.data import client_lm_datasets
+from repro.fed import faults as faults_lib
+from repro.fed import guard as guard_lib
 from repro.fed.pipeline import run_rounds
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -87,6 +96,7 @@ class _CliBundle(NamedTuple):
     mask: Any
     round_key: Any
     loss_mean: Any
+    fault_slots: Any = None  # injected-corruption marker (fed.faults)
 
 
 def build_batches(client_tokens: np.ndarray, per_client: int, seq: int, rng: np.random.Generator):
@@ -148,7 +158,18 @@ def main(argv=None):
     ap.add_argument("--staleness", type=int, default=1,
                     help="pipeline depth bound: how many aggregation "
                          "dispatches may stay in flight (0 = synchronous "
-                         "schedule; landed updates are scaled by 1/(1+s))")
+                         "schedule; landed updates are damped adaptively "
+                         "from the carry residual, FedAsync fallback)")
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault injection spec (fed.faults.parse): "
+                         "comma-separated name:value terms, e.g. 'nan:0.1' "
+                         "(10%% NaN-corrupted clients), "
+                         "'dropout:0.2,straggler:0.5,delay:2.0'")
+    ap.add_argument("--guard", dest="guard", action="store_true", default=None,
+                    help="force the pre-aggregation quarantine on "
+                         "(default: on exactly when --faults is set)")
+    ap.add_argument("--no-guard", dest="guard", action="store_false",
+                    help="force the pre-aggregation quarantine off")
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="shard the aggregation's packed client axis across "
                          "this many mesh shards (DESIGN.md §10; 0/1 = single "
@@ -195,13 +216,14 @@ def main(argv=None):
             mesh = make_host_mesh(args.mesh_shards)
             log.info("aggregation client axis sharded over %d host devices",
                      args.mesh_shards)
-    if args.pipeline and args.staleness > 1:
-        ap.error(
-            f"--staleness {args.staleness} exceeds the double buffer: the "
-            "aggregation applies its update to the global it was dispatched "
-            "from, so depths beyond 1 would overwrite in-flight updates "
-            "(deeper queues need an update-at-land apply; see ROADMAP)"
-        )
+    fault_model = None
+    if args.faults:
+        fcfg = faults_lib.parse(args.faults, seed=args.seed)
+        if fcfg.active:
+            fault_model = faults_lib.FaultModel(fcfg)
+            log.info("fault injection on: %s", fcfg)
+    guard_on = fault_model is not None if args.guard is None else args.guard
+    guard_cfg = guard_lib.GuardConfig() if guard_on else None
 
     cfg = cfglib.get_config(args.arch)
     if args.reduced:
@@ -222,18 +244,19 @@ def main(argv=None):
         method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting,
         svt_mode=args.svt_mode, svt_rank=args.svt_rank, svt_sweeps=args.svt_sweeps,
         carry_mode=args.carry_mode,
+        guard_energy_k=guard_cfg.energy_k if guard_cfg is not None else 0.0,
     )
     # Cross-round aggregation session: the carry pytree is initialized once
     # from the plan (zeros deltas with the round's client axis) so every
     # round shares one compiled step, then threads through the jitted step.
     carry = None
+    agg_plan = None
     if carry_on:
         example = jax.tree_util.tree_map(
             lambda x: jnp.zeros((args.clients,) + x.shape, x.dtype), lora
         )
-        carry = engine_lib.init_agg_carry(
-            engine_lib.plan_aggregation(example, agg, mesh=mesh)
-        )
+        agg_plan = engine_lib.plan_aggregation(example, agg, mesh=mesh)
+        carry = engine_lib.init_agg_carry(agg_plan)
 
     start_round = 0
     if args.resume and args.ckpt_dir:
@@ -297,28 +320,94 @@ def main(argv=None):
         )
         round_key = jax.random.fold_in(key, 1000 + r)
         deltas, loss, mask = local_step(base, state.lora_global, batch, round_key)
+        fault_slots = None
+        if fault_model is not None:
+            if mask is None:
+                mask = jnp.ones((args.clients,), jnp.float32)
+            deltas, mask, fault_slots = fault_model.inject(r, deltas, mask)
         bundle = _CliBundle(deltas=deltas, mask=mask, round_key=round_key,
-                            loss_mean=loss)
+                            loss_mean=loss, fault_slots=fault_slots)
         return state._replace(round_idx=r + 1), bundle
 
-    def cli_agg(lora_global, agg_carry, bundle: _CliBundle, scale):
+    screen_jit = (
+        jax.jit(lambda d, m: guard_lib.screen(d, m, guard_cfg))
+        if guard_cfg is not None else None
+    )
+
+    def _screen(bundle: _CliBundle):
+        deltas, mask2 = bundle.deltas, bundle.mask
+        sflags, sdiags = None, {}
+        if screen_jit is not None:
+            if mask2 is None:
+                mask2 = jnp.ones((args.clients,), jnp.float32)
+            deltas, mask2, g = screen_jit(deltas, mask2)
+            sflags = g.pop("flags")
+            sdiags = g
+        return deltas, mask2, sflags, sdiags
+
+    def _finite(tree):
+        return jnp.all(jnp.stack([
+            jnp.all(jnp.isfinite(leaf))
+            for leaf in jax.tree_util.tree_leaves(tree)
+        ])).astype(jnp.float32)
+
+    def _fault_diags(upd, sflags, bundle: _CliBundle, sdiags):
+        diags = dict(sdiags)
+        diags["update_finite"] = _finite(upd)
+        if bundle.fault_slots is not None:
+            diags["fault_injected"] = jnp.sum(bundle.fault_slots)
+            if sflags is not None:
+                diags["fault_caught"] = jnp.sum(sflags * bundle.fault_slots)
+        return diags
+
+    def cli_agg(agg_carry, bundle: _CliBundle, scale):
+        deltas, mask2, sflags, sdiags = _screen(bundle)
         if carry_on:
-            new_lora, metrics, new_carry = agg_step(
-                lora_global, bundle.deltas, bundle.mask, bundle.round_key,
-                agg_carry, scale,
+            upd, metrics, new_carry = agg_step(
+                deltas, mask2, bundle.round_key, agg_carry, scale
             )
-            return new_lora, new_carry, metrics
-        new_lora, metrics = agg_step(
-            lora_global, bundle.deltas, bundle.mask, bundle.round_key, scale=scale
+        else:
+            upd, metrics = agg_step(deltas, mask2, bundle.round_key, scale=scale)
+            new_carry = agg_carry
+        return upd, new_carry, {**metrics, **_fault_diags(upd, sflags, bundle, sdiags)}
+
+    def cli_cold_carry():
+        return engine_lib.init_agg_carry(agg_plan) if agg_plan is not None else None
+
+    # Degradation floor for the land-time supervisor: plain masked FedAvg
+    # over the screened deltas, carry-free.
+    fallback_step = jax.jit(
+        steps_lib.make_agg_step(
+            agg.replace(method="fedavg", carry_mode="none", guard_energy_k=0.0),
+            engine=args.engine,
+            client_weights=client_sizes / client_sizes.sum(),
+            mesh=mesh,
         )
-        return new_lora, agg_carry, metrics
+    )
+
+    def cli_fallback(bundle: _CliBundle, scale):
+        deltas, mask2, sflags, sdiags = _screen(bundle)
+        upd, _ = fallback_step(deltas, mask2, bundle.round_key, scale=scale)
+        diags = {**_fault_diags(upd, sflags, bundle, sdiags), "degraded": 1.0}
+        return upd, cli_cold_carry(), diags
 
     phases = types.SimpleNamespace(
-        local=cli_local, agg=cli_agg, prep_state=lambda s: s
+        local=cli_local, agg=cli_agg, prep_state=lambda s: s,
+        apply=jax.jit(steps_lib.apply_update),
+        fallback=cli_fallback, cold_carry=cli_cold_carry,
     )
+
+    fault_totals = {"injected": 0.0, "caught": 0.0, "escapes": 0.0,
+                    "degraded": 0.0, "retries": 0.0}
 
     def on_round(r, state: _CliState, diags):
         rg = start_round + r  # global round index (resume offset)
+        fault_totals["injected"] += float(diags.get("fault_injected", 0.0))
+        fault_totals["caught"] += float(diags.get("fault_caught", 0.0))
+        if "screen_clean" in diags and float(diags["screen_clean"]) == 0.0:
+            fault_totals["escapes"] += 1.0
+        fault_totals["degraded"] += float(diags.get("degraded", 0.0))
+        fault_totals["retries"] += float(diags.get("supervisor_retry", 0.0))
         timers = {k: diags.get(k, 0.0) for k in ("t_local_s", "t_agg_s", "t_overlap_s")}
         extra = "".join(
             f"  {k}={float(v):.3g}" for k, v in diags.items()
@@ -351,6 +440,25 @@ def main(argv=None):
         max(args.rounds - start_round, 0), staleness=depth, on_round=on_round,
     )
     lora = state.lora_global
+    if fault_model is not None or guard_cfg is not None:
+        inj, caught = fault_totals["injected"], fault_totals["caught"]
+        log.info(
+            "fault summary: injected=%d caught=%d (%.0f%%) screen_escapes=%d "
+            "supervisor_retries=%d degraded_rounds=%d",
+            int(inj), int(caught), 100.0 * caught / max(inj, 1.0),
+            int(fault_totals["escapes"]), int(fault_totals["retries"]),
+            int(fault_totals["degraded"]),
+        )
+        if fault_totals["escapes"]:
+            log.error("quarantine escape: a screened round was not finite")
+            sys.exit(1)
+    final_finite = all(
+        bool(jnp.all(jnp.isfinite(leaf)))
+        for leaf in jax.tree_util.tree_leaves(lora)
+    )
+    if not final_finite:
+        log.error("final global LoRA state is non-finite")
+        sys.exit(1)
     log.info("final eval loss %.4f", evaluate(base, lora, cfg, test.tokens))
 
 

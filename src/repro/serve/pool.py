@@ -195,7 +195,23 @@ class AdapterPool:
 
     def publish_round(self, adapter_id, base_tree, update_tree, lr: float = 1.0) -> int:
         """fed→serve in one call: apply an ``AggSession.step`` update to the
-        tenant's current adapter tree and hot-swap the result into its slot."""
+        tenant's current adapter tree and hot-swap the result into its slot.
+
+        Refuses non-finite updates: a NaN/Inf leaf would poison the pooled
+        buffer for every request routed to the slot, so the update is
+        validated *before* anything is written (the tenant keeps serving
+        its previous adapter).
+        """
+        bad = []
+        for path, leaf in jax.tree_util.tree_leaves_with_path(update_tree):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                bad.append(jax.tree_util.keystr(path))
+        if bad:
+            raise ValueError(
+                f"refusing to publish round update for adapter {adapter_id!r}: "
+                f"non-finite leaves {bad} (the server-side quarantine should "
+                "have caught this — see fed.guard)"
+            )
         new_tree = tree_map(
             lambda g, u: (g + lr * u.astype(g.dtype)).astype(g.dtype),
             base_tree, update_tree,

@@ -93,9 +93,9 @@ class TestTrainCLIValidation:
                   "--pipeline", "--staleness", "-1"])
         assert exc.value.code == 2
 
-    def test_staleness_beyond_double_buffer_refused(self):
-        main = self._main()
-        with pytest.raises(SystemExit) as exc:
+    def test_bad_faults_spec_refused(self):
+        from repro.launch.train import main
+
+        with pytest.raises(ValueError, match="faults"):
             main(["--rounds", "1", "--clients", "2", "--reduced",
-                  "--pipeline", "--staleness", "2"])
-        assert exc.value.code == 2
+                  "--faults", "bogus"])

@@ -1,0 +1,662 @@
+"""Fault injection, quarantine, and graceful degradation (DESIGN.md §11).
+
+Covers the robustness contract end to end: the ``--faults`` spec grammar
+and seeded injector, deadline-based cohort formation, the guard screen's
+parity with a hand-masked oracle across every method on both engines (a
+quarantined round must aggregate exactly like a round where the bad
+clients were never sampled), the RPCA sparse-energy layer catching finite
+element-wise poison the norm screen cannot see, the land-time supervisor
+ladder (cold-carry retry -> masked-FedAvg fallback), a faulted K-deep
+pipelined run with the zero-escapes / >=90%-caught acceptance bars, and
+the durability satellites (atomic checksummed checkpoints, non-finite
+publish refusal).
+"""
+import os
+import types
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    checkpoint_metadata,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.core import ENGINES, METHODS, AggregatorConfig, aggregate
+from repro.core.aggregators import client_flag_vector
+from repro.fed import (
+    FaultConfig,
+    FaultModel,
+    FedRunConfig,
+    GuardConfig,
+    LocalSpec,
+    faults,
+    make_deadline_sampler,
+    make_sampler,
+    run_rounds,
+    run_simulation,
+    screen,
+    synth,
+)
+from repro.optim import make_optimizer
+from repro.serve import AdapterPool
+
+COHORT = 8
+
+
+def delta_tree(rng, n_clients=COHORT, noise=1.0):
+    """Stacked client deltas: two modules, mixed shapes, benign spread."""
+    f = lambda shape: jnp.asarray(rng.normal(size=shape) * noise, jnp.float32)
+    return {
+        "l0": {"A": f((n_clients, 8, 2)), "B": f((n_clients, 2, 8))},
+        "l1": {"A": f((n_clients, 16, 2)), "B": f((n_clients, 2, 16))},
+    }
+
+
+def zero_clients(tree, idx):
+    """Hand-masked oracle: zero the given client columns via where-select."""
+    keep = np.ones((COHORT,), np.float32)
+    keep[list(idx)] = 0.0
+    k = jnp.asarray(keep)
+
+    def _zero(x):
+        kk = k.reshape((COHORT,) + (1,) * (x.ndim - 1))
+        return jnp.where(kk > 0, x, jnp.zeros_like(x))
+
+    return jax.tree_util.tree_map(_zero, tree)
+
+
+def tree_finite(tree) -> bool:
+    return all(
+        bool(jnp.all(jnp.isfinite(leaf)))
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# FaultConfig / --faults spec grammar
+# ---------------------------------------------------------------------------
+
+
+class TestFaultSpec:
+    def test_corruption_mode_terms_set_probability_and_mode(self):
+        cfg = faults.parse("scale:0.3")
+        assert cfg.corrupt == 0.3 and cfg.corrupt_mode == "scale"
+        assert cfg.active
+
+    def test_terms_compose_left_to_right(self):
+        cfg = faults.parse("dropout:0.2,straggler:0.5,nan:0.1,delay:3.5,seed:7")
+        assert cfg.dropout == 0.2 and cfg.straggler == 0.5
+        assert cfg.corrupt == 0.1 and cfg.corrupt_mode == "nan"
+        assert cfg.straggler_delay_mean == 3.5 and cfg.seed == 7
+
+    def test_empty_spec_is_inactive(self):
+        assert not faults.parse("").active
+        assert not FaultConfig().active
+
+    @pytest.mark.parametrize("spec", ["bogus", "nan", "frobnicate:0.5"])
+    def test_bad_terms_refused(self, spec):
+        with pytest.raises(ValueError, match="--faults"):
+            faults.parse(spec)
+
+    def test_bad_probability_refused(self):
+        with pytest.raises(ValueError, match="not a probability"):
+            FaultConfig(dropout=1.5)
+
+    def test_bad_mode_refused(self):
+        with pytest.raises(ValueError, match="corrupt_mode"):
+            FaultConfig(corrupt_mode="zeroes")
+
+
+# ---------------------------------------------------------------------------
+# FaultModel.inject
+# ---------------------------------------------------------------------------
+
+
+class TestInjection:
+    def test_same_seed_and_round_injects_identically(self, rng):
+        model = FaultModel(FaultConfig(dropout=0.3, corrupt=0.4, seed=5))
+        deltas = delta_tree(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        d1, m1, s1 = model.inject(3, deltas, mask)
+        d2, m2, s2 = model.inject(3, deltas, mask)
+        assert_trees_equal(d1, d2)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        # different rounds draw a different fault pattern somewhere
+        draws = {
+            tuple(np.asarray(model.inject(r, deltas, mask)[2]))
+            for r in range(8)
+        }
+        assert len(draws) > 1
+
+    @pytest.mark.parametrize("mode", faults.CORRUPT_MODES)
+    def test_corruption_touches_exactly_the_flagged_clients(self, rng, mode):
+        model = FaultModel(
+            FaultConfig(corrupt=0.5, corrupt_mode=mode, corrupt_scale=100.0,
+                        seed=2)
+        )
+        deltas = delta_tree(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        out, new_mask, slots = model.inject(0, deltas, mask)
+        slots = np.asarray(slots)
+        assert slots.sum() > 0  # p=0.5 over 8 slots; seeded, so stable
+        np.testing.assert_array_equal(np.asarray(new_mask), np.asarray(mask))
+        for leaf_in, leaf_out in zip(
+            jax.tree_util.tree_leaves(deltas), jax.tree_util.tree_leaves(out)
+        ):
+            for c in range(COHORT):
+                a, b = np.asarray(leaf_in[c]), np.asarray(leaf_out[c])
+                if slots[c] == 0:
+                    np.testing.assert_array_equal(a, b)
+                elif mode == "nan":
+                    assert np.all(np.isnan(b))
+                elif mode == "inf":
+                    assert np.all(np.isinf(b))
+                elif mode == "scale":
+                    np.testing.assert_allclose(b, a * 100.0, rtol=1e-6)
+                else:  # sign
+                    np.testing.assert_array_equal(b, -a)
+
+    def test_dropout_folds_into_mask_not_deltas(self, rng):
+        model = FaultModel(FaultConfig(dropout=0.5, seed=1))
+        deltas = delta_tree(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        out, new_mask, slots = model.inject(0, deltas, mask)
+        assert_trees_equal(out, deltas)
+        nm = np.asarray(new_mask)
+        assert set(np.unique(nm)) <= {0.0, 1.0} and nm.sum() < COHORT
+        assert np.asarray(slots).sum() == 0
+
+    def test_never_empties_the_cohort(self, rng):
+        model = FaultModel(FaultConfig(dropout=1.0, seed=0))
+        deltas = delta_tree(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        _, new_mask, _ = model.inject(0, deltas, mask)
+        np.testing.assert_array_equal(np.asarray(new_mask), np.asarray(mask))
+
+
+class TestDeadlineSampler:
+    def test_deterministic_and_only_arrived_seats_valid(self):
+        n_clients, pad = 12, 4
+        model = FaultModel(
+            FaultConfig(straggler=0.6, straggler_delay_mean=3.0, deadline=1.0)
+        )
+        inner = make_sampler("uniform", n_clients, 2 * pad)
+        sample = make_deadline_sampler(model, inner, n_clients, pad)
+        key = jax.random.PRNGKey(0)
+        for r in range(4):
+            cohort, valid = sample(key, r)
+            cohort2, valid2 = sample(key, r)
+            np.testing.assert_array_equal(np.asarray(cohort), np.asarray(cohort2))
+            np.testing.assert_array_equal(np.asarray(valid), np.asarray(valid2))
+            assert cohort.shape == (pad,) and valid.shape == (pad,)
+            d_now = np.asarray(model.delays(r, n_clients))[np.asarray(cohort)]
+            for seat in range(pad):
+                if valid[seat] > 0:
+                    assert d_now[seat] <= model.cfg.deadline
+
+    def test_late_arrivals_get_priority_seats_next_round(self):
+        n_clients, pad = 12, 4
+        model = FaultModel(
+            FaultConfig(straggler=0.6, straggler_delay_mean=3.0, deadline=1.0,
+                        seed=3)
+        )
+        # all clients are candidates every round -> seat choice is purely
+        # the deadline ranking, so buffered clients must sort first
+        inner = make_sampler("uniform", n_clients, n_clients)
+        sample = make_deadline_sampler(model, inner, n_clients, pad)
+        for r in range(1, 5):
+            cohort = np.asarray(sample(jax.random.PRNGKey(r), r)[0])
+            late_prev = np.asarray(
+                model.delays(r - 1, n_clients) > model.cfg.deadline
+            )
+            buffered = set(np.flatnonzero(late_prev).tolist())
+            # buffered clients outrank everyone else, so they fill as many
+            # of the pad seats as there are buffered clients
+            seated = len(buffered & set(cohort.tolist()))
+            assert seated == min(pad, len(buffered))
+
+
+# ---------------------------------------------------------------------------
+# Guard screen: hand-masked oracle parity across METHODS x ENGINES
+# ---------------------------------------------------------------------------
+
+
+class TestScreen:
+    BAD_NAN, BAD_NORM = 2, 5
+
+    def poisoned(self, rng):
+        deltas = delta_tree(rng)
+        deltas["l0"]["A"] = deltas["l0"]["A"].at[self.BAD_NAN].set(jnp.nan)
+        deltas = jax.tree_util.tree_map(
+            lambda x: x.at[self.BAD_NORM].multiply(1e6), deltas
+        )
+        return deltas
+
+    def test_flags_match_hand_mask(self, rng):
+        deltas = self.poisoned(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        cleaned, new_mask, diags = screen(deltas, mask, GuardConfig())
+        want_mask = np.ones((COHORT,), np.float32)
+        want_mask[[self.BAD_NAN, self.BAD_NORM]] = 0.0
+        np.testing.assert_array_equal(np.asarray(new_mask), want_mask)
+        np.testing.assert_array_equal(
+            np.asarray(diags["flags"]), 1.0 - want_mask
+        )
+        assert float(diags["guard_nonfinite"]) == 1.0
+        assert float(diags["guard_norm_outliers"]) == 1.0
+        assert float(diags["guard_quarantined"]) == 2.0
+        assert float(diags["screen_clean"]) == 1.0
+        assert_trees_equal(
+            cleaned, zero_clients(deltas, [self.BAD_NAN, self.BAD_NORM])
+        )
+
+    @pytest.mark.parametrize("method", METHODS)
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_quarantined_round_aggregates_like_hand_masked(
+        self, rng, method, engine
+    ):
+        """The end-to-end quarantine contract: for every method on both
+        engines, aggregating the screened round equals aggregating a round
+        where the poisoned clients were hand-zeroed and hand-masked — and
+        non-finite input never yields a non-finite update."""
+        deltas = self.poisoned(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        cleaned, new_mask, _ = screen(deltas, mask, GuardConfig())
+        cfg = AggregatorConfig(
+            method=method, **({"rpca_iters": 8} if method == "fedrpca" else {})
+        )
+        key = jax.random.PRNGKey(0)
+        got = aggregate(cleaned, cfg, engine=engine, key=key, mask=new_mask)
+        hand = zero_clients(deltas, [self.BAD_NAN, self.BAD_NORM])
+        hand_mask = jnp.asarray(
+            [0.0 if c in (self.BAD_NAN, self.BAD_NORM) else 1.0
+             for c in range(COHORT)], jnp.float32
+        )
+        want = aggregate(hand, cfg, engine=engine, key=key, mask=hand_mask)
+        assert tree_finite(got)
+        assert_trees_equal(got, want)
+
+    def test_benign_cohort_passes_untouched(self, rng):
+        deltas = delta_tree(rng)
+        mask = jnp.ones((COHORT,), jnp.float32)
+        cleaned, new_mask, diags = screen(deltas, mask, GuardConfig())
+        assert float(diags["guard_quarantined"]) == 0.0
+        np.testing.assert_array_equal(np.asarray(new_mask), np.asarray(mask))
+        assert_trees_equal(cleaned, deltas)
+
+    def test_screen_respects_existing_mask(self, rng):
+        """An already-invalid slot stays invalid and its (possibly garbage)
+        column is zeroed, but it is not counted as quarantined."""
+        deltas = delta_tree(rng)
+        deltas["l1"]["B"] = deltas["l1"]["B"].at[0].set(jnp.inf)
+        mask = jnp.ones((COHORT,), jnp.float32).at[0].set(0.0)
+        cleaned, new_mask, diags = screen(deltas, mask, GuardConfig())
+        np.testing.assert_array_equal(np.asarray(new_mask), np.asarray(mask))
+        assert float(diags["guard_quarantined"]) == 0.0
+        assert float(diags["screen_clean"]) == 1.0
+        assert_trees_equal(cleaned, zero_clients(deltas, [0]))
+
+
+class TestEnergyGuard:
+    def correlated_cohort(self, rng):
+        """Clients share a common signal (low-rank across the cohort) with
+        small idiosyncratic noise; client 5 carries element-wise spike
+        poison — finite and norm-plausible, so the norm screen misses it,
+        but the spikes cannot hide in the rank-1 column span."""
+        base_a = rng.normal(size=(8, 2)).astype(np.float32)
+        base_b = rng.normal(size=(2, 8)).astype(np.float32)
+        A = np.stack(
+            [base_a + 0.05 * rng.normal(size=(8, 2)).astype(np.float32)
+             for _ in range(COHORT)]
+        )
+        B = np.stack(
+            [base_b + 0.05 * rng.normal(size=(2, 8)).astype(np.float32)
+             for _ in range(COHORT)]
+        )
+        A[5, 0, 0] += 3.0
+        A[5, 3, 1] -= 3.0
+        B[5, 1, 2] += 3.0
+        return {"l0": {"A": jnp.asarray(A), "B": jnp.asarray(B)}}
+
+    def test_spike_poison_slips_past_the_norm_screen(self, rng):
+        tree = self.correlated_cohort(rng)
+        _, _, diags = screen(tree, jnp.ones((COHORT,), jnp.float32),
+                             GuardConfig())
+        assert float(diags["guard_quarantined"]) == 0.0
+
+    def test_energy_layer_flags_it_on_both_engines(self, rng):
+        tree = self.correlated_cohort(rng)
+        cfg = AggregatorConfig(
+            method="fedrpca", rpca_iters=20, guard_energy_k=3.0
+        )
+        flags = {}
+        for engine in ENGINES:
+            out, diag = aggregate(tree, cfg, engine=engine,
+                                  with_diagnostics=True)
+            assert tree_finite(out)
+            flags[engine] = np.asarray(client_flag_vector(diag))
+            want = np.zeros((COHORT,), np.float32)
+            want[5] = 1.0
+            np.testing.assert_array_equal(flags[engine], want)
+        np.testing.assert_array_equal(flags["packed"], flags["reference"])
+
+    def test_guard_off_returns_no_flag_vector(self, rng):
+        tree = self.correlated_cohort(rng)
+        cfg = AggregatorConfig(method="fedrpca", rpca_iters=8)
+        for engine in ENGINES:
+            _, diag = aggregate(tree, cfg, engine=engine,
+                                with_diagnostics=True)
+            assert client_flag_vector(diag) is None
+
+
+# ---------------------------------------------------------------------------
+# Supervisor ladder (land-time degradation)
+# ---------------------------------------------------------------------------
+
+
+class _StubState(NamedTuple):
+    lora_global: Any
+    agg_carry: Any
+
+
+class TestSupervisor:
+    def _phases(self, calls, agg_fn):
+        bundle = types.SimpleNamespace(loss_mean=jnp.asarray(0.0))
+
+        def fallback(b, scale):
+            calls["fallback"] += 1
+            return (
+                {"w": jnp.asarray(2.0) * scale},
+                (),
+                {"update_finite": jnp.asarray(1.0), "degraded": 1.0},
+            )
+
+        def cold_carry():
+            calls["cold"] += 1
+            return ()
+
+        return types.SimpleNamespace(
+            local=lambda state, n_active=None: (state, bundle),
+            agg=agg_fn,
+            prep_state=lambda s: s,
+            apply=lambda g, u: jax.tree_util.tree_map(lambda a, b: a + b, g, u),
+            fallback=fallback,
+            cold_carry=cold_carry,
+        )
+
+    def test_nonfinite_update_retries_cold_then_degrades(self):
+        calls = {"agg": 0, "fallback": 0, "cold": 0}
+
+        def bad_agg(carry, bundle, scale):
+            calls["agg"] += 1
+            return (
+                {"w": jnp.asarray(jnp.nan)},
+                carry,
+                {"update_finite": jnp.asarray(0.0)},
+            )
+
+        phases = self._phases(calls, bad_agg)
+        seen = []
+        state = _StubState({"w": jnp.asarray(1.0)}, ())
+        with pytest.warns(UserWarning, match="non-finite"):
+            out = run_rounds(
+                phases, state, 1, staleness=0, timers=False,
+                on_round=lambda r, s, d: seen.append(d),
+            )
+        # one live agg + one cold retry, then the masked-FedAvg fallback
+        assert calls == {"agg": 2, "cold": 1, "fallback": 1}
+        assert float(out.lora_global["w"]) == 3.0  # 1.0 + fallback's 2.0
+        assert seen[0]["degraded"] == 1.0
+        assert seen[0]["supervisor_retry"] == 1.0
+
+    def test_cold_retry_alone_recovers(self):
+        calls = {"agg": 0, "fallback": 0, "cold": 0}
+
+        def flaky_agg(carry, bundle, scale):
+            calls["agg"] += 1
+            # poisoned warm carry (the tuple threaded by run_rounds) fails;
+            # the supervisor's cold retry (carry == ()) succeeds
+            if carry != ():
+                return (
+                    {"w": jnp.asarray(jnp.inf)},
+                    carry,
+                    {"update_finite": jnp.asarray(0.0)},
+                )
+            return (
+                {"w": jnp.asarray(5.0) * scale},
+                carry,
+                {"update_finite": jnp.asarray(1.0)},
+            )
+
+        phases = self._phases(calls, flaky_agg)
+        seen = []
+        state = _StubState({"w": jnp.asarray(1.0)}, ("poisoned",))
+        with pytest.warns(UserWarning, match="cold carry"):
+            out = run_rounds(
+                phases, state, 1, staleness=0, timers=False,
+                on_round=lambda r, s, d: seen.append(d),
+            )
+        assert calls == {"agg": 2, "cold": 1, "fallback": 0}
+        assert float(out.lora_global["w"]) == 6.0
+        assert seen[0]["supervisor_retry"] == 1.0
+        assert "degraded" not in seen[0]
+
+    def test_finite_rounds_skip_the_ladder(self):
+        calls = {"agg": 0, "fallback": 0, "cold": 0}
+
+        def good_agg(carry, bundle, scale):
+            calls["agg"] += 1
+            return (
+                {"w": jnp.asarray(1.0) * scale},
+                carry,
+                {"update_finite": jnp.asarray(1.0)},
+            )
+
+        phases = self._phases(calls, good_agg)
+        out = run_rounds(
+            phases, _StubState({"w": jnp.asarray(0.0)}, ()), 3,
+            staleness=0, timers=False,
+        )
+        assert calls == {"agg": 3, "cold": 0, "fallback": 0}
+        assert float(out.lora_global["w"]) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Faulted end-to-end run (the acceptance bars)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultedRun:
+    @pytest.fixture(scope="class")
+    def task(self):
+        return synth.make_synth_task(
+            n_clients=6, n_per_client=32, alpha=0.3, seed=2
+        )
+
+    def _cfg(self, task, **kw):
+        kw.setdefault("rounds", 8)
+        return FedRunConfig(
+            aggregator=AggregatorConfig(method="fedrpca", rpca_iters=8),
+            local=LocalSpec(
+                loss_fn=lambda base, lora, b: synth.loss_fn(
+                    base, lora, b, task.lora_scale
+                ),
+                optimizer=make_optimizer("adam", 1e-2),
+                local_steps=2,
+                batch_size=16,
+                lr=1e-2,
+            ),
+            seed=0,
+            **kw,
+        )
+
+    def test_k_deep_pipeline_survives_nan_corruption(self, task):
+        """--staleness 3 --faults nan:0.25 analogue of the acceptance cell:
+        the run completes with a finite global, the screen never leaks a
+        non-finite value downstream (zero escapes), and >=90% of the
+        injected corrupted clients are flagged (NaN corruption is caught
+        exactly, so this is 100% here)."""
+        cfg = self._cfg(
+            task,
+            pipeline=True,
+            staleness=3,
+            faults=FaultConfig(corrupt=0.25, corrupt_mode="nan", seed=3),
+        )
+        totals = {"injected": 0.0, "caught": 0.0, "escapes": 0}
+        rows = []
+
+        def log_fn(r, row):
+            rows.append(row)
+            totals["injected"] += row.get("fault_injected", 0.0)
+            totals["caught"] += row.get("fault_caught", 0.0)
+            if row.get("screen_clean", 1.0) == 0.0:
+                totals["escapes"] += 1
+
+        lora, hist = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y,
+            cfg,
+            lambda lora: synth.accuracy(
+                task.base, lora, task.test_x, task.test_y, task.lora_scale
+            ),
+            log_fn=log_fn,
+        )
+        assert len(rows) == 8 and len(hist) == 8
+        assert tree_finite(lora)
+        assert totals["escapes"] == 0
+        assert totals["injected"] > 0  # the seed does plant faults
+        assert totals["caught"] >= 0.9 * totals["injected"]
+
+    def test_guard_auto_enables_with_faults(self, task):
+        """cfg.guard=None turns the screen on exactly when faults are
+        configured: a scale-corrupted run stays finite and reports the
+        guard diagnostics without an explicit GuardConfig."""
+        cfg = self._cfg(
+            task,
+            rounds=3,
+            faults=FaultConfig(corrupt=0.3, corrupt_mode="scale",
+                               corrupt_scale=1e6, seed=1),
+        )
+        rows = []
+        lora, _ = run_simulation(
+            task.base, synth.init_lora(task), task.client_x, task.client_y,
+            cfg,
+            lambda lora: synth.accuracy(
+                task.base, lora, task.test_x, task.test_y, task.lora_scale
+            ),
+            log_fn=lambda r, row: rows.append(row),
+        )
+        assert tree_finite(lora)
+        assert all("guard_quarantined" in row for row in rows)
+        assert all(row["screen_clean"] == 1.0 for row in rows)
+
+
+# ---------------------------------------------------------------------------
+# Durability satellites: checkpoints and the serving pool
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointDurability:
+    def _tree(self, v=0.0):
+        return {
+            "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + v,
+            "b": jnp.ones((4,), jnp.float32) * v,
+        }
+
+    def test_save_is_atomic_and_checksummed(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        save_checkpoint(self._tree(1.0), ckpt, 1)
+        leftovers = [
+            f for root, _, files in os.walk(str(tmp_path))
+            for f in files if f.endswith(".tmp")
+        ]
+        assert leftovers == []
+        meta = checkpoint_metadata(ckpt)
+        assert meta["step"] == 1 and isinstance(meta["crc32"], int)
+
+    def _corrupt(self, ckpt, step):
+        path = os.path.join(ckpt, f"step_{step:08d}", "state.msgpack")
+        with open(path, "r+b") as f:
+            f.seek(os.path.getsize(path) // 2)
+            f.write(b"\xde\xad\xbe\xef" * 8)
+
+    def test_corrupted_newest_falls_back_to_intact_step(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        save_checkpoint(self._tree(1.0), ckpt, 1)
+        save_checkpoint(self._tree(2.0), ckpt, 2)
+        self._corrupt(ckpt, 2)
+        with pytest.warns(UserWarning, match="corrupted checkpoint step 2"):
+            restored, meta = restore_checkpoint(ckpt, self._tree())
+        assert meta["step"] == 1
+        assert_trees_equal(restored, self._tree(1.0))
+
+    def test_explicit_step_stays_strict(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        save_checkpoint(self._tree(1.0), ckpt, 1)
+        save_checkpoint(self._tree(2.0), ckpt, 2)
+        self._corrupt(ckpt, 2)
+        with pytest.raises(CheckpointCorruptError):
+            restore_checkpoint(ckpt, self._tree(), step=2)
+
+    def test_all_corrupt_raises(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        save_checkpoint(self._tree(1.0), ckpt, 1)
+        save_checkpoint(self._tree(2.0), ckpt, 2)
+        self._corrupt(ckpt, 1)
+        self._corrupt(ckpt, 2)
+        with pytest.warns(UserWarning):
+            with pytest.raises(CheckpointCorruptError, match="every checkpoint"):
+                restore_checkpoint(ckpt, self._tree())
+
+    def test_torn_file_detected(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        save_checkpoint(self._tree(1.0), ckpt, 1)
+        path = os.path.join(ckpt, "step_00000001", "state.msgpack")
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(CheckpointCorruptError):
+            restore_checkpoint(ckpt, self._tree(), step=1)
+
+
+class TestPublishRefusal:
+    def _template(self):
+        return {
+            "a": jnp.zeros((2, 3), jnp.float32),
+            "b": jnp.zeros((4,), jnp.float32),
+        }
+
+    def test_nonfinite_round_update_refused_and_pool_untouched(self):
+        pool = AdapterPool(self._template(), n_slots=2)
+        base = self._template()
+        bad = {
+            "a": jnp.full((2, 3), jnp.nan, jnp.float32),
+            "b": jnp.ones((4,), jnp.float32),
+        }
+        with pytest.raises(ValueError, match="non-finite"):
+            pool.publish_round("t0", base, bad)
+        assert pool.publishes == 0 and "t0" not in pool
+        assert tree_finite(pool.pooled)
+
+    def test_finite_round_update_publishes(self):
+        pool = AdapterPool(self._template(), n_slots=2)
+        base = self._template()
+        upd = {
+            "a": jnp.ones((2, 3), jnp.float32),
+            "b": jnp.ones((4,), jnp.float32),
+        }
+        new_tree = pool.publish_round("t0", base, upd, lr=0.5)
+        assert pool.publishes == 1 and "t0" in pool
+        assert_trees_equal(new_tree, jax.tree_util.tree_map(
+            lambda g, u: g + 0.5 * u, base, upd
+        ))

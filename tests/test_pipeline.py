@@ -1,13 +1,13 @@
-"""Async double-buffered round pipeline (DESIGN.md §8).
+"""Async buffered round pipeline (DESIGN.md §8, §11).
 
 The load-bearing guarantee: the staleness=0 pipeline is *bit-for-bit* the
 synchronous round driver — same compiled phases, same dispatch order, same
 scale — for every aggregation method on both engines.  On top of that:
-staleness=1 runs land updates in round order with the FedAsync scale and
-still converge, the cross-round carry hands off between in-flight
-dispatches, the split launch-layer step pair composes back to the
-monolithic ``fed_train_step``, and the aggregation session checkpoint
-round-trips with its carry.
+staleness>=1 runs land scaled updates in dispatch order (land-time
+composition, K-deep past the double buffer) and still converge, the
+cross-round carry hands off between in-flight dispatches, the split
+launch-layer step pair composes back to the monolithic ``fed_train_step``,
+and the aggregation session checkpoint round-trips with its carry.
 """
 import dataclasses
 
@@ -194,8 +194,9 @@ class TestPipelinedRounds:
         assert {"fallback_count", "live_rank_mean", "carry_hit_rate"} <= set(logs[-1])
 
     def test_staleness_one_applies_damped_update(self, task):
-        """Round 0's landed global must differ from synchronous by exactly
-        the stale scale on the same aggregated update."""
+        """The agg phase returns the scaled *update* (land-time composition):
+        half the scale is exactly half the update, and ``apply`` folds it
+        into the global it lands on."""
         cfg = cfg_for(task, rounds=1)
         phases = make_round_phases(
             task.base, task.client_x, task.client_y, cfg,
@@ -206,16 +207,17 @@ class TestPipelinedRounds:
         state1, bundle = phases.local(state)
         # The local phase never touches the aggregation-owned buffers.
         assert_trees_equal(state1.lora_global, lora0)
-        full, _, _ = phases.agg(state1.lora_global, state1.agg_carry, bundle, 1.0)
-        half, _, _ = phases.agg(state1.lora_global, state1.agg_carry, bundle, 0.5)
-        upd_full = jax.tree_util.tree_map(lambda a, b: a - b, full, lora0)
-        upd_half = jax.tree_util.tree_map(lambda a, b: a - b, half, lora0)
+        full, _, _ = phases.agg(state1.agg_carry, bundle, 1.0)
+        half, _, _ = phases.agg(state1.agg_carry, bundle, 0.5)
         for f, h in zip(
-            jax.tree_util.tree_leaves(upd_full), jax.tree_util.tree_leaves(upd_half)
+            jax.tree_util.tree_leaves(full), jax.tree_util.tree_leaves(half)
         ):
             np.testing.assert_allclose(
                 np.asarray(h), 0.5 * np.asarray(f), rtol=1e-6, atol=1e-7
             )
+        applied = phases.apply(lora0, full)
+        expect = jax.tree_util.tree_map(lambda g, u: g + u, lora0, full)
+        assert_trees_equal(applied, expect)
 
     def test_run_rounds_rejects_negative_staleness(self, task):
         cfg = cfg_for(task)
@@ -224,16 +226,35 @@ class TestPipelinedRounds:
         with pytest.raises(ValueError):
             run_rounds(phases, state, 1, staleness=-1)
 
-    def test_staleness_beyond_double_buffer_rejected(self, task):
-        """Depths > 1 would overwrite in-flight updates (the agg applies to
-        the global it was dispatched from) — the driver must refuse."""
-        cfg = cfg_for(task)
-        phases = make_round_phases(task.base, task.client_x, task.client_y, cfg)
-        state = init_round_state(synth.init_lora(task), 6, 0)
-        with pytest.raises(ValueError, match="staleness"):
-            run_rounds(phases, state, 3, staleness=2)
-        with pytest.raises(ValueError, match="staleness"):
-            run(task, cfg_for(task, rounds=2, pipeline=True, staleness=4))
+    def test_staleness_k_deep_lands_in_order(self, task):
+        """Depths beyond the double buffer compose at land time: rounds
+        land in dispatch order, the state stays finite, and the run still
+        trains (FedBuff-style K-deep buffering)."""
+        cfg = cfg_for(task, rounds=6, pipeline=True, staleness=3)
+        logs = []
+        lora, hist = run(task, cfg, log_fn=lambda r, d: logs.append(r))
+        assert logs == list(range(6))
+        assert len(hist) == 6
+        for leaf in jax.tree_util.tree_leaves(lora):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_staleness_k_deep_carry_session(self, task):
+        """The carry chain threads dispatch-to-dispatch through a K-deep
+        queue (not via the landed state) without losing session health."""
+        agg = AggregatorConfig(
+            method="fedrpca", rpca_iters=8, svt_mode="subspace",
+            carry_mode="subspace",
+        )
+        cfg = FedRunConfig(
+            aggregator=agg, local=spec_for(task), rounds=6, seed=0,
+            pipeline=True, staleness=3,
+        )
+        logs = []
+        lora, hist = run(task, cfg, log_fn=lambda r, d: logs.append(d))
+        assert len(hist) == 6
+        assert {"fallback_count", "live_rank_mean", "carry_hit_rate"} <= set(logs[-1])
+        for leaf in jax.tree_util.tree_leaves(lora):
+            assert np.isfinite(np.asarray(leaf)).all()
 
     def test_round_zero_lands_undamped(self, task):
         """Round 0 of a pipelined run has tau=0 (nothing in flight when its
@@ -285,7 +306,8 @@ class TestLaunchStepSplit:
         aggs = jax.jit(steps_lib.make_agg_step(agg))
         deltas, loss, mask = local(base, lora, batch, key)
         assert mask is None
-        lora_s, metrics_s = aggs(lora, deltas, mask, key)
+        upd, metrics_s = aggs(deltas, mask, key)
+        lora_s = steps_lib.apply_update(lora, upd)
         np.testing.assert_allclose(
             float(loss), float(metrics_m["loss"]), rtol=1e-6
         )
@@ -305,16 +327,15 @@ class TestLaunchStepSplit:
         local = jax.jit(steps_lib.make_local_step(cfg, local_lr=1e-3, remat=False))
         aggs = jax.jit(steps_lib.make_agg_step(agg))
         deltas, _, mask = local(base, lora, batch)
-        full, _ = aggs(lora, deltas, mask)
-        half, _ = aggs(lora, deltas, mask, scale=0.5)
-        for l0, f, h in zip(
-            jax.tree_util.tree_leaves(lora),
+        full, _ = aggs(deltas, mask)
+        half, _ = aggs(deltas, mask, scale=0.5)
+        for f, h in zip(
             jax.tree_util.tree_leaves(full),
             jax.tree_util.tree_leaves(half),
         ):
             np.testing.assert_allclose(
-                np.asarray(h - l0, np.float32),
-                0.5 * np.asarray(f - l0, np.float32),
+                np.asarray(h, np.float32),
+                0.5 * np.asarray(f, np.float32),
                 rtol=1e-5, atol=1e-7,
             )
 
