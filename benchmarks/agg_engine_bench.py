@@ -44,17 +44,19 @@ Output contract:
     packed speedup vs reference and, for svt_mode=subspace, the speedup vs
     the gram-mode cell.
   * ``BENCH_agg.json`` (path overridable via BENCH_AGG_JSON): machine-
-    readable, schema-versioned: {"schema_version": 5, "records": [...]}
+    readable, schema-versioned: {"schema_version": 7, "records": [...]}
     with single-call records {method, engine, svt_mode, n_modules,
-    n_clients, masked, us_per_call, compile_s}, multi-round records
+    n_clients, masked, us_per_call, spread, compile_s} (interleaved
+    min-of-N; spread = (max-min)/min across trials), multi-round records
     {mode: "multi_round", carry_mode, round_type: cold|warm, rounds,
     fallbacks, ...}, pipeline records {mode: "pipeline", staleness,
     n_clients, rounds, us_per_round, speedup_vs_sync}, and serving records
     (``--serve``) {mode: "serve", path: gathered|per_request|merged,
     n_adapters, batch, speedup_vs_per_request, predicted_speedup}, and mesh
     records (``--mesh``) {mode: "mesh", shards, n_clients, round_type,
-    fallbacks, predicted_us, predicted_peak_bytes, vs_1shard} — uploaded
-    as a CI artifact so the perf trajectory is tracked across PRs.
+    fused, overlap, fallbacks, predicted_us, predicted_peak_bytes,
+    vs_1shard} — uploaded as a CI artifact so the perf trajectory is
+    tracked across PRs.
 """
 from __future__ import annotations
 
@@ -100,8 +102,12 @@ from repro.core import AggregatorConfig, AggSession, aggregate  # noqa: E402
 #: costmodel.mesh_agg_costs-predicted wall time and peak bytes); 6 added
 #: the fault-tolerance records (mode="faults": rounds-to-target and final
 #: accuracy under 0/10/30% scale-corruption with the quarantine on vs
-#: off, DESIGN.md §11).
-SCHEMA_VERSION = 6
+#: off, DESIGN.md §11); 7 made the single-call cells interleaved min-of-N
+#: (adding the "spread" trial-dispersion field) and added the sharded
+#: fused-tail mesh variants (mode="mesh" records grew "fused"/"overlap"
+#: booleans: shard-local Pallas ADMM tail, chunked-psum comm/compute
+#: overlap, DESIGN.md §10).
+SCHEMA_VERSION = 7
 
 MODULE_COUNTS = (32, 128, 512)
 CLIENT_COUNTS = (8, 32, 100)
@@ -146,59 +152,103 @@ def time_fn(fn, *args, repeats: int = 3) -> tuple[float, float]:
     return (time.perf_counter() - t0) / repeats, compile_s
 
 
+def time_interleaved(fns: dict, trials: int = 5) -> dict:
+    """Interleaved min-of-N across variants (the pipeline cells' estimator).
+
+    Compiles every variant once, then alternates single timed calls across
+    all of them for ``trials`` passes — on a shared CPU a slow machine
+    phase hits every variant equally instead of biasing whichever cell ran
+    during it (the v6 masked-vs-dense "overhead" was exactly such an
+    artifact).  ``fns`` maps name -> (jitted_fn, args); returns name ->
+    (min_secs, spread, compile_secs) with spread = (max - min) / min.
+    """
+    compiles, times = {}, {name: [] for name in fns}
+    for name, (fn, args) in fns.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        compiles[name] = time.perf_counter() - t0
+    for _ in range(trials):
+        for name, (fn, args) in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times[name].append(time.perf_counter() - t0)
+    return {
+        name: (min(ts), (max(ts) - min(ts)) / min(ts), compiles[name])
+        for name, ts in times.items()
+    }
+
+
 def bench_cell(tree, n_modules: int, n_clients: int) -> None:
     mask = (jnp.arange(n_clients) < max(3 * n_clients // 4, 1)).astype(jnp.float32)
 
-    # fedrpca: packed x {gram, subspace} + reference, dense and masked.
-    secs = {}
+    # One jitted variant per cell; all cells of this (m, c) grid point are
+    # timed interleaved so cross-variant ratios are noise-robust.
+    fns = {}
     for svt_mode in ("gram", "subspace"):
         cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS, svt_mode=svt_mode)
-        fn = jax.jit(lambda t, c=cfg: aggregate(t, c, engine="packed"))
-        s, comp = time_fn(fn, tree)
-        secs[svt_mode] = s
+        fns[("packed", svt_mode, False)] = (
+            jax.jit(lambda t, c=cfg: aggregate(t, c, engine="packed")), (tree,)
+        )
+        fns[("packed", svt_mode, True)] = (
+            jax.jit(lambda t, m, c=cfg: aggregate(t, c, engine="packed", mask=m)),
+            (tree, mask),
+        )
+    rcfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
+    fns[("reference", "gram", False)] = (
+        jax.jit(lambda t: aggregate(t, rcfg, engine="reference")), (tree,)
+    )
+    timed = time_interleaved(fns)
+
+    secs = {m: timed[("packed", m, False)][0] for m in ("gram", "subspace")}
+    for svt_mode in ("gram", "subspace"):
+        s, spread, comp = timed[("packed", svt_mode, False)]
         extra = "" if svt_mode == "gram" else f" svt_speedup={secs['gram'] / s:.2f}x"
         record(
             f"agg_fedrpca_packed_{svt_mode}_m{n_modules}_c{n_clients}",
-            s * 1e6, f"compile={comp:.2f}s{extra}",
+            s * 1e6, f"compile={comp:.2f}s spread={spread:.2f}{extra}",
             method="fedrpca", engine="packed", svt_mode=svt_mode,
             n_modules=n_modules, n_clients=n_clients, masked=False,
-            compile_s=round(comp, 2),
+            spread=round(spread, 3), compile_s=round(comp, 2),
         )
-        mfn = jax.jit(lambda t, m, c=cfg: aggregate(t, c, engine="packed", mask=m))
-        ms, mcomp = time_fn(mfn, tree, mask)
+        ms, mspread, mcomp = timed[("packed", svt_mode, True)]
         record(
             f"agg_fedrpca_masked_{svt_mode}_m{n_modules}_c{n_clients}",
-            ms * 1e6, f"overhead_vs_dense={ms / s:.2f}x",
+            ms * 1e6, f"overhead_vs_dense={ms / s:.2f}x spread={mspread:.2f}",
             method="fedrpca", engine="packed", svt_mode=svt_mode,
             n_modules=n_modules, n_clients=n_clients, masked=True,
-            compile_s=round(mcomp, 2),
+            spread=round(mspread, 3), compile_s=round(mcomp, 2),
         )
-    cfg = AggregatorConfig(method="fedrpca", rpca_iters=RPCA_ITERS)
-    rfn = jax.jit(lambda t: aggregate(t, cfg, engine="reference"))
-    rs, rcomp = time_fn(rfn, tree)
+    rs, rspread, rcomp = timed[("reference", "gram", False)]
     record(
         f"agg_fedrpca_reference_m{n_modules}_c{n_clients}",
         rs * 1e6,
         f"packed_gram_speedup={rs / secs['gram']:.2f}x "
-        f"packed_subspace_speedup={rs / secs['subspace']:.2f}x compile={rcomp:.2f}s",
+        f"packed_subspace_speedup={rs / secs['subspace']:.2f}x "
+        f"spread={rspread:.2f} compile={rcomp:.2f}s",
         method="fedrpca", engine="reference", svt_mode="gram",
         n_modules=n_modules, n_clients=n_clients, masked=False,
-        compile_s=round(rcomp, 2),
+        spread=round(rspread, 3), compile_s=round(rcomp, 2),
     )
 
-    # Cheap methods: one cell per engine for the JSON's method axis.
+    # Cheap methods: one cell per engine for the JSON's method axis,
+    # interleaved as their own group (their microsecond scale would vanish
+    # inside the fedrpca group's trial cadence).
+    mfns = {}
     for method in SIMPLE_METHODS:
         mc = AggregatorConfig(method=method)
         for engine in ("packed", "reference"):
-            fn = jax.jit(lambda t, c=mc, e=engine: aggregate(t, c, engine=e))
-            s, comp = time_fn(fn, tree)
-            record(
-                f"agg_{method}_{engine}_m{n_modules}_c{n_clients}",
-                s * 1e6, f"compile={comp:.2f}s",
-                method=method, engine=engine, svt_mode=None,
-                n_modules=n_modules, n_clients=n_clients, masked=False,
-                compile_s=round(comp, 2),
+            mfns[(method, engine)] = (
+                jax.jit(lambda t, c=mc, e=engine: aggregate(t, c, engine=e)),
+                (tree,),
             )
+    for (method, engine), (s, spread, comp) in time_interleaved(mfns).items():
+        record(
+            f"agg_{method}_{engine}_m{n_modules}_c{n_clients}",
+            s * 1e6, f"compile={comp:.2f}s spread={spread:.2f}",
+            method=method, engine=engine, svt_mode=None,
+            n_modules=n_modules, n_clients=n_clients, masked=False,
+            spread=round(spread, 3), compile_s=round(comp, 2),
+        )
 
 
 def make_round_trees(n_modules: int, n_clients: int, rounds: int, seed: int = 0,
@@ -474,7 +524,8 @@ MESH_ITERS = 20
 MESH_ROUNDS = 3
 
 
-def _mesh_predicted(n_modules: int, cohort: int, shards: int, warm: bool) -> dict:
+def _mesh_predicted(n_modules: int, cohort: int, shards: int, warm: bool,
+                    fused: bool = False, overlap: bool = False) -> dict:
     """Costmodel envelope for one mesh cell, summed over the two canonical
     vec buckets SHAPES populates (64 and 128, half the modules each); the
     per-call dispatch overhead is counted once."""
@@ -486,7 +537,8 @@ def _mesh_predicted(n_modules: int, cohort: int, shards: int, warm: bool) -> dic
     parts = [
         mesh_agg_costs(
             n_modules=count, padded_vec=vec, cohort=cohort, shards=shards,
-            rpca_iters=MESH_ITERS, warm=warm,
+            rpca_iters=MESH_ITERS, warm=warm, fused_tail=fused,
+            overlap=overlap,
         )
         for vec, count in buckets.items() if count
     ]
@@ -500,7 +552,9 @@ def _mesh_predicted(n_modules: int, cohort: int, shards: int, warm: bool) -> dic
 def bench_mesh(shards: int, n_clients: int,
                baseline: "tuple[float, float] | None" = None,
                n_modules: int = MESH_MODULES,
-               rounds: int = MESH_ROUNDS) -> "tuple[float, float] | None":
+               rounds: int = MESH_ROUNDS,
+               fused: bool = False,
+               overlap: bool = False) -> "tuple[float, float] | None":
     """Mesh-sharded aggregation: client axis split over ``shards`` host
     devices (DESIGN.md §10), cold round vs warm-carry rounds, against the
     ``mesh_agg_costs`` roofline prediction.
@@ -512,6 +566,12 @@ def bench_mesh(shards: int, n_clients: int,
     than a speedup.  ``baseline`` is the (cold_s, warm_s) of the 1-shard
     cell at the same cohort, for the vs-1-shard ratio in the record.
     Returns this cell's (cold_s, warm_s) so the caller can thread it.
+
+    ``fused=True`` runs the shard-local Pallas ADMM/sweep tail
+    (``rpca_fused_tail``); ``overlap=True`` adds the chunked-psum
+    comm/compute overlap schedule (``mesh_overlap``).  Both land as
+    booleans in the record so the perf gate can pair each variant with its
+    matching costmodel prediction.
     """
     if shards > jax.device_count():
         common.emit(
@@ -526,6 +586,7 @@ def bench_mesh(shards: int, n_clients: int,
     cfg = AggregatorConfig(
         method="fedrpca", rpca_iters=MESH_ITERS,
         svt_mode="subspace", carry_mode="subspace",
+        rpca_fused_tail=fused, mesh_overlap=overlap,
     )
     trees = make_round_trees(n_modules, n_clients, rounds, seed=7)
     sess = AggSession(cfg, mesh=mesh)
@@ -545,13 +606,16 @@ def bench_mesh(shards: int, n_clients: int,
         warm_times.append(time.perf_counter() - t0)
         warm_falls.append(int(diag.scalars["fallback_count"]))
     warm_s = min(warm_times)
-    tag = f"s{shards}_c{n_clients}"
+    tag = (f"s{shards}_c{n_clients}"
+           + ("_fused" if fused else "") + ("_ovl" if overlap else ""))
     for round_type, s, falls, base in (
         ("cold", cold_s, int(cold_diag.scalars["fallback_count"]),
          baseline[0] if baseline else None),
         ("warm", warm_s, max(warm_falls), baseline[1] if baseline else None),
     ):
-        pred = _mesh_predicted(n_modules, n_clients, shards, round_type == "warm")
+        pred = _mesh_predicted(n_modules, n_clients, shards,
+                               round_type == "warm", fused=fused,
+                               overlap=overlap)
         extra = f" vs_1shard={base / s:.2f}x" if base else ""
         record(
             f"agg_mesh_{round_type}_{tag}", s * 1e6,
@@ -559,6 +623,7 @@ def bench_mesh(shards: int, n_clients: int,
             f"fallbacks={falls} compile={compile_s:.2f}s{extra}",
             mode="mesh", shards=shards, n_clients=n_clients,
             n_modules=n_modules, round_type=round_type, rounds=rounds,
+            fused=fused, overlap=overlap,
             fallbacks=falls, predicted_us=round(pred["us"], 1),
             predicted_peak_bytes=int(pred["peak_bytes_per_shard"]),
             predicted_comm_fraction=round(pred["comm_fraction"], 3),
@@ -665,6 +730,16 @@ def main(quick: bool | None = None, rounds: int = 0, carry_mode: str = "subspace
                 got = bench_mesh(shards, n_clients, baseline=base)
                 if shards == 1:
                     base = got
+            # Sharded fused-tail variants (DESIGN.md §10): the shard-local
+            # Pallas tail alone, then with the chunked-psum overlap
+            # schedule, at every multi-device shard count — both against
+            # the same 1-shard baseline so vs_1shard compares schedules.
+            for shards in MESH_SHARDS:
+                if shards == 1:
+                    continue
+                bench_mesh(shards, n_clients, baseline=base, fused=True)
+                bench_mesh(shards, n_clients, baseline=base, fused=True,
+                           overlap=True)
     if faults:
         bench_faults(rounds or 10, n_clients=8 if quick else 16)
     out_path = os.environ.get("BENCH_AGG_JSON", "BENCH_agg.json")

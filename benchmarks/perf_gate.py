@@ -1,6 +1,6 @@
 """Perf gate over BENCH_agg.json: fail CI on aggregation perf regressions.
 
-Reads the schema-v6 bench artifact (no jax import — this is a pure JSON
+Reads the schema-v7 bench artifact (no jax import — this is a pure JSON
 check, cheap enough to run on every CI push) and enforces the roofline /
 costmodel-derived bounds each engine PR established:
 
@@ -11,11 +11,21 @@ costmodel-derived bounds each engine PR established:
   * multi-round carry: warm rounds must be no slower than cold rounds and
     must finish with ZERO eigh fallbacks (the cross-round carry contract —
     a warm fallback means the carried subspace stopped being reusable).
+  * pipeline: every staleness-1 cell's whole-run wall clock must stay
+    within a floor of the synchronous driver's (the async overlap may not
+    make rounds materially slower), and the overlap win must not collapse
+    as the cohort grows server-bound (crossover direction).
+  * serve: the gathered-pool path must beat per-request gathers at the
+    largest adapters x batch cell, and its win must grow with batch at
+    fixed adapter count (the crossover the pool layout exists for).
   * mesh: every mode="mesh" cell's measured wall time must sit inside the
-    ``costmodel.mesh_agg_costs`` envelope band, warm mesh rounds must also
-    be fallback-free, and wherever a cohort has both 1-shard and 4-shard
-    cells the 4-shard warm cell must itself be in-envelope (the scale-out
-    acceptance cell: sharding keeps working where one device is at its
+    ``costmodel.mesh_agg_costs`` envelope band — fused / overlap variants
+    against their matching costmodel prediction — warm mesh rounds must
+    also be fallback-free (fused ones included: the sharded Pallas tail
+    must not reintroduce eigh fallbacks), and wherever a cohort has a
+    1-shard cell the 4-shard warm cell plus its fused and fused+overlap
+    variants must be present and in-envelope (the scale-out acceptance
+    cells: sharding keeps working where one device is at its
     memory-footprint worst).
   * faults: every mode="faults" run must end with a finite state, and at
     each corruption level the quarantined run's final accuracy must be no
@@ -40,6 +50,17 @@ PACKED_SPEEDUP_MIN = 1.0
 SUBSPACE_VS_GRAM_MAX = 1.5
 #: Warm carry rounds may not be slower than this multiple of cold rounds.
 WARM_VS_COLD_MAX = 1.0
+#: Async (staleness=1) whole-run speedup floor vs the sync driver.  On a
+#: shared single core the overlap cannot win wall clock (both phases
+#: timeshare the core), so this is a no-collapse guard, not a win check.
+PIPELINE_SPEEDUP_MIN = 0.75
+#: The overlap win at the largest cohort may trail the smallest cohort's
+#: by at most this much — the pipeline's payoff must not move the wrong
+#: way as rounds grow server-bound (crossover direction).
+PIPELINE_DIRECTION_SLACK = 0.15
+#: Gathered-pool speedup floor vs per-request gathers at the largest
+#: adapters x batch serve cell (where the pool layout must win).
+SERVE_GATHERED_SPEEDUP_MIN = 1.0
 #: measured/predicted band for mode="mesh" cells (order-of-magnitude
 #: envelope: the costmodel's dispatch floor and the shared-core collective
 #: emulation are both rough on CI hosts; see costmodel.mesh_agg_costs).
@@ -118,15 +139,89 @@ def gate_multi_round(records: list[dict]) -> None:
         )
 
 
+def gate_pipeline(records: list[dict]) -> None:
+    """mode="pipeline" cells: async double-buffered rounds vs the sync
+    driver (DESIGN.md §8).  Floor check per staleness-1 cell plus the
+    crossover-direction check across cohort sizes."""
+    cells = [r for r in records if r.get("mode") == "pipeline"]
+    if not cells:
+        print("# no pipeline cells; skipping pipeline gate")
+        return
+    piped = sorted(
+        (r for r in cells if r.get("staleness") == 1),
+        key=lambda r: r["n_clients"],
+    )
+    for r in piped:
+        s = r["speedup_vs_sync"]
+        check(
+            s >= PIPELINE_SPEEDUP_MIN,
+            f"pipeline_speedup_c{r['n_clients']}",
+            f"async/sync speedup {s:.3f} (floor {PIPELINE_SPEEDUP_MIN})",
+        )
+    if len(piped) >= 2:
+        small, large = piped[0], piped[-1]
+        gap = small["speedup_vs_sync"] - large["speedup_vs_sync"]
+        check(
+            gap <= PIPELINE_DIRECTION_SLACK,
+            "pipeline_crossover_direction",
+            f"speedup c{small['n_clients']}={small['speedup_vs_sync']:.3f} -> "
+            f"c{large['n_clients']}={large['speedup_vs_sync']:.3f} "
+            f"(may trail by at most {PIPELINE_DIRECTION_SLACK})",
+        )
+
+
+def gate_serve(records: list[dict]) -> None:
+    """mode="serve" cells: the gathered adapter pool must beat per-request
+    gathers where the workload is largest, and its advantage must grow
+    with batch at fixed adapter count — the crossover direction the
+    ``serve_gather_costs`` model predicts."""
+    cells = [r for r in records if r.get("mode") == "serve"]
+    if not cells:
+        print("# no serve cells; skipping serve gate")
+        return
+    gathered = [r for r in cells if r.get("path") == "gathered"]
+    if not gathered:
+        check(False, "serve_gathered_present", "no gathered-path serve cells")
+        return
+    largest = max(gathered, key=lambda r: r["n_adapters"] * r["batch"])
+    s = largest["speedup_vs_per_request"]
+    check(
+        s >= SERVE_GATHERED_SPEEDUP_MIN,
+        f"serve_gathered_wins_a{largest['n_adapters']}_b{largest['batch']}",
+        f"gathered {s:.2f}x vs per_request at the largest cell "
+        f"(floor {SERVE_GATHERED_SPEEDUP_MIN}x)",
+    )
+    by_adapters: dict[int, list[dict]] = {}
+    for r in gathered:
+        by_adapters.setdefault(r["n_adapters"], []).append(r)
+    for n_adapters, rows in sorted(by_adapters.items()):
+        rows.sort(key=lambda r: r["batch"])
+        if len(rows) < 2:
+            continue
+        lo, hi = rows[0], rows[-1]
+        check(
+            hi["speedup_vs_per_request"] >= lo["speedup_vs_per_request"],
+            f"serve_crossover_direction_a{n_adapters}",
+            f"gathered speedup b{lo['batch']}={lo['speedup_vs_per_request']:.2f} -> "
+            f"b{hi['batch']}={hi['speedup_vs_per_request']:.2f} "
+            "(must not shrink with batch)",
+        )
+
+
 def gate_mesh(records: list[dict]) -> None:
     cells = [r for r in records if r.get("mode") == "mesh"]
     if not cells:
         print("# no mesh cells; skipping mesh gate")
         return
     lo, hi = MESH_ENVELOPE
+
+    def variant(r: dict) -> str:
+        return (("_fused" if r.get("fused") else "")
+                + ("_ovl" if r.get("overlap") else ""))
+
     for r in cells:
         env = r["us_per_call"] / r["predicted_us"]
-        tag = f"s{r['shards']}_c{r['n_clients']}_{r['round_type']}"
+        tag = f"s{r['shards']}_c{r['n_clients']}_{r['round_type']}{variant(r)}"
         check(
             lo <= env <= hi,
             f"mesh_envelope_{tag}",
@@ -139,19 +234,26 @@ def gate_mesh(records: list[dict]) -> None:
                 f"{r['fallbacks']} eigh fallbacks on warm sharded rounds "
                 "(must be 0)",
             )
-    # Scale-out acceptance: wherever a cohort ran at both 1 and 4 shards,
-    # the 4-shard warm cell must exist and be in-envelope (checked above) —
-    # here we just require its presence so a silently-skipped cell (too few
-    # devices) cannot pass the gate.
+    # Scale-out acceptance: wherever a cohort ran at 1 shard, the 4-shard
+    # warm cell AND its fused / fused+overlap variants must exist and be
+    # in-envelope (checked above) — here we just require their presence so
+    # a silently-skipped cell (too few devices) cannot pass the gate.
     cohorts = {r["n_clients"] for r in cells if r["shards"] == 1}
     for c in sorted(cohorts):
-        has4 = any(
-            r["shards"] == 4 and r["n_clients"] == c and r["round_type"] == "warm"
-            for r in cells
-        )
-        check(has4, f"mesh_4shard_present_c{c}",
-              "4-shard warm cell recorded" if has4
-              else "4-shard warm cell missing (skipped? too few host devices)")
+        for fused, overlap, label in (
+            (False, False, ""), (True, False, "_fused"), (True, True, "_fused_ovl"),
+        ):
+            has4 = any(
+                r["shards"] == 4 and r["n_clients"] == c
+                and r["round_type"] == "warm"
+                and bool(r.get("fused")) == fused
+                and bool(r.get("overlap")) == overlap
+                for r in cells
+            )
+            check(has4, f"mesh_4shard_present_c{c}{label}",
+                  "4-shard warm cell recorded" if has4
+                  else "4-shard warm cell missing (skipped? too few host "
+                       "devices, or the fused/overlap variants did not run)")
 
 
 def gate_faults(records: list[dict]) -> None:
@@ -190,18 +292,21 @@ def main() -> int:
     ap.add_argument("path", nargs="?", default="BENCH_agg.json")
     ap.add_argument(
         "--require", nargs="*", default=(),
-        choices=["single_call", "multi_round", "mesh", "faults"],
+        choices=["single_call", "multi_round", "pipeline", "serve", "mesh",
+                 "faults"],
         help="fail (instead of skip) when these record groups are absent",
     )
     args = ap.parse_args()
     with open(args.path) as f:
         payload = json.load(f)
     version = payload.get("schema_version")
-    check(version == 6, "schema_version", f"got {version}, want 6")
+    check(version == 7, "schema_version", f"got {version}, want 7")
     records = payload.get("records", [])
     present = {
         "single_call": any("mode" not in r for r in records),
         "multi_round": any(r.get("mode") == "multi_round" for r in records),
+        "pipeline": any(r.get("mode") == "pipeline" for r in records),
+        "serve": any(r.get("mode") == "serve" for r in records),
         "mesh": any(r.get("mode") == "mesh" for r in records),
         "faults": any(r.get("mode") == "faults" for r in records),
     }
@@ -210,6 +315,8 @@ def main() -> int:
               "records present" if present[group] else "no records of this group")
     gate_single_call(records)
     gate_multi_round(records)
+    gate_pipeline(records)
+    gate_serve(records)
     gate_mesh(records)
     gate_faults(records)
     if FAILURES:

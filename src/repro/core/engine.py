@@ -242,22 +242,30 @@ def pack(
     if sharded:
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        n_shards = rpca_lib.mesh_client_shards(mesh)
         ax = rpca_lib.mesh_client_axes(mesh)
         ax = ax if len(ax) > 1 else ax[0]
-        constrain = lambda x, spec: jax.lax.with_sharding_constraint(
-            x, NamedSharding(mesh, spec)
-        )
+
+        def constrain(x, spec, client_dim):
+            # Placement hint only.  Eager with_sharding_constraint routes
+            # through jit out_shardings, which rejects unevenly divisible
+            # dims — ragged cohorts skip the hint and let the sharded
+            # loop's internal zero-pad own the column layout.
+            if x.shape[client_dim] % n_shards:
+                return x
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
         if mask32 is not None:
-            mask32 = constrain(mask32, P(ax))
+            mask32 = constrain(mask32, P(ax), 0)
         if w32 is not None:
-            w32 = constrain(w32, P(ax))
+            w32 = constrain(w32, P(ax), 0)
 
     def build(mats, key):
         data = jnp.concatenate(mats, axis=0)
         if mask32 is not None:
             data = data * mask32.astype(data.dtype)
         if sharded:
-            data = constrain(data, P(None, None, ax))
+            data = constrain(data, P(None, None, ax), 2)
         return Bucket(
             data=data,
             true_dims=jnp.asarray(dims_by_bucket[key], jnp.int32),
@@ -448,7 +456,7 @@ def _fedrpca_bucket(
     rpca_kwargs = {}
     if mesh is not None and rpca_lib.mesh_client_shards(mesh) > 1:
         rpca_fn = rpca_lib.robust_pca_bucket_sharded
-        rpca_kwargs = {"mesh": mesh}
+        rpca_kwargs = {"mesh": mesh, "mesh_overlap": cfg.mesh_overlap}
     res = rpca_fn(
         m,
         bucket.true_dims,
@@ -722,11 +730,14 @@ def plan_aggregation(
     in the burn-in tier; ``plan_retier`` moves converged modules to the
     low-rank tier between rounds.
 
-    ``mesh`` requests client-axis sharding: plans validate eagerly (cohort
-    divisible by the shard count, unfused tail) so misconfigurations fail
-    at plan time, not rounds deep inside a jit, and normalize one-shard
+    ``mesh`` requests client-axis sharding.  Plans normalize one-shard
     meshes (the ``(1, 1)`` debug mesh included) to ``mesh=None`` so the
-    single-device trace stays bitwise identical.
+    single-device trace stays bitwise identical.  What used to be plan-time
+    refusals are now capabilities of the sharded loop: ragged cohorts
+    (``cohort_size % shards != 0``) are zero-padded with masked columns
+    inside ``robust_pca_bucket_sharded``, and ``rpca_fused_tail`` runs the
+    Pallas tail kernels shard-locally on each shard's column slice
+    (DESIGN.md §10).
     """
     cfg = cfg or AggregatorConfig()
     if mesh is not None and rpca_lib.mesh_client_shards(mesh) == 1:
@@ -736,20 +747,6 @@ def plan_aggregation(
     _, spec = pack(
         stacked, granularity=granularity, joint_ab=joint, cohort_size=cohort_size
     )
-    if mesh is not None:
-        shards = rpca_lib.mesh_client_shards(mesh)
-        d2 = spec.cohort_size
-        if d2 % shards != 0:
-            raise ValueError(
-                f"cohort size {d2} is not divisible by {shards} mesh shards; "
-                "pad the cohort to a canonical (power-of-two) size or change "
-                "--mesh-shards"
-            )
-        if cfg.method == "fedrpca" and cfg.rpca_fused_tail:
-            raise ValueError(
-                "rpca_fused_tail is single-device (Pallas tail kernels); "
-                "disable it to shard the client axis across a mesh"
-            )
     tiers = {
         key: TierSpec(low_idx=(), full_idx=tuple(range(dims[0])), low_cap=0)
         for key, dims in spec.bucket_dims.items()

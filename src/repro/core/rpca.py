@@ -1020,6 +1020,12 @@ def robust_pca_bucket(
 #: Mesh axis names the packed client axis may shard over.
 CLIENT_AXIS_NAMES = ("pod", "data")
 
+#: Bucket-axis chunk count for ``mesh_overlap=True``: each chunk's psum is
+#: an independent collective, so up to this many all-reduces can be in
+#: flight against other chunks' tail/matmul compute.  Buckets smaller than
+#: this fall back to one chunk per module.
+_MESH_OVERLAP_CHUNKS = 4
+
 
 def mesh_client_axes(mesh) -> tuple:
     """Client axes of ``mesh`` (same filter as ``launch.mesh.client_axes``)."""
@@ -1056,19 +1062,38 @@ def robust_pca_bucket_sharded(
     carry: BucketCarry | None = None,
     return_carry: bool = False,
     carry_gate: float = 1.0,
+    mesh_overlap: bool = False,
 ) -> RPCAResult:
     """``robust_pca_bucket`` with the client axis sharded across ``mesh``.
 
     Same contract as the single-device loop (fp32-allclose results, same
     carry pytree with the eigenbasis rows client-sharded internally and
-    reassembled on exit), with two hard rules:
+    reassembled on exit).  One client shard (``mesh_client_shards(mesh) ==
+    1``, the ``(1, 1)`` debug mesh included) delegates to
+    ``robust_pca_bucket`` — the single-device path stays bitwise identical.
 
-      * one client shard (``mesh_client_shards(mesh) == 1``, the ``(1, 1)``
-        debug mesh included) delegates to ``robust_pca_bucket`` — the
-        single-device path stays bitwise identical;
-      * multi-shard requires ``d2 % shards == 0`` (canonical cohort sizes
-        are powers of two, so shard counts of 2/4/... always divide) and
-        an unfused tail (the Pallas tail kernels are single-device).
+    ``fused_tail=True`` runs the Pallas tail kernels *shard-locally*: each
+    shard calls ``kernels.rpca_admm.admm_tail`` (exact-SVT iterations) or
+    ``kernels.svt_subspace.subspace_apply_factored`` (Ritz iterations — the
+    rank-r reconstruction ``L_k = F Vr_k^T`` fused with the elementwise
+    tail, no d2^2 projector ever materialized) on its own column slice with
+    the shard's mask slice, and only the scalar residual partials are
+    psum-reduced afterward.  The kernels stay single-device; sharding only
+    crosses in the reductions.
+
+    Ragged cohorts (``d2 % shards != 0``) are accepted: the bucket is
+    zero-padded to the next shard multiple with zero-mask columns threaded
+    through pack/psum/tail, so padded columns contribute exactly zero to
+    every reduction, ``n_eff`` stays the true active count, and outputs are
+    sliced back to ``d2`` on exit (padded output columns are exactly zero).
+
+    ``mesh_overlap=True`` chunks the bucket axis B so each chunk's
+    collective — the ``(B, d1, r)`` sweep psum and the fused tail's
+    residual psum — is dispatched independently of the other chunks'
+    compute, letting the scheduler overlap chunk k's all-reduce with chunk
+    k+1's tail/matmuls.  Chunking a psum along B does not change any value
+    (modules reduce independently), and ``mesh_overlap=False`` runs the
+    exact unchunked schedule, so the knob is bit-for-bit off by default.
 
     The gram svt mode runs the exact projector every iteration, which under
     sharding means an all-gather of X per iteration — correct but not the
@@ -1088,34 +1113,12 @@ def robust_pca_bucket_sharded(
         raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
     if svt_mode not in SVT_MODES:
         raise ValueError(f"unknown svt_mode: {svt_mode!r} (expected one of {SVT_MODES})")
-    if fused_tail:
+    if fused_tail and shrink_fn is not soft_threshold:
         raise ValueError(
-            "fused_tail=False is required under client-axis sharding: the "
-            "Pallas tail kernels are single-device (set rpca_fused_tail=False "
-            "or run with one mesh shard)"
+            "fused_tail hardcodes soft-threshold shrinkage in the Pallas "
+            "kernel; custom shrink_fn requires fused_tail=False"
         )
     b, d1p, d2 = m.shape
-    if d2 % shards != 0:
-        raise ValueError(
-            f"cohort size {d2} is not divisible by {shards} client shards; "
-            "pad the cohort to a canonical (power-of-two) size first"
-        )
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
-    axes = mesh_client_axes(mesh)
-    ax = axes if len(axes) > 1 else axes[0]
-    d2_loc = d2 // shards
-    orig_dtype = m.dtype
-    m = m.astype(jnp.float32)
-    if true_dims is None:
-        true_dims = jnp.full((b,), d1p, jnp.int32)
-    dims_f = true_dims.astype(jnp.float32)
-    cmask_full = (
-        jnp.ones((d2,), jnp.float32)
-        if client_mask is None
-        else jnp.asarray(client_mask, jnp.float32)
-    )
     r = subspace_rank(d2, svt_rank)
     use_subspace = svt_mode == "subspace"
     has_carry = carry is not None
@@ -1129,6 +1132,43 @@ def robust_pca_bucket_sharded(
                 f"carry basis shape {carry.v.shape} != {(b, d2, r)}; "
                 "was the carry built with a different svt_rank?"
             )
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh_client_axes(mesh)
+    ax = axes if len(axes) > 1 else axes[0]
+    orig_dtype = m.dtype
+    m = m.astype(jnp.float32)
+    if true_dims is None:
+        true_dims = jnp.full((b,), d1p, jnp.int32)
+    dims_f = true_dims.astype(jnp.float32)
+    cmask_full = (
+        jnp.ones((d2,), jnp.float32)
+        if client_mask is None
+        else jnp.asarray(client_mask, jnp.float32)
+    )
+    # Ragged cohorts: pad the client axis to the next shard multiple with
+    # zero-mask columns.  The rank cap keeps the *true* d2 (carry shapes and
+    # the 1-shard delegate must agree), the padded mask keeps n_eff exact,
+    # and every padded column stays identically zero through the loop.
+    d2p = shards * (-(-d2 // shards))
+    pad_c = d2p - d2
+    if pad_c:
+        m = jnp.pad(m, ((0, 0), (0, 0), (0, pad_c)))
+        cmask_full = jnp.pad(cmask_full, (0, pad_c))
+        if has_carry:
+            padc = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad_c)))
+            carry = carry._replace(
+                l=padc(carry.l), s=padc(carry.s), y=padc(carry.y),
+                v=jnp.pad(carry.v, ((0, 0), (0, pad_c), (0, 0))),
+            )
+    d2_loc = d2p // shards
+    if fused_tail:
+        from repro.kernels import rpca_admm as _tail_kernel
+        from repro.kernels import svt_subspace as _sub_kernel
+        from repro.kernels.ops import _interpret_default
+
+        interp = _interpret_default() if interpret is None else interpret
 
     col = P(None, None, ax)
     rep = P()
@@ -1187,11 +1227,67 @@ def robust_pca_bucket_sharded(
             warm = jnp.asarray(False)
             l0 = s0 = y0 = zeros
 
+        # B-chunk schedule for the overlap knob: slicing a (B, ...) psum (or
+        # a kernel call) along the module axis changes no value — modules
+        # reduce independently — but makes each chunk's collective a
+        # separate op with no dependence on the other chunks' compute, so
+        # the scheduler can fly chunk k's all-reduce while chunk k+1's
+        # tail/matmuls execute.  mesh_overlap=False keeps the single
+        # unchunked call (the PR 7 schedule, bit-for-bit).
+        bsl = [(0, b)]
+        if mesh_overlap and b > 1:
+            nch = min(b, _MESH_OVERLAP_CHUNKS)
+            step_b = -(-b // nch)
+            bsl = [(lo, min(lo + step_b, b)) for lo in range(0, b, step_b)]
+
+        def psum_bchunked(part):
+            if len(bsl) == 1:
+                return gs(part)
+            return jnp.concatenate([gs(part[lo:hi]) for lo, hi in bsl], axis=0)
+
         def tail(l, y):
             s = shrink_fn(m_k - l + rho_b * y, thresh[:, None, None]) * cmask_k
             resid = (m_k - l - s) * cmask_k
             y_new = (y + mu_b * resid) * cmask_k
             return s, y_new, jnp.sqrt(gs(jnp.sum(resid * resid, axis=(1, 2))))
+
+        if fused_tail:
+
+            def fused_plain_tail(l, y):
+                # Shard-local Pallas ADMM tail on this shard's column slice;
+                # only the scalar residual partials cross shards.  Chunked
+                # along B when overlapping so each chunk's psum dispatches
+                # while the next chunk's kernel runs.
+                outs = [
+                    _tail_kernel.admm_tail(
+                        m_k[lo:hi], l[lo:hi], y[lo:hi], rho[lo:hi],
+                        mu_v[lo:hi], thresh[lo:hi], mask=cmask_k,
+                        interpret=interp,
+                    )
+                    for lo, hi in bsl
+                ]
+                s = jnp.concatenate([o[0] for o in outs], axis=0)
+                y_new = jnp.concatenate([o[1] for o in outs], axis=0)
+                rsq = jnp.concatenate([gs(o[2]) for o in outs], axis=0)
+                return s, y_new, jnp.sqrt(rsq)
+
+            def fused_factored_tail(f, vr_k, y):
+                # Ritz-path fused tail: L_k = F Vr_k^T rebuilt inside the
+                # kernel from the replicated (B, d1, r) shrink factor and
+                # this shard's basis rows, fused with shrink/dual/residual.
+                outs = [
+                    _sub_kernel.subspace_apply_factored(
+                        m_k[lo:hi], y[lo:hi], f[lo:hi], vr_k[lo:hi],
+                        rho[lo:hi], mu_v[lo:hi], thresh[lo:hi], mask=cmask_k,
+                        interpret=interp,
+                    )
+                    for lo, hi in bsl
+                ]
+                l = jnp.concatenate([o[0] for o in outs], axis=0)
+                s = jnp.concatenate([o[1] for o in outs], axis=0)
+                y_new = jnp.concatenate([o[2] for o in outs], axis=0)
+                rsq = jnp.concatenate([gs(o[3]) for o in outs], axis=0)
+                return l, s, y_new, jnp.sqrt(rsq)
 
         def exact_svt(x_k, t):
             # Exact fallback: the full d2 x d2 Gram needs every column, so
@@ -1214,12 +1310,26 @@ def robust_pca_bucket_sharded(
 
         eye_r = jnp.eye(r, dtype=jnp.float32)
 
-        def ritz_svt(x_k, t, v_k, n_sweeps):
+        def sweep_wz(x_k, v_k):
+            # W = psum(X V) and Z_k = X_k^T W — the sweep's only non-tiny
+            # collective plus its local consumer.  Chunked along B when
+            # overlapping so chunk k+1's psum dispatches while chunk k's Z
+            # matmul executes (pipelined-multicast SUMMA schedule).
+            if len(bsl) == 1:
+                w = gs(jnp.einsum("bdc,bcr->bdr", x_k, v_k))
+                return w, jnp.einsum("bdc,bdr->bcr", x_k, w)
+            ws, zs = [], []
+            for lo, hi in bsl:
+                wc = gs(jnp.einsum("bdc,bcr->bdr", x_k[lo:hi], v_k[lo:hi]))
+                ws.append(wc)
+                zs.append(jnp.einsum("bdc,bdr->bcr", x_k[lo:hi], wc))
+            return jnp.concatenate(ws, axis=0), jnp.concatenate(zs, axis=0)
+
+        def ritz_factors(x_k, t, v_k, n_sweeps):
             # Power sweeps on local rows: W = X V is the only non-tiny
             # collective; (G V)_k = X_k^T W never leaves the shard.
             for _ in range(n_sweeps):
-                w = gs(jnp.einsum("bdc,bcr->bdr", x_k, v_k))
-                z_k = jnp.einsum("bdc,bdr->bcr", x_k, w)
+                w, z_k = sweep_wz(x_k, v_k)
                 szz = gs(jnp.einsum("bcr,bcs->brs", z_k, z_k))
                 jitter = (1e-6 / r) * (
                     jnp.trace(szz, axis1=-2, axis2=-1) + _EPS
@@ -1228,8 +1338,7 @@ def robust_pca_bucket_sharded(
                 v_k = jax.lax.linalg.triangular_solve(
                     chol, z_k, left_side=False, lower=True, transpose_a=True
                 )
-            w = gs(jnp.einsum("bdc,bcr->bdr", x_k, v_k))
-            gv_k = jnp.einsum("bdc,bdr->bcr", x_k, w)
+            w, gv_k = sweep_wz(x_k, v_k)
             t_small = gs(jnp.einsum("bcr,bcs->brs", v_k, gv_k))
             theta, w_rot = jnp.linalg.eigh(t_small)  # ascending Ritz values
             vr_k = jnp.einsum("bcr,brs->bcs", v_k, w_rot)
@@ -1237,10 +1346,9 @@ def robust_pca_bucket_sharded(
             s_ = jnp.sqrt(jnp.maximum(theta, 0.0))
             s_shrunk = shrink_fn(s_, t[:, None])
             coef = jnp.where(s_ > _EPS, s_shrunk / jnp.maximum(s_, _EPS), 0.0)
-            # L_k = (X Vr) coef Vr_k^T with X Vr = W @ W_rot already in hand:
-            # the shard's L columns come from replicated (B, d1, r) factors.
+            # X Vr = W @ W_rot is already in hand and replicated: the
+            # shard's L columns come from (B, d1, r) factors alone.
             xvr = jnp.einsum("bdr,brs->bds", w, w_rot)
-            l_k = jnp.einsum("bds,bs,bcs->bdc", xvr, coef, vr_k)
             live = (s_shrunk > 0.0).astype(jnp.float32)
             res = (gvr_k - vr_k * theta[:, None, :]) * live[:, None, :]
             g_mass = jnp.sum(jnp.maximum(theta, 0.0), axis=-1)
@@ -1248,6 +1356,13 @@ def robust_pca_bucket_sharded(
                 g_mass, _EPS
             )
             n_live = jnp.sum(live.astype(jnp.int32), axis=-1)
+            return xvr, coef, vr_k, n_live, rel
+
+        def ritz_svt(x_k, t, v_k, n_sweeps):
+            xvr, coef, vr_k, n_live, rel = ritz_factors(x_k, t, v_k, n_sweeps)
+            # L_k = (X Vr) coef Vr_k^T — same contraction as before the
+            # factored split, so the unfused path is numerically unchanged.
+            l_k = jnp.einsum("bds,bs,bcs->bdc", xvr, coef, vr_k)
             return l_k, vr_k, n_live, rel
 
         def svt_step(x_k, v_k, n_live, rel_prev, cold):
@@ -1281,12 +1396,54 @@ def robust_pca_bucket_sharded(
             rel2 = jnp.where(fell, 0.5 * svt_fallback_tol, rel2)
             return l_k, v2, live2, rel2, fell
 
+        def svt_step_fused(x_k, y, v_k, n_live, rel_prev, cold):
+            # The fused twin of svt_step: the elementwise tail moves inside
+            # each gate branch so the Ritz path can hand its rank-r factors
+            # straight to the factored Pallas kernel (no d2^2 projector) and
+            # the exact path reuses the plain ADMM-tail kernel on the
+            # gathered reconstruction.  Gates stay psum-derived.
+            t = rho
+
+            def exact():
+                l_k, v2, live, rel = exact_svt(x_k, t)
+                s2, y2, rnorm = fused_plain_tail(l_k, y)
+                return l_k, s2, y2, rnorm, v2, live, rel, jnp.asarray(True)
+
+            def attempt():
+                if svt_sweeps > 1:
+                    xvr, coef, vr_k, live, rel = jax.lax.cond(
+                        jnp.max(rel_prev) <= 0.1 * svt_fallback_tol,
+                        lambda: ritz_factors(x_k, t, v_k, 1),
+                        lambda: ritz_factors(x_k, t, v_k, svt_sweeps),
+                    )
+                else:
+                    xvr, coef, vr_k, live, rel = ritz_factors(
+                        x_k, t, v_k, max(svt_sweeps, 1)
+                    )
+                bad = jnp.logical_or(
+                    jnp.any(rel > svt_fallback_tol), jnp.any(live >= r)
+                )
+
+                def ok():
+                    f = xvr * coef[:, None, :]
+                    l_k, s2, y2, rnorm = fused_factored_tail(f, vr_k, y)
+                    return l_k, s2, y2, rnorm, vr_k, live, rel, jnp.asarray(False)
+
+                return jax.lax.cond(bad, exact, ok)
+
+            pre_full = jnp.logical_or(cold, jnp.any(n_live >= r))
+            l_k, s2, y2, rnorm, v2, live2, rel2, fell = jax.lax.cond(
+                pre_full, exact, attempt
+            )
+            rel2 = jnp.where(fell, 0.5 * svt_fallback_tol, rel2)
+            return l_k, s2, y2, rnorm, v2, live2, rel2, fell
+
         err0 = jnp.full((b,), jnp.inf, jnp.float32)
         falls0 = jnp.zeros((), jnp.int32)
 
         if use_subspace:
             eye_loc = jax.lax.dynamic_slice_in_dim(
-                jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (b, d2, r)),
+                jnp.broadcast_to(jnp.eye(d2p, r, dtype=jnp.float32), (b, d2p, r)),
                 shard_index() * d2_loc, d2_loc, axis=1,
             )
             if has_carry:
@@ -1305,8 +1462,13 @@ def robust_pca_bucket_sharded(
             def step_sub(l, s, y, v_k, n_live, rel, it):
                 x_k = m_k - s + rho_b * y
                 cold = jnp.logical_and(it == 0, jnp.logical_not(warm))
-                l2, v2, live2, rel2, fell = svt_step(x_k, v_k, n_live, rel, cold)
-                s2, y2, rnorm = tail(l2, y)
+                if fused_tail:
+                    l2, s2, y2, rnorm, v2, live2, rel2, fell = svt_step_fused(
+                        x_k, y, v_k, n_live, rel, cold
+                    )
+                else:
+                    l2, v2, live2, rel2, fell = svt_step(x_k, v_k, n_live, rel, cold)
+                    s2, y2, rnorm = tail(l2, y)
                 return l2, s2, y2, rnorm / m_norm, v2, live2, rel2, fell
 
         else:
@@ -1314,7 +1476,10 @@ def robust_pca_bucket_sharded(
             def step_gram(l, s, y):
                 x_k = m_k - s + rho_b * y
                 l2, _, _, _ = exact_svt(x_k, rho)
-                s2, y2, rnorm = tail(l2, y)
+                if fused_tail:
+                    s2, y2, rnorm = fused_plain_tail(l2, y)
+                else:
+                    s2, y2, rnorm = tail(l2, y)
                 return l2, s2, y2, rnorm / m_norm
 
         falls = falls0
@@ -1425,7 +1590,17 @@ def robust_pca_bucket_sharded(
     )
     out = mapped(*args)
     l, s, n_done, err = out[:4]
+    if pad_c:
+        # Drop the ragged padding columns (exactly zero on output: every
+        # padded column carries a zero mask through tail and final mask).
+        l, s = l[:, :, :d2], s[:, :, :d2]
     result = RPCAResult(l.astype(orig_dtype), s.astype(orig_dtype), n_done, err)
     if not return_carry:
         return result
-    return result, out[4]
+    new_carry = out[4]
+    if pad_c:
+        new_carry = new_carry._replace(
+            l=new_carry.l[:, :, :d2], s=new_carry.s[:, :, :d2],
+            y=new_carry.y[:, :, :d2], v=new_carry.v[:, :d2, :],
+        )
+    return result, new_carry

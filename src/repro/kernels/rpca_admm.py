@@ -17,6 +17,14 @@ output block is the standard accumulation pattern).  Per-module scalars
 (rho, mu, threshold = rho * lam) ride along as (1, 1) blocks — the bucket
 mixes modules with different true vec dims, so every module carries its own
 ADMM constants.  See DESIGN.md §4 for the memory plan.
+
+The kernel is single-device by construction, which is exactly what the
+mesh-sharded loop (DESIGN.md §10) needs: each shard calls ``admm_tail`` on
+its own (B, vec, d2_loc) column slice with ``mask`` set to the shard's
+slice of the cohort validity mask (ragged cohorts pad with zero-mask
+columns, which contribute nothing to any sum), and the returned per-shard
+``resid_sumsq`` partials are psum-reduced by the caller before the
+convergence check — the elementwise tail never crosses shards.
 """
 from __future__ import annotations
 

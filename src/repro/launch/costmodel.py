@@ -503,11 +503,15 @@ def mesh_agg_costs(
     warm: bool = True,
     dtype_bytes: int = 4,
     shared_host_core: bool = True,
+    fused_tail: bool = False,
+    overlap: bool = False,
 ) -> Dict[str, float]:
     """Analytic round cost of one mesh-sharded RPCA bucket (DESIGN.md §10).
 
     Per ADMM iteration the client-axis-sharded loop does, per shard of
-    ``c_loc = cohort / shards`` columns:
+    ``c_loc = ceil(cohort / shards)`` columns (ragged cohorts zero-pad the
+    client axis, so every shard carries the padded slice — masked columns
+    cost the same bytes/FLOPs as live ones):
 
       column-local tail — shrink / residual / dual on (B, d1, c_loc) blocks
         (pure elementwise, zero communication);
@@ -522,6 +526,17 @@ def mesh_agg_costs(
     (B * d1 * cohort bytes) and replicated d2 x d2 eigh are the non-scaling
     terms the subspace path exists to avoid.
 
+    ``fused_tail=True`` models the shard-local Pallas tail: the factored
+    L = F Vr^T apply, shrink, residual, and dual update execute in one VMEM
+    pass over the (B, d1, c_loc) slice instead of ~5 separate HBM
+    round-trips, cutting the tail's HBM traffic to one read+write of the
+    operand set.  FLOPs are unchanged (same math, fewer materialisations).
+
+    ``overlap=True`` models the chunked-psum schedule (``mesh_overlap``):
+    the bucket axis is split so chunk k+1's sweep all-reduce issues while
+    chunk k's tail executes, hiding the smaller of compute/comm time:
+    ``us = max(compute, comm) + dispatch`` instead of their sum.
+
     ``shared_host_core=True`` (the CI/container reality) divides the
     per-shard FLOP peak by the shard count — host-platform devices are
     threads on the same core(s), so sharding buys *memory headroom and the
@@ -533,10 +548,10 @@ def mesh_agg_costs(
     gathered bytes, collective count, predicted peak bytes per shard, and
     the ``us`` roofline estimate split into compute/comm.
     """
-    if cohort % shards:
-        raise ValueError(f"cohort {cohort} not divisible by {shards} shards")
+    if shards <= 0:
+        raise ValueError(f"shards must be positive, got {shards}")
     b, d1 = float(n_modules), float(padded_vec)
-    c_loc = cohort / shards
+    c_loc = float(-(-cohort // shards))  # ceil: ragged cohorts pad, not refuse
     r = float(max(1, min(svt_rank, cohort // 2)) if cohort > 1 else 1)
     sweeps_eff = 1.0 if warm else float(max(svt_sweeps, 1))
     applies = sweeps_eff + 1.0  # power sweeps + the final Ritz G @ V
@@ -546,7 +561,14 @@ def mesh_agg_costs(
     small_flops = 4.0 * b * c_loc * r * r + 30.0 * b * r**3
     l_flops = 2.0 * b * d1 * r * r + 2.0 * b * d1 * c_loc * r
     local_flops = tail_flops + sweep_flops + small_flops + l_flops
-    local_bytes = (8.0 + 2.0 * applies) * b * d1 * c_loc * dtype_bytes
+    if fused_tail:
+        # Fused Pallas tail: shrink/residual/dual plus the factored L-apply
+        # stream through VMEM once — the tail's ~5 intermediate HBM
+        # round-trips collapse to a single read+write of M/L/S/Y, leaving
+        # only the sweep's X reads as repeat traffic.
+        local_bytes = (3.0 + 1.0 * applies) * b * d1 * c_loc * dtype_bytes
+    else:
+        local_bytes = (8.0 + 2.0 * applies) * b * d1 * c_loc * dtype_bytes
 
     ring = 2.0 * (shards - 1) / shards if shards > 1 else 0.0
     allreduce_bytes = applies * b * d1 * r * dtype_bytes * ring
@@ -582,7 +604,13 @@ def mesh_agg_costs(
         (allreduce_bytes + gather_bytes) / MESH_BW_COLL
         + n_collectives * MESH_COLL_OVERHEAD_US
     )
-    us = compute_us + comm_us + MESH_DISPATCH_US
+    if overlap:
+        # Chunked-psum schedule: chunk k+1's all-reduce overlaps chunk k's
+        # tail, so the shorter leg hides behind the longer one.  Dispatch
+        # stays serial (it gates the first chunk).
+        us = max(compute_us, comm_us) + MESH_DISPATCH_US
+    else:
+        us = compute_us + comm_us + MESH_DISPATCH_US
     return {
         "local_flops": local_flops,
         "local_hbm_bytes": local_bytes,
@@ -621,7 +649,9 @@ def mesh_crossover_shards(
     base = mesh_agg_costs(shards=1, **kw)["us"]
     n = 2
     while n <= max_shards:
-        if cohort % n == 0 and mesh_agg_costs(shards=n, **kw)["us"] < base:
+        # Ragged cohorts shard fine (they pad); the model already charges
+        # for the padded slice via ceil(cohort / n).
+        if mesh_agg_costs(shards=n, **kw)["us"] < base:
             return n
         n *= 2
     return None

@@ -221,6 +221,10 @@ def make_agg_step(
     ``mesh`` shards the packed client axis of the aggregation across the
     mesh's client axes (packed engine only — DESIGN.md §10); one-shard
     meshes are normalized away, keeping the single-device trace bitwise.
+    Ragged cohorts (clients not divisible by the shard count) are padded
+    with masked zero columns inside the sharded loop, and
+    ``agg_cfg.rpca_fused_tail`` / ``agg_cfg.mesh_overlap`` select the
+    shard-local fused Pallas tail and the chunked-psum overlap schedule.
     """
     agg_cfg = agg_cfg or AggregatorConfig()
     if agg_cfg.carry_mode not in CARRY_MODES:

@@ -235,11 +235,25 @@ def stacked_lora_pspecs(lora: PyTree, client_axes: Tuple[str, ...]) -> PyTree:
     )
 
 
+def padded_cohort(d2: int, shards: int) -> int:
+    """Smallest multiple of ``shards`` >= ``d2``.
+
+    Ragged cohorts (``d2 % shards != 0``) shard by zero-padding the client
+    axis to this size with zero-mask columns before ``shard_map`` — padded
+    columns carry a zero validity mask through every psum/tail, so they
+    contribute nothing and ``n_eff`` stays the true count (DESIGN.md §10).
+    """
+    if shards <= 0:
+        raise ValueError(f"shards must be positive, got {shards}")
+    return shards * (-(-d2 // shards))
+
+
 def bucket_pspec(client_axes: Tuple[str, ...]) -> P:
     """Packed shape-bucket layout ``(modules, padded_vec, cohort)``: client
     columns shard-major over the client mesh axes, everything else
     replicated — the layout the sharded agg engine's ``shard_map`` loop
-    assumes (DESIGN.md §10)."""
+    assumes (DESIGN.md §10).  Ragged cohorts are padded to
+    ``padded_cohort(d2, shards)`` before the spec applies."""
     return P(None, None, client_axes)
 
 

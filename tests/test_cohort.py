@@ -378,6 +378,7 @@ class TestShapeStaticRounds:
         _, diags = round_fn(state)
         assert set(diags) == {
             "mean_local_loss", "beta_mean", "energy_mean", "rpca_residual_max",
+            "update_finite",
         }
         assert all(np.isfinite(float(v)) for v in diags.values())
 

@@ -2,10 +2,13 @@
 
 The contract under test: sharding the packed client axis over host devices
 is a pure execution-layout choice — every method, both SVT modes, masked
-cohorts, and cross-round carry must produce the same numbers at 1, 2, and
-4 shards (bitwise at one shard, fp32-allclose beyond, where only the
-collective reduction order differs), and the warm-carry path must stay
-eigh-fallback-free under sharding exactly as it is on one device.
+cohorts, RAGGED cohorts (d2 % shards != 0, zero-padded with masked
+columns), the shard-local fused Pallas tail (``rpca_fused_tail``), the
+chunked-psum overlap schedule (``mesh_overlap``), and cross-round carry
+must produce the same numbers at 1, 2, and 4 shards (bitwise at one
+shard, fp32-allclose beyond, where only the collective reduction order
+differs), and the warm-carry path must stay eigh-fallback-free under
+sharding exactly as it is on one device.
 
 The multi-device half of the suite needs 4 forced host devices
 (XLA_FLAGS=--xla_force_host_platform_device_count=4 — the CI mesh job
@@ -136,7 +139,7 @@ class TestSingleDevice:
     def test_mesh_agg_costs_sanity(self):
         kw = dict(n_modules=8, padded_vec=64, cohort=64, rpca_iters=20)
         with pytest.raises(ValueError):
-            costmodel.mesh_agg_costs(shards=3, cohort=65, n_modules=8,
+            costmodel.mesh_agg_costs(shards=0, cohort=64, n_modules=8,
                                      padded_vec=64)
         c1 = costmodel.mesh_agg_costs(shards=1, **kw)
         c4 = costmodel.mesh_agg_costs(shards=4, **kw)
@@ -154,6 +157,34 @@ class TestSingleDevice:
             n_modules=8, padded_vec=64, cohort=512
         )
         assert cross is None or (cross & (cross - 1)) == 0
+
+    def test_mesh_agg_costs_ragged_fused_overlap(self):
+        """Ragged cohorts cost the padded slice; fused cuts local HBM
+        traffic; overlap hides the shorter of compute/comm."""
+        # 65 clients over 3 shards no longer refuses: it pads to 66 and
+        # charges ceil(65 / 3) = 22 local columns, same as cohort 66.
+        ragged = costmodel.mesh_agg_costs(shards=3, cohort=65, n_modules=8,
+                                          padded_vec=64)
+        padded = costmodel.mesh_agg_costs(shards=3, cohort=66, n_modules=8,
+                                          padded_vec=64)
+        assert ragged["local_hbm_bytes"] == padded["local_hbm_bytes"]
+        kw = dict(n_modules=8, padded_vec=64, cohort=64, shards=4,
+                  rpca_iters=20)
+        base = costmodel.mesh_agg_costs(**kw)
+        fused = costmodel.mesh_agg_costs(fused_tail=True, **kw)
+        ovl = costmodel.mesh_agg_costs(fused_tail=True, overlap=True, **kw)
+        assert fused["local_hbm_bytes"] < base["local_hbm_bytes"]
+        assert fused["local_flops"] == base["local_flops"]
+        assert ovl["us"] <= fused["us"]
+        assert ovl["us"] >= max(ovl["compute_us"], ovl["comm_us"])
+
+    def test_padded_cohort_helper(self):
+        assert partitioning.padded_cohort(8, 4) == 8
+        assert partitioning.padded_cohort(7, 4) == 8
+        assert partitioning.padded_cohort(65, 3) == 66
+        assert partitioning.padded_cohort(1, 4) == 4
+        with pytest.raises(ValueError):
+            partitioning.padded_cohort(8, 0)
 
 
 METHOD_CONFIGS = [
@@ -215,18 +246,22 @@ class TestShardInvariance:
                                        np.asarray(got.low_rank),
                                        atol=1e-5, rtol=1e-5)
 
-    def test_plan_validation(self, rng):
+    def test_plan_accepts_ragged_and_fused(self, rng):
+        """The PR 7 refusals are now capabilities: ragged cohorts shard by
+        padding inside the sharded loop, and the fused Pallas tail runs
+        shard-locally — both plan clean on a multi-shard mesh."""
         mesh = make_host_mesh(2)
         odd = {"w": jnp.asarray(rng.normal(size=(7, 4, 8)), jnp.float32)}
-        with pytest.raises(ValueError, match="divisible"):
-            plan_aggregation(odd, AggregatorConfig(method="fedrpca"), mesh=mesh)
+        plan = plan_aggregation(odd, AggregatorConfig(method="fedrpca"),
+                                mesh=mesh)
+        assert plan.mesh is mesh
         even = {"w": jnp.asarray(rng.normal(size=(8, 4, 8)), jnp.float32)}
-        with pytest.raises(ValueError, match="fused_tail|fused-tail"):
-            plan_aggregation(
-                even,
-                AggregatorConfig(method="fedrpca", rpca_fused_tail=True),
-                mesh=mesh,
-            )
+        plan = plan_aggregation(
+            even,
+            AggregatorConfig(method="fedrpca", rpca_fused_tail=True),
+            mesh=mesh,
+        )
+        assert plan.mesh is mesh
 
     def test_reference_engine_refuses_mesh(self, rng):
         tree = self._tree(rng)
@@ -267,3 +302,171 @@ class TestShardedCarry:
         _, falls, hits = self._run(make_host_mesh(4), trees)
         assert all(f == 0 for f in falls[1:])
         assert all(h == 1.0 for h in hits[1:])
+
+
+@needs4
+class TestRaggedCohorts:
+    """d2 % shards != 0: the sharded loop zero-pads the client axis with
+    masked columns — results must match the unsharded run exactly as if
+    the padding never happened."""
+
+    def _tree(self, rng, nc):
+        mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+        return {"A": mk(nc, 4, 6, 8), "head": mk(nc, 12, 4)}
+
+    @pytest.mark.parametrize("cfg", METHOD_CONFIGS)
+    @pytest.mark.parametrize("shards", [2, 4])
+    def test_methods_ragged_masked(self, cfg, shards, rng):
+        """Every method on a 7-client cohort (ragged at both shard counts)
+        with a partial-participation mask on top: sharded matches the
+        unsharded packed engine fp32-allclose."""
+        tree = self._tree(rng, nc=7)
+        mask = jnp.asarray([1, 1, 0, 1, 1, 1, 1], jnp.float32)
+        key = jax.random.PRNGKey(3)
+        base = aggregate(tree, cfg, engine="packed", mask=mask, key=key)
+        got = aggregate(tree, cfg, engine="packed", mask=mask, key=key,
+                        mesh=make_host_mesh(shards))
+        assert_trees_close(base, got, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("shards", [2, 4])
+    @pytest.mark.parametrize("svt_mode", ["gram", "subspace"])
+    def test_rpca_ragged_matches_unsharded(self, shards, svt_mode, rng):
+        m = planted_bucket(rng, b=3, d=32, nc=7)
+        ref = rpca_lib.robust_pca_bucket(m, n_iter=20, svt_mode=svt_mode)
+        got = rpca_lib.robust_pca_bucket_sharded(
+            m, mesh=make_host_mesh(shards), n_iter=20, svt_mode=svt_mode
+        )
+        np.testing.assert_allclose(np.asarray(ref.low_rank),
+                                   np.asarray(got.low_rank),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ref.sparse),
+                                   np.asarray(got.sparse),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_padded_columns_contribute_zero(self, rng):
+        """The zero-contribution invariant: a masked (= padded) column's
+        CONTENT must be unobservable — garbage behind the mask decomposes
+        bitwise identically to zeros behind the mask.  If a masked column
+        leaked into any psum / Gram / n_eff term, the 1e3-scaled garbage
+        would move the result."""
+        m7 = planted_bucket(rng, b=2, d=24, nc=7)
+        zeros = jnp.zeros((2, 24, 1), jnp.float32)
+        garbage = 1e3 * jnp.asarray(rng.normal(size=(2, 24, 1)), jnp.float32)
+        cmask = jnp.asarray([1, 1, 1, 1, 1, 1, 1, 0], jnp.float32)
+        mesh = make_host_mesh(4)
+        ref = rpca_lib.robust_pca_bucket_sharded(
+            jnp.concatenate([m7, zeros], axis=-1), mesh=mesh, n_iter=20,
+            svt_mode="subspace", client_mask=cmask,
+        )
+        got = rpca_lib.robust_pca_bucket_sharded(
+            jnp.concatenate([m7, garbage], axis=-1), mesh=mesh, n_iter=20,
+            svt_mode="subspace", client_mask=cmask,
+        )
+        assert np.array_equal(np.asarray(ref.low_rank), np.asarray(got.low_rank))
+        assert np.array_equal(np.asarray(ref.sparse), np.asarray(got.sparse))
+        # The masked column itself comes out exactly zero.
+        assert np.all(np.asarray(got.sparse[:, :, 7:]) == 0.0)
+
+    def test_ragged_warm_carry(self, rng):
+        """Cross-round carry on a ragged cohort: same outputs and the same
+        zero-fallback warm trajectory at 1 / 2 / 4 shards (the carried
+        eigenbasis round-trips through the padded layout).  nc=9 stays
+        ragged at both shard counts while leaving the rank cap
+        (r = 9 // 2 = 4) headroom above the planted rank-2 core — at nc=7
+        the cap r=3 is tight enough that even the UNSHARDED session falls
+        back on warm rounds, which would test the workload, not the
+        sharding."""
+        trees = round_trees(rng, nc=9, rounds=4)
+
+        def run(mesh):
+            sess = AggSession(session_cfg(), mesh=mesh)
+            outs, falls = [], []
+            for tree in trees:
+                out, diag = sess.step(tree)
+                outs.append(jax.tree_util.tree_map(np.asarray, out))
+                falls.append(int(diag.scalars["fallback_count"]))
+            return outs, falls
+
+        base_outs, base_falls = run(None)
+        for shards in (2, 4):
+            outs, falls = run(make_host_mesh(shards))
+            assert falls == base_falls
+            assert all(f == 0 for f in falls[1:])
+            for a, b in zip(base_outs, outs):
+                assert_trees_close(a, b)
+
+
+@needs4
+class TestShardedFusedTail:
+    """rpca_fused_tail under client sharding: the Pallas ADMM / factored
+    sweep tails run shard-locally on column slices, psum-reduced — same
+    numbers as the unsharded fused run, and mesh_overlap is a pure
+    schedule change (bitwise no-op on values)."""
+
+    @pytest.mark.parametrize("shards", [2, 4])
+    @pytest.mark.parametrize("svt_mode", ["gram", "subspace"])
+    @pytest.mark.parametrize("nc", [8, 7])
+    def test_fused_matches_unsharded(self, shards, svt_mode, nc, rng):
+        m = planted_bucket(rng, b=3, d=32, nc=nc)
+        ref = rpca_lib.robust_pca_bucket(m, n_iter=20, svt_mode=svt_mode,
+                                         fused_tail=True)
+        got = rpca_lib.robust_pca_bucket_sharded(
+            m, mesh=make_host_mesh(shards), n_iter=20, svt_mode=svt_mode,
+            fused_tail=True,
+        )
+        np.testing.assert_allclose(np.asarray(ref.low_rank),
+                                   np.asarray(got.low_rank),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(ref.sparse),
+                                   np.asarray(got.sparse),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_one_shard_fused_delegates_bitwise(self, rng):
+        m = planted_bucket(rng)
+        ref = rpca_lib.robust_pca_bucket(m, n_iter=15, svt_mode="subspace",
+                                         fused_tail=True)
+        got = rpca_lib.robust_pca_bucket_sharded(
+            m, mesh=make_debug_mesh(), n_iter=15, svt_mode="subspace",
+            fused_tail=True,
+        )
+        assert np.array_equal(np.asarray(ref.low_rank), np.asarray(got.low_rank))
+        assert np.array_equal(np.asarray(ref.sparse), np.asarray(got.sparse))
+
+    @pytest.mark.parametrize("svt_mode", ["gram", "subspace"])
+    def test_overlap_is_bitwise_noop(self, svt_mode, rng):
+        """mesh_overlap only re-chunks the schedule; every chunk psums the
+        same module-independent partials, so values are bitwise equal."""
+        m = planted_bucket(rng, b=3, d=32, nc=8)
+        mesh = make_host_mesh(4)
+        off = rpca_lib.robust_pca_bucket_sharded(
+            m, mesh=mesh, n_iter=20, svt_mode=svt_mode, fused_tail=True,
+        )
+        on = rpca_lib.robust_pca_bucket_sharded(
+            m, mesh=mesh, n_iter=20, svt_mode=svt_mode, fused_tail=True,
+            mesh_overlap=True,
+        )
+        assert np.array_equal(np.asarray(off.low_rank), np.asarray(on.low_rank))
+        assert np.array_equal(np.asarray(off.sparse), np.asarray(on.sparse))
+
+    def test_fused_warm_carry_fallback_free(self, rng):
+        """Warm-carry rounds through the fused sharded tail (with overlap
+        on, ragged cohort — nc=9, see test_ragged_warm_carry for why not
+        7): zero eigh fallbacks after round 0 and outputs matching the
+        unfused sharded session."""
+        trees = round_trees(rng, nc=9, rounds=4)
+        mesh = make_host_mesh(4)
+
+        def run(**kw):
+            sess = AggSession(session_cfg(**kw), mesh=mesh)
+            outs, falls = [], []
+            for tree in trees:
+                out, diag = sess.step(tree)
+                outs.append(jax.tree_util.tree_map(np.asarray, out))
+                falls.append(int(diag.scalars["fallback_count"]))
+            return outs, falls
+
+        base_outs, _ = run()
+        outs, falls = run(rpca_fused_tail=True, mesh_overlap=True)
+        assert all(f == 0 for f in falls[1:])
+        for a, b in zip(base_outs, outs):
+            assert_trees_close(a, b, atol=5e-4, rtol=5e-4)
