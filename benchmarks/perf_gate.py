@@ -69,6 +69,15 @@ MESH_ENVELOPE = (0.1, 8.0)
 #: this much at the same corruption level (noise slack — the quarantine
 #: should win outright on corrupted runs).
 FAULTS_ACC_SLACK = 0.05
+#: uplink cells (DESIGN.md §12): the sketch wire must cut warm-round
+#: uplink bytes by at least this factor vs the dense wire...
+UPLINK_REDUCTION_MIN = 4.0
+#: ...while costing at most this much final accuracy vs the dense run at
+#: identical settings, and actually engaging on a majority of rounds
+#: (hit_rate floor keeps a permanently-gated codec from passing on the
+#: trivial "never sketched, accuracy matches" axis).
+UPLINK_ACC_SLACK = 0.01
+UPLINK_HIT_RATE_MIN = 0.5
 
 FAILURES: list[str] = []
 
@@ -287,20 +296,62 @@ def gate_faults(records: list[dict]) -> None:
         )
 
 
+def gate_uplink(records: list[dict]) -> None:
+    """mode="uplink" cells (DESIGN.md §12): the sketch cell must engage on
+    most rounds, cut warm-round uplink bytes >= 4x vs the dense cell, and
+    land within 0.01 final accuracy of the dense run at the same
+    settings.  The warm-round reduction (not the cold-round-diluted mean)
+    is the gated number: cold/gated rounds falling back to the dense wire
+    is the codec's designed safety behaviour, not a perf regression."""
+    cells = [r for r in records if r.get("mode") == "uplink"]
+    if not cells:
+        print("# no uplink cells; skipping uplink gate")
+        return
+    dense = [r for r in cells if r["uplink"] == "dense"]
+    sketch = [r for r in cells if r["uplink"] != "dense"]
+    check(bool(dense) and bool(sketch), "uplink_cells_paired",
+          f"{len(dense)} dense / {len(sketch)} sketch cells (need >=1 each)")
+    if not dense or not sketch:
+        return
+    base = dense[0]
+    for r in sketch:
+        tag = r["uplink"].replace(":", "_").replace(".", "p")
+        red = r.get("reduction_vs_dense")
+        check(
+            red is not None and red >= UPLINK_REDUCTION_MIN,
+            f"uplink_reduction_{tag}",
+            f"warm-round byte reduction {red}x vs dense "
+            f"(min {UPLINK_REDUCTION_MIN}x; None = never engaged)",
+        )
+        check(
+            r["uplink_hit_rate"] >= UPLINK_HIT_RATE_MIN,
+            f"uplink_hit_rate_{tag}",
+            f"sketch engaged on {r['uplink_hit_rate']:.0%} of rounds "
+            f"(min {UPLINK_HIT_RATE_MIN:.0%})",
+        )
+        gap = abs(r["final_acc"] - base["final_acc"])
+        check(
+            gap <= UPLINK_ACC_SLACK,
+            f"uplink_acc_match_{tag}",
+            f"final acc {r['final_acc']:.3f} vs dense {base['final_acc']:.3f} "
+            f"(gap {gap:.4f}, max {UPLINK_ACC_SLACK})",
+        )
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default="BENCH_agg.json")
     ap.add_argument(
         "--require", nargs="*", default=(),
         choices=["single_call", "multi_round", "pipeline", "serve", "mesh",
-                 "faults"],
+                 "faults", "uplink"],
         help="fail (instead of skip) when these record groups are absent",
     )
     args = ap.parse_args()
     with open(args.path) as f:
         payload = json.load(f)
     version = payload.get("schema_version")
-    check(version == 7, "schema_version", f"got {version}, want 7")
+    check(version == 8, "schema_version", f"got {version}, want 8")
     records = payload.get("records", [])
     present = {
         "single_call": any("mode" not in r for r in records),
@@ -309,6 +360,7 @@ def main() -> int:
         "serve": any(r.get("mode") == "serve" for r in records),
         "mesh": any(r.get("mode") == "mesh" for r in records),
         "faults": any(r.get("mode") == "faults" for r in records),
+        "uplink": any(r.get("mode") == "uplink" for r in records),
     }
     for group in args.require:
         check(present[group], f"require_{group}",
@@ -319,6 +371,7 @@ def main() -> int:
     gate_serve(records)
     gate_mesh(records)
     gate_faults(records)
+    gate_uplink(records)
     if FAILURES:
         print(f"# perf gate: {len(FAILURES)} check(s) FAILED: "
               f"{', '.join(FAILURES)}", flush=True)

@@ -532,7 +532,13 @@ def rpca_diag_summary(diag) -> dict:
             )
             out["guard_flagged"] = jnp.sum(flags)
             out["client_energy_max"] = diag.max("client_energy")
-        for k in ("fallback_count", "carry_hit_rate"):
+        # Uplink wire accounting rides the same scalar channel (present
+        # only under sketch-uplink plans, DESIGN.md §12) so per-round
+        # bytes land in the training logs next to the carry health.
+        for k in (
+            "fallback_count", "carry_hit_rate", "bytes_up",
+            "bytes_down_basis", "uplink_hit_rate", "uplink_dense_falls",
+        ):
             if k in diag.scalars:
                 out[k] = diag.scalars[k]
         return out

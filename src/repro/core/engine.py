@@ -80,6 +80,12 @@ class PackSpec:
     n_clients: int  # original (pre-padding) cohort size
     bucket_dims: Mapping[BucketKey, tuple]  # key -> (total_modules, padded_vec)
     cohort_size: int = 0  # canonical (padded) client-axis length; 0 -> n_clients
+    # Per-client declared LoRA/svt ranks for heterogeneous-rank cohorts
+    # (None = uniform).  Static descriptor only: the rank *masks* are
+    # applied to the deltas before packing (fed.partition.client_rank_masks
+    # — the PR 9 ragged zero idiom, bitwise unobservable in the bucket),
+    # so the packed layout itself is rank-agnostic.
+    client_ranks: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -423,6 +429,8 @@ def _fedrpca_bucket(
     carry=None,
     svt_rank: int | None = None,
     mesh=None,
+    uplink=None,
+    true_cols: int | None = None,
 ) -> tuple[jnp.ndarray, dict, Any]:
     """One-dispatch FedRPCA over a bucket: ((B, vec) update, diag, carry').
 
@@ -441,6 +449,17 @@ def _fedrpca_bucket(
     routes the ADMM loop through ``robust_pca_bucket_sharded``; the
     column-mean tail stays a plain einsum (GSPMD partitions it along the
     constraint ``pack`` placed on the bucket).
+
+    ``uplink`` (an active ``fed.sketch.UplinkConfig``, carry required)
+    replaces the dense client columns with their sketch round-trip —
+    basis coefficients + top-k residual against the carry-derived uplink
+    basis — gated per bucket on residual energy: a cold/invalid carry or
+    a basis-drift round selects the raw dense columns via ``jnp.where``,
+    which is bitwise the uncompressed path (DESIGN.md §12).  The diag dict
+    then grows ``uplink_bytes_up`` / ``uplink_bytes_down`` / ``uplink_hit``
+    scalars.  ``true_cols`` caps the carried subspace width by the true
+    cohort count when the bucket's client axis is padded
+    (``rpca.subspace_rank``).
     """
     m = bucket.data.astype(jnp.float32)
     col_scaled = cfg.weighting == "data_size_rpca" and bucket.weights is not None
@@ -450,6 +469,34 @@ def _fedrpca_bucket(
     else:
         n_eff = jnp.maximum(jnp.sum(bucket.client_mask), 1.0)
         w_uniform = bucket.client_mask / n_eff
+    uplink_diag = {}
+    if uplink is not None and getattr(uplink, "active", False) and carry is not None:
+        # Compressed uplink (DESIGN.md §12): sketch the client columns
+        # against the carry-derived basis, decode straight back into the
+        # bucket layout, and gate on the energy the sketch would drop.
+        # The where-select keeps the program shape-static, and a tripped
+        # gate is bitwise the dense path (where(False, a, m) IS m).
+        from repro.fed import sketch as sketch_lib
+
+        basis = sketch_lib.uplink_basis(carry.l, carry.v)
+        sk = sketch_lib.encode_delta(m, basis, uplink.k)
+        m_hat = sketch_lib.decode_into_bucket(sk, basis)
+        use_sketch = jnp.logical_and(
+            carry.valid, jnp.max(sk.energy_frac) <= uplink.energy_tol
+        )
+        m = jnp.where(use_sketch, m_hat, m)
+        b_mod, d1, r = basis.shape
+        kk = min(int(uplink.k), d1)
+        dense_b = sketch_lib.dense_bytes_per_client(bucket.dims)
+        sketch_b = sketch_lib.sketch_bytes_per_client(b_mod, r, kk)
+        hit = use_sketch.astype(jnp.float32)
+        uplink_diag = {
+            "uplink_bytes_up": jnp.where(hit > 0, sketch_b, dense_b) * n_eff,
+            "uplink_bytes_down": jnp.asarray(
+                sketch_lib.basis_bytes(b_mod, d1, r), jnp.float32
+            ),
+            "uplink_hit": hit,
+        }
     if col_scaled:
         m = m * (bucket.weights * n_eff)[None, None, :]
     rpca_fn = rpca_lib.robust_pca_bucket
@@ -472,6 +519,7 @@ def _fedrpca_bucket(
         carry=carry,
         return_carry=carry is not None,
         carry_gate=cfg.carry_gate,
+        true_cols=true_cols,
         **rpca_kwargs,
     )
     new_carry = None
@@ -509,7 +557,10 @@ def _fedrpca_bucket(
     else:
         beta = jnp.full(energy.shape, cfg.beta, jnp.float32)
     update = low_mean + beta[:, None] * sparse_mean
-    diag = {"beta": beta, "energy": energy, "residual": res.residual, **diag_extra}
+    diag = {
+        "beta": beta, "energy": energy, "residual": res.residual,
+        **diag_extra, **uplink_diag,
+    }
     return update, diag, new_carry
 
 
@@ -613,7 +664,9 @@ def aggregate_packed(
         )
         diag_arrays = {k: {} for k in names}
         for bkey, bucket in buckets.items():
-            updates[bkey], d, _ = _fedrpca_bucket(bucket, cfg, shrink_fn, mesh=mesh)
+            updates[bkey], d, _ = _fedrpca_bucket(
+                bucket, cfg, shrink_fn, mesh=mesh, true_cols=spec.n_clients
+            )
             for k in names:
                 diag_arrays[k][bkey] = d[k]
     else:
@@ -698,6 +751,11 @@ class AggPlan:
     # ``plan_aggregation`` normalizes, so ``mesh is None`` IS the
     # single-device path and sharded steps never retrace against it.
     mesh: Any = None
+    # Uplink codec (``fed.sketch.UplinkConfig``; DESIGN.md §12).  None or
+    # dense mode never enters the codec — the traced step is bit-for-bit
+    # the uncompressed path.  Sketch mode requires a carrying plan (the
+    # codec projects onto the carried basis); stateless plans stay dense.
+    uplink: Any = None
 
 
 def _plan_carry(cfg) -> bool:
@@ -722,6 +780,8 @@ def plan_aggregation(
     *,
     cohort_size: int | None = None,
     mesh=None,
+    uplink=None,
+    client_ranks=None,
 ) -> AggPlan:
     """Build the trace-time plan for aggregating trees shaped like ``stacked``.
 
@@ -738,6 +798,16 @@ def plan_aggregation(
     inside ``robust_pca_bucket_sharded``, and ``rpca_fused_tail`` runs the
     Pallas tail kernels shard-locally on each shard's column slice
     (DESIGN.md §10).
+
+    ``uplink`` is the compressed-uplink codec config (a
+    ``fed.sketch.UplinkConfig``, or a spec string for
+    ``fed.sketch.parse_uplink``; DESIGN.md §12).  Dense/None plans never
+    enter the codec — the traced step is bit-for-bit the uncompressed
+    path.  Sketch mode requires a carrying plan (the codec projects onto
+    the carried basis); a non-carrying plan ignores it with a warning.
+    ``client_ranks`` records the per-client declared ranks of a
+    heterogeneous cohort on the ``PackSpec`` (descriptor only — the rank
+    masks are applied to the deltas upstream).
     """
     cfg = cfg or AggregatorConfig()
     if mesh is not None and rpca_lib.mesh_client_shards(mesh) == 1:
@@ -747,18 +817,39 @@ def plan_aggregation(
     _, spec = pack(
         stacked, granularity=granularity, joint_ab=joint, cohort_size=cohort_size
     )
+    if client_ranks is not None:
+        spec = dataclasses.replace(
+            spec, client_ranks=tuple(int(r) for r in client_ranks)
+        )
     tiers = {
         key: TierSpec(low_idx=(), full_idx=tuple(range(dims[0])), low_cap=0)
         for key, dims in spec.bucket_dims.items()
     }
+    carry = _plan_carry(cfg)
+    if uplink is not None:
+        from repro.fed import sketch as sketch_lib
+
+        uplink = sketch_lib.parse_uplink(uplink)
+        if uplink.active and not carry:
+            import warnings
+
+            warnings.warn(
+                "uplink sketch mode needs a carrying fedrpca plan (the codec "
+                "projects onto the carried basis); running dense",
+                stacklevel=2,
+            )
+            uplink = None
+        elif not uplink.active:
+            uplink = None  # dense IS the no-codec path; keep plans stable
     return AggPlan(
         cfg=cfg,
         spec=spec,
         granularity=granularity,
         joint_ab=joint,
-        carry=_plan_carry(cfg),
+        carry=carry,
         tiers=tiers,
         mesh=mesh,
+        uplink=uplink,
     )
 
 
@@ -772,7 +863,7 @@ def init_agg_carry(plan: AggPlan) -> AggCarry:
         for name, idx, cap in tier.tiers():
             rank = plan.cfg.svt_rank if cap is None else cap
             out[(bkey, name)] = rpca_lib.init_bucket_carry(
-                len(idx), padded_vec, d2, rank
+                len(idx), padded_vec, d2, rank, true_cols=plan.spec.n_clients
             )
     return out
 
@@ -808,7 +899,9 @@ def aggregate_planned(
     slot of the carry, and returns ``(update, new_carry)`` — plus an
     ``EngineDiagnostics`` when ``with_diagnostics`` (fedrpca adds
     per-module ``live_rank`` and the ``fallback_count`` /
-    ``carry_hit_rate`` scalars when a carry threads).
+    ``carry_hit_rate`` scalars when a carry threads; sketch-uplink plans
+    add the ``bytes_up`` / ``bytes_down_basis`` / ``uplink_hit_rate`` /
+    ``uplink_dense_falls`` wire-accounting scalars, DESIGN.md §12).
 
     ``carry=None`` (or ``{}``) with a carrying plan cold-starts every
     bucket; ``carry_mode="none"`` plans pass the empty carry through
@@ -859,6 +952,23 @@ def aggregate_planned(
     }
     new_carry: AggCarry = {}
     falls, hits = [], []
+    # Uplink byte accounting (sketch plans only): per-tier wire bytes and
+    # gate hits, summed into round scalars (DESIGN.md §12).
+    up_bytes, down_bytes, up_hits = [], [], []
+
+    def run_tier(sub_bucket, ck, cap):
+        upd_t, d_t, c2 = _fedrpca_bucket(
+            sub_bucket, cfg, shrink_fn,
+            carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
+            mesh=plan.mesh, uplink=plan.uplink,
+            true_cols=plan.spec.n_clients,
+        )
+        if "uplink_bytes_up" in d_t:
+            up_bytes.append(d_t["uplink_bytes_up"])
+            down_bytes.append(d_t["uplink_bytes_down"])
+            up_hits.append(d_t["uplink_hit"])
+        return upd_t, d_t, c2
+
     for bkey, bucket in buckets.items():
         tier = plan.tiers[bkey]
         b_total, padded_vec = plan.spec.bucket_dims[bkey]
@@ -867,11 +977,7 @@ def aggregate_planned(
             # Single whole-bucket tier: skip the gather/scatter round-trip.
             name, _, cap = tiers[0]
             ck = (bkey, name)
-            upd, d, c2 = _fedrpca_bucket(
-                bucket, cfg, shrink_fn,
-                carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
-                mesh=plan.mesh,
-            )
+            upd, d, c2 = run_tier(bucket, ck, cap)
             updates[bkey] = upd
             per_mod = dict(d)
             if plan.carry:
@@ -889,11 +995,7 @@ def aggregate_planned(
             for name, idx, cap in tiers:
                 ck = (bkey, name)
                 sub = _sub_bucket(bucket, idx)
-                u_t, d_t, c2 = _fedrpca_bucket(
-                    sub, cfg, shrink_fn,
-                    carry=carry.get(ck) if plan.carry else None, svt_rank=cap,
-                    mesh=plan.mesh,
-                )
+                u_t, d_t, c2 = run_tier(sub, ck, cap)
                 ia = jnp.asarray(idx, jnp.int32)
                 upd = upd.at[ia].set(u_t.astype(jnp.float32))
                 for k in ("beta", "energy", "residual"):
@@ -923,6 +1025,11 @@ def aggregate_planned(
             "fallback_count": sum(falls, jnp.zeros((), jnp.int32)),
             "carry_hit_rate": jnp.mean(jnp.stack(hits)),
         }
+    if up_bytes:
+        scalars["bytes_up"] = sum(up_bytes, jnp.zeros((), jnp.float32))
+        scalars["bytes_down_basis"] = sum(down_bytes, jnp.zeros((), jnp.float32))
+        scalars["uplink_hit_rate"] = jnp.mean(jnp.stack(up_hits))
+        scalars["uplink_dense_falls"] = jnp.sum(1.0 - jnp.stack(up_hits))
     diag = EngineDiagnostics(spec=spec, arrays=arrays, scalars=scalars)
     return out, new_carry, diag
 
@@ -946,7 +1053,7 @@ def plan_retier(plan: AggPlan, carry: AggCarry, *, margin: int | None = None) ->
     for bkey, tier in plan.tiers.items():
         b_total = plan.spec.bucket_dims[bkey][0]
         d2 = bkey[1]
-        r_full = rpca_lib.subspace_rank(d2, cfg.svt_rank)
+        r_full = rpca_lib.subspace_rank(d2, cfg.svt_rank, plan.spec.n_clients)
         single = TierSpec(low_idx=(), full_idx=tuple(range(b_total)), low_cap=0)
         n_live = [0] * b_total
         ok = True
@@ -1054,10 +1161,12 @@ class AggSession:
         *,
         shrink_fn: Callable = rpca_lib.soft_threshold,
         mesh=None,
+        uplink=None,
     ):
         self.cfg = cfg or AggregatorConfig()
         self.shrink_fn = shrink_fn
         self.mesh = mesh
+        self.uplink = uplink
         self.plan: AggPlan | None = None
         self.carry: AggCarry = {}
         self.round_idx = 0
@@ -1092,7 +1201,9 @@ class AggSession:
     def step(self, stacked, *, key=None, mask=None, weights=None):
         """Aggregate one round's stacked deltas; returns (update, diag)."""
         if self.plan is None:
-            self.plan = plan_aggregation(stacked, self.cfg, mesh=self.mesh)
+            self.plan = plan_aggregation(
+                stacked, self.cfg, mesh=self.mesh, uplink=self.uplink
+            )
             self.carry = init_agg_carry(self.plan)
             self._compile()
         elif (

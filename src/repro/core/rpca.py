@@ -179,20 +179,30 @@ class SVTSubspaceResult(NamedTuple):
     fell_back: jnp.ndarray  # True when the exact eigh path ran
 
 
-def subspace_rank(d2: int, rank: int) -> int:
+def subspace_rank(d2: int, rank: int, true_cols: int | None = None) -> int:
     """Static carried subspace width: the user cap, but never more than half
     the Gram dimension — tracking the majority of the spectrum costs as much
     as the full eigh (r x r Ritz eigh ~ d2 x d2 eigh), at which point gram
     mode is strictly cheaper.  Small cohorts therefore auto-narrow: d2=8
-    carries r<=4 regardless of the cap."""
-    return max(1, min(rank, d2 // 2)) if d2 > 1 else 1
+    carries r<=4 regardless of the cap.
+
+    ``true_cols`` is the true (unpadded) cohort column count when the bucket
+    carries masked padding columns — e.g. 7 live clients packed into 8 slots,
+    or 9 into a 16-slot canonical cohort.  The cap then respects the live
+    count, and rounds UP on odd cohorts (ceil(c/2)): with the floor cap an
+    odd cohort like nc=7 would carry r=3 while the shrunk spectrum keeps 4+
+    live directions, so every warm round would trip the rank-saturation
+    guard into the exact-eigh fallback.  Even counts are unchanged
+    ((c+1)//2 == c//2), keeping existing cohorts bitwise identical."""
+    c = d2 if true_cols is None else max(1, min(int(true_cols), d2))
+    return max(1, min(rank, (c + 1) // 2)) if c > 1 else 1
 
 
-def subspace_init(m: jnp.ndarray, rank: int) -> SubspaceState:
+def subspace_init(m: jnp.ndarray, rank: int, true_cols: int | None = None) -> SubspaceState:
     """Cold-start carry for a (B, d1, d2) bucket: identity-column basis (the
     first SVT always takes the exact path) and the Gram of X_0 = M."""
     b, _, d2 = m.shape
-    r = subspace_rank(d2, rank)
+    r = subspace_rank(d2, rank, true_cols)
     v = jnp.broadcast_to(jnp.eye(d2, r, dtype=jnp.float32), (b, d2, r))
     g = jnp.einsum("bdc,bde->bce", m, m)
     return SubspaceState(
@@ -431,10 +441,16 @@ class BucketCarry(NamedTuple):
 
 
 def init_bucket_carry(
-    n_modules: int, padded_vec: int, d2: int, svt_rank: int
+    n_modules: int, padded_vec: int, d2: int, svt_rank: int,
+    true_cols: int | None = None,
 ) -> BucketCarry:
-    """Empty (invalid) carry with the static shapes of one bucket."""
-    r = subspace_rank(d2, svt_rank)
+    """Empty (invalid) carry with the static shapes of one bucket.
+
+    ``true_cols`` is the true cohort column count when ``d2`` includes
+    masked padding slots (see ``subspace_rank``); it must match the value
+    the consuming ``robust_pca_bucket`` call uses, or the carried basis
+    width disagrees with the session's."""
+    r = subspace_rank(d2, svt_rank, true_cols)
     z = lambda *s: jnp.zeros(s, jnp.float32)
     return BucketCarry(
         l=z(n_modules, padded_vec, d2),
@@ -667,6 +683,7 @@ def robust_pca_bucket(
     carry: BucketCarry | None = None,
     return_carry: bool = False,
     carry_gate: float = 1.0,
+    true_cols: int | None = None,
 ) -> RPCAResult:
     """RPCA over a whole shape bucket in ONE dispatch (no per-leaf Python).
 
@@ -715,6 +732,11 @@ def robust_pca_bucket(
     result is then identical to a carry-less call.  ``return_carry=True``
     additionally returns the exit-state ``BucketCarry`` (f32 iterates,
     basis, live ranks, fallback/hit diagnostics) for the next round.
+
+    ``true_cols`` caps the static subspace width by the true (unpadded)
+    cohort column count instead of ``d2`` when the bucket carries masked
+    padding columns (see ``subspace_rank``) — e.g. 9 live clients packed
+    into a 16-slot canonical cohort carry r <= 5, not r <= 8.
     """
     if m.ndim != 3:
         raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
@@ -854,7 +876,7 @@ def robust_pca_bucket(
 
     err0 = jnp.full((b,), jnp.inf, jnp.float32)
     falls0 = jnp.zeros((), jnp.int32)
-    r = subspace_rank(d2, svt_rank)
+    r = subspace_rank(d2, svt_rank, true_cols)
 
     if use_subspace:
         # Gram of the *initial* iterate X0 = M - S0 + rho Y0 (cold start:
@@ -1063,6 +1085,7 @@ def robust_pca_bucket_sharded(
     return_carry: bool = False,
     carry_gate: float = 1.0,
     mesh_overlap: bool = False,
+    true_cols: int | None = None,
 ) -> RPCAResult:
     """``robust_pca_bucket`` with the client axis sharded across ``mesh``.
 
@@ -1108,6 +1131,7 @@ def robust_pca_bucket_sharded(
             client_mask=client_mask, svt_mode=svt_mode, svt_rank=svt_rank,
             svt_sweeps=svt_sweeps, svt_fallback_tol=svt_fallback_tol,
             carry=carry, return_carry=return_carry, carry_gate=carry_gate,
+            true_cols=true_cols,
         )
     if m.ndim != 3:
         raise ValueError(f"robust_pca_bucket expects (B, d1, d2), got {m.shape}")
@@ -1119,7 +1143,7 @@ def robust_pca_bucket_sharded(
             "kernel; custom shrink_fn requires fused_tail=False"
         )
     b, d1p, d2 = m.shape
-    r = subspace_rank(d2, svt_rank)
+    r = subspace_rank(d2, svt_rank, true_cols)
     use_subspace = svt_mode == "subspace"
     has_carry = carry is not None
     if has_carry:

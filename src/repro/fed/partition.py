@@ -1,7 +1,11 @@
-"""Dirichlet non-IID data partitioning (Hsu et al. 2019 — the paper's setup)."""
+"""Dirichlet non-IID data partitioning (Hsu et al. 2019 — the paper's setup),
+plus heterogeneous per-client LoRA rank declarations (DESIGN.md §12): clients
+may train at different ranks, and the server zero-pads their deltas into the
+uniform bucket column layout via static rank masks — the PR 9 ragged
+zero-mask idiom, so padded rank slices are bitwise unobservable downstream."""
 from __future__ import annotations
 
-from typing import List
+from typing import Any, List
 
 import numpy as np
 
@@ -70,3 +74,104 @@ def label_distribution(labels: np.ndarray, parts: List[np.ndarray], n_classes: i
             binc = np.bincount(labels[ix], minlength=n_classes)
             out[i] = binc / binc.sum()
     return out
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-client LoRA ranks (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def parse_client_ranks(spec, n_clients: int, max_rank: int) -> np.ndarray:
+    """Parse a ``--client-ranks`` declaration into (n_clients,) int ranks.
+
+    ``spec`` is a comma-separated int list (cycled when shorter than the
+    cohort — ``"8,4"`` over 6 clients is ``8,4,8,4,8,4``) or an int
+    sequence of the same semantics.  Every rank must satisfy
+    ``1 <= rank <= max_rank`` (the template's trained LoRA rank): a
+    client cannot declare more rank than the bucket layout holds.
+    """
+    if isinstance(spec, str):
+        try:
+            ranks = [int(p) for p in spec.split(",") if p.strip()]
+        except ValueError as e:
+            raise ValueError(f"malformed client-ranks spec: {spec!r}") from e
+    else:
+        ranks = [int(r) for r in spec]
+    if not ranks:
+        raise ValueError("empty client-ranks spec")
+    out = np.asarray([ranks[i % len(ranks)] for i in range(n_clients)], np.int32)
+    if out.min() < 1 or out.max() > max_rank:
+        raise ValueError(
+            f"client ranks must lie in [1, {max_rank}] (the template's LoRA "
+            f"rank); got {sorted(set(out.tolist()))}"
+        )
+    return out
+
+
+def infer_lora_rank(template: Any) -> int:
+    """The template's LoRA rank: the contracted dim of its first (A, B) pair.
+
+    Walks the pytree for a ``{"A": ..., "B": ...}`` adapter node and reads
+    A's trailing axis (== B's leading non-layer axis).  Heterogeneous rank
+    masks key on this axis size, so it must be discoverable from the
+    structure alone.
+    """
+    import jax
+
+    found: list = []
+
+    def walk(node):
+        if isinstance(node, dict) and set(node) >= {"A", "B"} and not found:
+            a = node["A"]
+            found.append(int(jax.numpy.shape(a)[-1]))
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(template)
+    if not found:
+        raise ValueError(
+            "could not infer the LoRA rank: no {'A', 'B'} adapter node in "
+            "the template (pass explicit rank masks instead)"
+        )
+    return found[0]
+
+
+def client_rank_masks(template: Any, ranks, lora_rank: int | None = None) -> Any:
+    """Stacked 0/1 masks zeroing each client's delta beyond its declared rank.
+
+    ``template`` is one client's LoRA pytree (shapes/dtypes only);
+    ``ranks`` is the (n_clients,) declaration from ``parse_client_ranks``.
+    Returns a pytree of ``(n_clients, *leaf.shape)`` float32 masks where
+    every axis of size ``lora_rank`` (A's trailing axis, B's row axis —
+    scan-stacked layer axes included when they happen to match, which real
+    LoRA shapes don't) keeps only the first ``ranks[i]`` slices for client
+    ``i``.  Multiplying stacked deltas by these masks is exactly the
+    equal-uniform-rank oracle whose low-rank clients produced zero-padded
+    deltas — the aggregation sees identical bytes, so heterogeneous
+    cohorts aggregate fp32-identical to that oracle by construction.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    ranks_a = jnp.asarray(np.asarray(ranks, np.int32))
+    n = int(ranks_a.shape[0])
+    r_dim = infer_lora_rank(template) if lora_rank is None else int(lora_rank)
+
+    def leaf_mask(leaf):
+        shape = tuple(jnp.shape(leaf))
+        m = jnp.ones((n,) + shape, jnp.float32)
+        for ax, s in enumerate(shape):
+            if s == r_dim:
+                iota = jnp.arange(s).reshape(
+                    (1,) + (1,) * ax + (s,) + (1,) * (len(shape) - ax - 1)
+                )
+                keep = iota < ranks_a.reshape((n,) + (1,) * len(shape))
+                m = m * keep.astype(jnp.float32)
+        return m
+
+    return jax.tree_util.tree_map(leaf_mask, template)

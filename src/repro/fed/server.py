@@ -166,6 +166,18 @@ class FedRunConfig:
     # reference engine is the single-device parity oracle and runs
     # replicated with a warning.
     mesh_shards: int = 0
+    # Compressed uplink codec (DESIGN.md §12): "dense" (the legacy wire,
+    # bit-for-bit), "sketch[:k[:energy_tol]]", or a fed.sketch.UplinkConfig.
+    # Sketch mode needs a carrying fedrpca plan (packed engine) — the codec
+    # projects client deltas onto the carried basis; otherwise it degrades
+    # to dense with a warning.
+    uplink: Any = "dense"
+    # Heterogeneous per-client LoRA ranks (DESIGN.md §12): None = uniform,
+    # else a fed.partition.parse_client_ranks spec (comma string or int
+    # sequence, cycled over the cohort).  Client i's delta is zero-masked
+    # beyond rank_i before aggregation — bitwise the equal-uniform-rank
+    # oracle whose low-rank clients padded with zeros.
+    client_ranks: Any = None
 
 
 def init_round_state(lora_init: PyTree, n_clients: int, seed: int) -> RoundState:
@@ -374,6 +386,42 @@ def make_round_phases(
             from repro.launch.mesh import make_host_mesh
 
             mesh = make_host_mesh(cfg.mesh_shards)
+    # Heterogeneous per-client ranks (DESIGN.md §12): static 0/1 masks
+    # zeroing each client's delta beyond its declared rank, applied in the
+    # local phase before the bundle ships — so the aggregation sees exactly
+    # the bytes an equal-uniform-rank oracle with zero-padded low-rank
+    # clients would see.
+    rank_masks = None
+    ranks_all = None
+    if cfg.client_ranks is not None:
+        if lora_template is None:
+            raise ValueError(
+                "client_ranks needs the LoRA structure to build the rank "
+                "masks: pass lora_template= (e.g. the lora_init given to "
+                "init_round_state)"
+            )
+        from repro.fed import partition as partition_lib
+
+        r_dim = partition_lib.infer_lora_rank(lora_template)
+        ranks_all = partition_lib.parse_client_ranks(
+            cfg.client_ranks, n_clients, r_dim
+        )
+        rank_masks = partition_lib.client_rank_masks(
+            lora_template, ranks_all, r_dim
+        )
+    uplink_cfg = None
+    if cfg.uplink is not None:
+        from repro.fed import sketch as sketch_lib
+
+        uplink_cfg = sketch_lib.parse_uplink(cfg.uplink)
+        if uplink_cfg.active and not carry_on:
+            warnings.warn(
+                "uplink sketch mode needs a carrying packed-engine fedrpca "
+                "round (the codec projects onto the carried basis); running "
+                "dense",
+                stacklevel=2,
+            )
+            uplink_cfg = None
     plan = None
     if carry_on:
         if lora_template is None:
@@ -387,7 +435,10 @@ def make_round_phases(
             lambda x: jnp.zeros((slots,) + jnp.shape(x), jnp.asarray(x).dtype),
             lora_template,
         )
-        plan = engine_lib.plan_aggregation(example, agg_cfg, mesh=mesh)
+        plan = engine_lib.plan_aggregation(
+            example, agg_cfg, mesh=mesh, uplink=uplink_cfg,
+            client_ranks=None if ranks_all is None else ranks_all.tolist(),
+        )
 
     @jax.jit
     def local_phase(state: RoundState, n_active=None):
@@ -426,6 +477,13 @@ def make_round_phases(
                 local_fn, in_axes=(None, None, 0, 0, 0, None, 0, 0)
             )(*local_args)
         stacked_deltas = results.delta  # leaves: (cohort_pad, ...)
+        if rank_masks is not None:
+            # Zero each client's delta beyond its declared rank (bitwise
+            # the uniform-rank oracle over zero-padded low-rank deltas).
+            stacked_deltas = jax.tree_util.tree_map(
+                lambda d, mk: d * mk[cohort].astype(d.dtype),
+                stacked_deltas, rank_masks,
+            )
         weights = w_all[cohort] if use_weights else None
 
         if mask is None:
@@ -522,6 +580,24 @@ def make_round_phases(
                 diags["fault_caught"] = jnp.sum(flags * injected)
         return diags
 
+    def _wire_diags(diags, deltas, mask2):
+        # Per-round wire accounting (DESIGN.md §12), logged beside the
+        # phase timers: sketch-uplink engines already emitted exact
+        # ``bytes_up`` / ``bytes_down_basis`` scalars; every other path
+        # defaults to the dense f32 wire (per-client payload x live
+        # cohort).  ``bytes_down`` is the update broadcast (counted once —
+        # multicast) plus, on sketch rounds, the basis multicast.
+        per_client = 4.0 * sum(
+            int(np.prod(l.shape[1:])) for l in jax.tree_util.tree_leaves(deltas)
+        )
+        n_eff_r = (
+            float(n_clients) if mask2 is None else jnp.maximum(jnp.sum(mask2), 0.0)
+        )
+        if "bytes_up" not in diags:
+            diags["bytes_up"] = per_client * n_eff_r
+        diags["bytes_down"] = per_client + diags.pop("bytes_down_basis", 0.0)
+        return diags
+
     @jax.jit
     def agg_phase(agg_carry, bundle: LocalBundle, scale):
         deltas, mask2, sflags, sdiags = _screen_bundle(bundle)
@@ -552,6 +628,7 @@ def make_round_phases(
             **rpca_diags,
             **_update_diags(scaled, sflags, eflags, bundle, sdiags),
         }
+        diags = _wire_diags(diags, deltas, mask2)
         return scaled, new_carry, diags
 
     @jax.jit
@@ -579,6 +656,7 @@ def make_round_phases(
             **_update_diags(scaled, sflags, None, bundle, sdiags),
             "degraded": jnp.asarray(1.0, jnp.float32),
         }
+        diags = _wire_diags(diags, deltas, mask2)
         return scaled, cold_carry(), diags
 
     def guard_n_active(n_active):

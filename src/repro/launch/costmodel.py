@@ -552,7 +552,9 @@ def mesh_agg_costs(
         raise ValueError(f"shards must be positive, got {shards}")
     b, d1 = float(n_modules), float(padded_vec)
     c_loc = float(-(-cohort // shards))  # ceil: ragged cohorts pad, not refuse
-    r = float(max(1, min(svt_rank, cohort // 2)) if cohort > 1 else 1)
+    # Ceil cap, matching rpca.subspace_rank: an odd cohort of c columns
+    # carries rank (c+1)//2, not c//2 (the nc=7 warm-carry fallback fix).
+    r = float(max(1, min(svt_rank, (cohort + 1) // 2)) if cohort > 1 else 1)
     sweeps_eff = 1.0 if warm else float(max(svt_sweeps, 1))
     applies = sweeps_eff + 1.0  # power sweeps + the final Ritz G @ V
 
@@ -655,3 +657,65 @@ def mesh_crossover_shards(
             return n
         n *= 2
     return None
+
+
+def uplink_costs(
+    *,
+    n_modules: int,
+    padded_vec: int,
+    cohort: int,
+    svt_rank: int = 8,
+    k: int = 64,
+    dense_rounds_frac: float = 0.0,
+    dtype_bytes: int = 4,
+    idx_bytes: int = 4,
+) -> Dict[str, float]:
+    """Analytic per-round wire bytes of the sketch uplink (DESIGN.md §12).
+
+    A dense client ships its full f32 delta: ``B * d1`` values per module
+    set (``padded_vec`` already includes the bucket's zero padding — the
+    wire model charges for it, matching the engine's ``bytes_up`` counter,
+    which bills the *true* dims; pass the true per-module vec for exact
+    agreement).  A sketched client ships, per module, ``r`` basis
+    coefficients plus a top-``k`` sparse residual (value + index per
+    entry), where ``r`` is the carried basis width — the ``subspace_rank``
+    ceil cap over the cohort.
+
+    ``dense_rounds_frac`` blends in the codec's dense fallback rounds
+    (cold start / basis-drift gate trips): a fraction f of rounds pay the
+    dense wire, so the effective reduction is the harmonic blend, not the
+    pure sketch ratio.  The ``breakeven_k`` returned is the largest k at
+    which sketch still beats dense (coefficients included), clamped >= 0.
+
+    Downlink: the server multicasts one basis (``B * d1 * r``) per sketch
+    round on top of the model broadcast; both are counted once (multicast),
+    so the uplink is where the n_clients scaling lives.
+    """
+    if cohort < 1:
+        raise ValueError(f"cohort must be >= 1, got {cohort}")
+    b, d1 = float(n_modules), float(padded_vec)
+    r = float(max(1, min(svt_rank, (cohort + 1) // 2)) if cohort > 1 else 1)
+    kk = float(min(max(int(k), 1), int(padded_vec)))
+
+    dense_per_client = b * d1 * dtype_bytes
+    sketch_per_client = b * (r * dtype_bytes + kk * (dtype_bytes + idx_bytes))
+    f = min(max(dense_rounds_frac, 0.0), 1.0)
+    eff_per_client = f * dense_per_client + (1.0 - f) * sketch_per_client
+
+    basis_down = b * d1 * r * dtype_bytes * (1.0 - f)
+    # Largest k where the sketch wire (coef + k * (val+idx)) still beats
+    # dense: k < (d1 * dtype - r * dtype) / (dtype + idx).
+    breakeven_k = max(
+        0.0, (d1 * dtype_bytes - r * dtype_bytes) / (dtype_bytes + idx_bytes)
+    )
+    return {
+        "dense_bytes_per_client": dense_per_client,
+        "sketch_bytes_per_client": sketch_per_client,
+        "effective_bytes_per_client": eff_per_client,
+        "uplink_bytes_round": eff_per_client * cohort,
+        "dense_bytes_round": dense_per_client * cohort,
+        "basis_downlink_bytes": basis_down,
+        "reduction_vs_dense": dense_per_client / max(eff_per_client, 1.0),
+        "breakeven_k": breakeven_k,
+        "sketch_wins": sketch_per_client < dense_per_client,
+    }

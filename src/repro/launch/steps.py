@@ -197,6 +197,7 @@ def make_agg_step(
     engine: str = "packed",
     client_weights=None,
     mesh=None,
+    uplink=None,
 ) -> Callable:
     """Server half of the federated step, independently dispatchable.
 
@@ -225,6 +226,12 @@ def make_agg_step(
     with masked zero columns inside the sharded loop, and
     ``agg_cfg.rpca_fused_tail`` / ``agg_cfg.mesh_overlap`` select the
     shard-local fused Pallas tail and the chunked-psum overlap schedule.
+
+    ``uplink`` selects the client->server wire codec (DESIGN.md §12) —
+    None/"dense" is the exact legacy wire; "sketch[:k[:tol]]" (or an
+    ``UplinkConfig``) turns on the carry-basis sketch codec inside the
+    session plan, with its byte counters riding the metrics.  Sketch
+    requires the cross-round carry (it projects onto the carried basis).
     """
     agg_cfg = agg_cfg or AggregatorConfig()
     if agg_cfg.carry_mode not in CARRY_MODES:
@@ -261,7 +268,9 @@ def make_agg_step(
             # Plan at trace time from the deltas' own structure (static),
             # thread the cross-round carry, and surface the session health
             # in the metrics so training logs show carry regressions.
-            plan = engine_lib.plan_aggregation(deltas, agg_cfg, mesh=mesh)
+            plan = engine_lib.plan_aggregation(
+                deltas, agg_cfg, mesh=mesh, uplink=uplink
+            )
             update, new_carry, ediag = engine_lib.aggregate_planned(
                 plan, deltas, agg_carry, key=agg_key, mask=mask,
                 weights=weights, with_diagnostics=True,

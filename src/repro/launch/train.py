@@ -70,6 +70,8 @@ from repro.core import engine as engine_lib
 from repro.data import client_lm_datasets
 from repro.fed import faults as faults_lib
 from repro.fed import guard as guard_lib
+from repro.fed import partition as partition_lib
+from repro.fed import sketch as sketch_lib
 from repro.fed.pipeline import run_rounds
 from repro.launch import steps as steps_lib
 from repro.models import init_lora_params, init_params, loss_fn
@@ -161,6 +163,19 @@ def main(argv=None):
                          "per-bucket subspace/ADMM warm-start state so warm "
                          "rounds skip the RPCA cold start (packed engine, "
                          "fedrpca; subspace carry needs --svt-mode subspace)")
+    ap.add_argument("--uplink", default="dense",
+                    help="client->server wire codec (DESIGN.md §12): 'dense' "
+                         "(full f32 deltas, the legacy wire bit-for-bit) or "
+                         "'sketch[:k[:energy_tol]]' — project each delta onto "
+                         "the server's carried RPCA basis and ship basis "
+                         "coefficients + a top-k sparse residual, gated back "
+                         "to dense on cold/basis-drift rounds; needs "
+                         "--carry-mode != none (packed fedrpca)")
+    ap.add_argument("--client-ranks", default=None,
+                    help="heterogeneous per-client LoRA ranks: comma list "
+                         "cycled over the cohort (e.g. '8,4,2'); each "
+                         "client's delta is zero-masked beyond its declared "
+                         "rank before aggregation (DESIGN.md §12)")
     ap.add_argument("--pipeline", action="store_true",
                     help="async double-buffered round pipeline: dispatch each "
                          "round's local phase while the previous round's "
@@ -210,6 +225,16 @@ def main(argv=None):
         )
     if args.staleness < 0:
         ap.error(f"--staleness must be >= 0, got {args.staleness}")
+    uplink_cfg = sketch_lib.parse_uplink(args.uplink)
+    if uplink_cfg.active and not carry_on:
+        # The sketch basis IS the carried RPCA subspace; without a carry
+        # there is never a basis to project onto, so every round would
+        # gate to dense anyway — run dense and say so.
+        log.warning(
+            "--uplink %s needs --carry-mode != none (packed fedrpca) for a "
+            "basis to project onto; running dense", args.uplink,
+        )
+        uplink_cfg = None
     if args.mesh_shards < 0:
         ap.error(f"--mesh-shards must be >= 0, got {args.mesh_shards}")
     mesh = None
@@ -250,6 +275,21 @@ def main(argv=None):
     base = init_params(key, cfg)
     lora = init_lora_params(jax.random.fold_in(key, 1), cfg)
 
+    # Heterogeneous per-client ranks: each client's delta is zero-masked
+    # beyond its declared rank before it reaches the wire/aggregation —
+    # bitwise the equal-uniform-rank oracle over zero-padded deltas
+    # (DESIGN.md §12).
+    ranks_all = None
+    rank_masks = None
+    if args.client_ranks:
+        lora_rank = partition_lib.infer_lora_rank(lora)
+        ranks_all = partition_lib.parse_client_ranks(
+            args.client_ranks, args.clients, lora_rank
+        )
+        rank_masks = partition_lib.client_rank_masks(lora, ranks_all, lora_rank)
+        log.info("heterogeneous client ranks: %s (template rank %d)",
+                 ranks_all.tolist(), lora_rank)
+
     agg = AggregatorConfig(
         method=args.aggregator, rpca_iters=args.rpca_iters, weighting=args.weighting,
         svt_mode=args.svt_mode, svt_rank=args.svt_rank, svt_sweeps=args.svt_sweeps,
@@ -266,7 +306,10 @@ def main(argv=None):
         example = jax.tree_util.tree_map(
             lambda x: jnp.zeros((args.clients,) + x.shape, x.dtype), lora
         )
-        agg_plan = engine_lib.plan_aggregation(example, agg, mesh=mesh)
+        agg_plan = engine_lib.plan_aggregation(
+            example, agg, mesh=mesh, uplink=uplink_cfg,
+            client_ranks=None if ranks_all is None else ranks_all.tolist(),
+        )
         carry = engine_lib.init_agg_carry(agg_plan)
 
     start_round = 0
@@ -310,7 +353,7 @@ def main(argv=None):
         steps_lib.make_agg_step(
             agg, engine=args.engine,
             client_weights=client_sizes / client_sizes.sum(),
-            mesh=mesh,
+            mesh=mesh, uplink=uplink_cfg,
         )
     )
 
@@ -331,6 +374,12 @@ def main(argv=None):
         )
         round_key = jax.random.fold_in(key, 1000 + r)
         deltas, loss, mask = local_step(base, state.lora_global, batch, round_key)
+        if rank_masks is not None:
+            # Zero each client's delta beyond its declared rank — what a
+            # rank-r_i client would actually have trained and shipped.
+            deltas = jax.tree_util.tree_map(
+                lambda d, mk: d * mk.astype(d.dtype), deltas, rank_masks
+            )
         fault_slots = None
         if fault_model is not None:
             if mask is None:
@@ -371,6 +420,23 @@ def main(argv=None):
                 diags["fault_caught"] = jnp.sum(sflags * bundle.fault_slots)
         return diags
 
+    # Wire accounting (DESIGN.md §12), logged beside the phase timers: a
+    # dense f32 delta costs 4 bytes/param per participating client; the
+    # sketch codec emits its exact ``bytes_up`` / ``bytes_down_basis``
+    # through the engine diags.  ``bytes_down`` is the update broadcast
+    # (counted once — multicast) plus, on sketch rounds, the basis cast.
+    per_client_bytes = 4.0 * sum(
+        int(np.prod(np.shape(leaf))) for leaf in jax.tree_util.tree_leaves(lora)
+    )
+
+    def _wire_metrics(metrics, mask2):
+        m = dict(metrics)
+        n_eff = float(args.clients) if mask2 is None else float(jnp.sum(mask2))
+        if "bytes_up" not in m:
+            m["bytes_up"] = per_client_bytes * n_eff
+        m["bytes_down"] = per_client_bytes + float(m.pop("bytes_down_basis", 0.0))
+        return m
+
     def cli_agg(agg_carry, bundle: _CliBundle, scale):
         deltas, mask2, sflags, sdiags = _screen(bundle)
         if carry_on:
@@ -380,6 +446,7 @@ def main(argv=None):
         else:
             upd, metrics = agg_step(deltas, mask2, bundle.round_key, scale=scale)
             new_carry = agg_carry
+        metrics = _wire_metrics(metrics, mask2)
         return upd, new_carry, {**metrics, **_fault_diags(upd, sflags, bundle, sdiags)}
 
     def cli_cold_carry():
@@ -399,7 +466,8 @@ def main(argv=None):
     def cli_fallback(bundle: _CliBundle, scale):
         deltas, mask2, sflags, sdiags = _screen(bundle)
         upd, _ = fallback_step(deltas, mask2, bundle.round_key, scale=scale)
-        diags = {**_fault_diags(upd, sflags, bundle, sdiags), "degraded": 1.0}
+        diags = {**_wire_metrics({}, mask2),
+                 **_fault_diags(upd, sflags, bundle, sdiags), "degraded": 1.0}
         return upd, cli_cold_carry(), diags
 
     phases = types.SimpleNamespace(

@@ -378,7 +378,7 @@ class TestShapeStaticRounds:
         _, diags = round_fn(state)
         assert set(diags) == {
             "mean_local_loss", "beta_mean", "energy_mean", "rpca_residual_max",
-            "update_finite",
+            "update_finite", "bytes_up", "bytes_down",
         }
         assert all(np.isfinite(float(v)) for v in diags.values())
 

@@ -372,10 +372,10 @@ class TestRaggedCohorts:
         zero-fallback warm trajectory at 1 / 2 / 4 shards (the carried
         eigenbasis round-trips through the padded layout).  nc=9 stays
         ragged at both shard counts while leaving the rank cap
-        (r = 9 // 2 = 4) headroom above the planted rank-2 core — at nc=7
-        the cap r=3 is tight enough that even the UNSHARDED session falls
-        back on warm rounds, which would test the workload, not the
-        sharding."""
+        (r = ceil(9/2) = 5) headroom above the planted rank-2 core; the
+        ceil cap keeps nc=7 (r=4) fallback-free too now —
+        tests/test_uplink.py::test_odd_cohort_warm_fallback_free pins
+        that directly."""
         trees = round_trees(rng, nc=9, rounds=4)
 
         def run(mesh):
@@ -450,9 +450,8 @@ class TestShardedFusedTail:
 
     def test_fused_warm_carry_fallback_free(self, rng):
         """Warm-carry rounds through the fused sharded tail (with overlap
-        on, ragged cohort — nc=9, see test_ragged_warm_carry for why not
-        7): zero eigh fallbacks after round 0 and outputs matching the
-        unfused sharded session."""
+        on, ragged cohort — nc=9): zero eigh fallbacks after round 0 and
+        outputs matching the unfused sharded session."""
         trees = round_trees(rng, nc=9, rounds=4)
         mesh = make_host_mesh(4)
 

@@ -192,11 +192,12 @@ class TestBucketSubspaceMode:
         padded = jnp.concatenate([ms, garbage], axis=-1)
         mask = jnp.asarray([1, 1, 1, 1, 1, 0, 0, 0], jnp.float32)
         got = rpca_lib.robust_pca_bucket(padded, client_mask=mask, n_iter=30,
-                                         svt_mode="subspace")
+                                         svt_mode="subspace", true_cols=5)
         want = rpca_lib.robust_pca_bucket(ms, n_iter=30, svt_mode="subspace")
-        # padded (d2=8) and dense (d2=5) carry different static widths
-        # (r=4 vs r=2), so the two subspace approximations may differ by
-        # up to the fallback tolerance — not bit-tight like gram mode.
+        # true_cols caps the padded call's carried width by the live column
+        # count, so both sides run r = (5+1)//2 = 3; the subspace
+        # approximations may still differ by up to the fallback tolerance
+        # (different static d2) — not bit-tight like gram mode.
         np.testing.assert_allclose(got.low_rank[..., :5], want.low_rank, atol=1e-3)
         np.testing.assert_allclose(got.sparse[..., :5], want.sparse, atol=1e-3)
         # inactive columns exactly zero (no eigh/projector leakage)
@@ -404,7 +405,15 @@ class TestEngineParityBothModes:
         got = aggregate(tree, cfg, engine="packed", mask=mask)
         take = jax.tree_util.tree_map(lambda x: x[:5], tree)
         want = aggregate(take, cfg, engine="packed", mask=jnp.ones(5))
-        assert_trees_close(want, got)
+        if svt_mode == "subspace":
+            # The mask is dynamic, so the 8-slot call carries width
+            # r = ceil(8/2) = 4 while the true 5-cohort carries
+            # r = ceil(5/2) = 3: two different subspace approximations of
+            # the same split, close but not bit-tight (plan_aggregation's
+            # static cohort_size hint is how the fed path pins them equal).
+            assert_trees_close(want, got, rtol=1e-4, atol=2e-3)
+        else:
+            assert_trees_close(want, got)
 
     def test_unknown_svt_mode_rejected(self, rng):
         tree = planted_tree(rng, 4)
